@@ -1,0 +1,50 @@
+"""Paper Fig. 4a: latency vs offered load curves per deployment unit.
+
+Generates the load-test curves the paper uses to find breaking points: for
+each DU, sweep offered RPS on one replica and record (throughput, latency).
+Derived metrics: the knee location (latency > 900 ms) and the latency ratio
+between 20% and 95% utilization — the curve's "shape" the paper plots.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.sd21 import paper_deployment_units
+from repro.core.router import queue_latency
+
+
+def curve(du, points: int = 40):
+    rates = np.linspace(0.05, 1.1, points) * du.t_max
+    out = []
+    for r in rates:
+        rho = min(r / du.t_max, 1.0)
+        served = min(r, du.t_max)
+        lat = queue_latency(du.latency_s, rho, servers=1)
+        out.append((r, served, lat))
+    return np.asarray(out)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for du in paper_deployment_units():
+        t0 = time.perf_counter()
+        c = curve(du)
+        us = (time.perf_counter() - t0) * 1e6
+        # knee: first offered rate with latency > 900 ms
+        over = c[c[:, 2] > 0.9]
+        knee = float(over[0, 0]) if len(over) else float("inf")
+        lat_20 = float(np.interp(0.2 * du.t_max, c[:, 0], c[:, 2]))
+        lat_95 = float(np.interp(0.95 * du.t_max, c[:, 0], c[:, 2]))
+        rows.append(
+            (
+                f"fig4/{du.name}",
+                us,
+                f"knee_rps={knee:.1f};t_max={du.t_max};lat@20%={lat_20:.2f}s;"
+                f"lat@95%={lat_95:.2f}s;shape_ratio={lat_95/max(lat_20,1e-9):.2f}",
+            )
+        )
+    return rows

@@ -1,0 +1,108 @@
+"""Kernel micro-benchmarks: µs/call of the pure-jnp oracle paths on CPU.
+
+The Pallas kernels target TPU; on this CPU container they run in
+interpret mode (Python-level — not meaningful to time).  What we CAN time
+honestly is the jitted reference path each kernel replaces, plus the
+orchestrator's jitted policy step; both establish the CSV contract
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_us
+from repro.configs.sd21 import paper_deployment_units
+from repro.core import policy
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.key(0)
+
+    # policy step (the control-loop hot path)
+    dus = paper_deployment_units()
+    cpi = jnp.array([d.cost_per_inference for d in dus])
+    cph = jnp.array([d.cost_per_hour for d in dus])
+    tmax = jnp.array([d.t_max for d in dus])
+    req = jnp.array([3, 2, 2, 1, 1])
+    pool = jnp.array([8, 8, 8, 8, 8])
+    f = jax.jit(policy.policy_step)
+    us = time_us(lambda: jax.block_until_ready(f(cpi, cph, tmax, req, pool, jnp.float32(400.0))))
+    rows.append(("kernels/policy_step", us, "jitted Eq.5/6 + switch"))
+
+    # flash attention ref (the op the Pallas kernel replaces)
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B, S, H, D = 1, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, S, H, D), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = time_us(lambda: jax.block_until_ready(f(q, k, v)), iters=5)
+    flops = 4 * B * H * S * S * D
+    rows.append(("kernels/flash_attention_ref_1k", us,
+                 f"gflops_per_s={flops/us/1e3:.1f}"))
+
+    # decode attention ref
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    kc = jax.random.normal(key, (4, 4096, 4, 64), jnp.float32)
+    vc = jax.random.normal(jax.random.key(3), (4, 4096, 4, 64), jnp.float32)
+    qd = jax.random.normal(jax.random.key(4), (4, 16, 64), jnp.float32)
+    lens = jnp.array([4096, 2048, 1024, 100], jnp.int32)
+    f = jax.jit(lambda q, k, v, l: decode_attention_ref(q, k, v, l))
+    us = time_us(lambda: jax.block_until_ready(f(qd, kc, vc, lens)), iters=10)
+    rows.append(("kernels/decode_attention_ref_4k", us,
+                 f"cache_gb_per_s={2*kc.nbytes/us/1e3:.1f}"))
+
+    # rwkv6 chunked vs naive scan (chunking is the kernel's algorithm)
+    from repro.models.rwkv6 import wkv_chunked
+    from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+    B, S, H, N = 1, 1024, 4, 64
+    r = jax.random.normal(key, (B, S, H, N))
+    kk = jax.random.normal(jax.random.key(5), (B, S, H, N))
+    vv = jax.random.normal(jax.random.key(6), (B, S, H, N))
+    lw = -jnp.exp(jax.random.normal(jax.random.key(7), (B, S, H, N)) * 0.5)
+    u = jax.random.normal(jax.random.key(8), (H, N)) * 0.1
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    f_chunk = jax.jit(lambda *a: wkv_chunked(*a, chunk=64))
+    f_naive = jax.jit(wkv6_ref)
+    us_c = time_us(lambda: jax.block_until_ready(f_chunk(r, kk, vv, lw, u, s0)), iters=5)
+    us_n = time_us(lambda: jax.block_until_ready(f_naive(r, kk, vv, lw, u, s0)), iters=5)
+    rows.append(("kernels/wkv6_chunked_1k", us_c,
+                 f"speedup_vs_tokenscan={us_n/us_c:.1f}x"))
+
+    # ssd chunked vs naive
+    from repro.models.mamba2 import ssd_chunked
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    P_, Nn = 64, 64
+    x = jax.random.normal(key, (B, S, H, P_))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(9), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(10), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.key(11), (B, S, Nn))
+    Cm = jax.random.normal(jax.random.key(12), (B, S, Nn))
+    st0 = jnp.zeros((B, H, P_, Nn), jnp.float32)
+    f_chunk = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    f_naive = jax.jit(ssd_ref)
+    us_c = time_us(lambda: jax.block_until_ready(f_chunk(x, dt, A, Bm, Cm, st0)), iters=5)
+    us_n = time_us(lambda: jax.block_until_ready(f_naive(x, dt, A, Bm, Cm, st0)), iters=5)
+    rows.append(("kernels/ssd_chunked_1k", us_c,
+                 f"speedup_vs_tokenscan={us_n/us_c:.1f}x"))
+
+    # fused rmsnorm ref
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+    x = jax.random.normal(key, (4096, 1024))
+    w = jnp.ones((1024,))
+    res = jax.random.normal(jax.random.key(13), (4096, 1024))
+    f = jax.jit(lambda x, w, r: rmsnorm_ref(x, w, r))
+    us = time_us(lambda: jax.block_until_ready(f(x, w, res)))
+    rows.append(("kernels/rmsnorm_ref_4kx1k", us,
+                 f"gb_per_s={3*x.nbytes/us/1e3:.1f}"))
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure + beyond-paper +
+kernel micro-benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig7,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.table1_breaking_points"),
+    ("table2", "benchmarks.table2_adjusted_throughput"),
+    ("fig4", "benchmarks.fig4_load_curves"),
+    ("fig5", "benchmarks.fig5_cost_optimized"),
+    ("fig6", "benchmarks.fig6_capacity_optimized"),
+    ("fig7", "benchmarks.fig7_failover"),
+    ("beyond", "benchmarks.beyond_paper"),
+    ("kernels", "benchmarks.kernels"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed.append(key)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

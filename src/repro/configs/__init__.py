@@ -1,0 +1,75 @@
+"""Architecture config registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    HardwareTier,
+    InputShape,
+    ModelConfig,
+    TIERS,
+    TPU_V5E,
+    shape_grid,
+)
+
+_ARCH_MODULES = {
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def grid_cells() -> Tuple[Tuple[ModelConfig, InputShape], ...]:
+    """Every runnable (arch × shape) cell after DESIGN.md §4 skips."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shape_grid(cfg):
+            cells.append((cfg, shape))
+    return tuple(cells)
+
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "SHAPES_BY_NAME",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "TRAIN_4K",
+    "HardwareTier",
+    "InputShape",
+    "ModelConfig",
+    "TIERS",
+    "TPU_V5E",
+    "all_configs",
+    "get_config",
+    "grid_cells",
+    "shape_grid",
+]

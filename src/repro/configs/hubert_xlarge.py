@@ -1,0 +1,26 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504.
+
+Encoder-only transformer backbone (wav2vec2-style); the convolutional audio
+frontend is a STUB: ``input_specs()`` provides precomputed frame embeddings
+(B, S, d_model).  vocab=504 is the masked-prediction codebook size.
+[arXiv:2106.07447; unverified]
+
+Encoder-only => no decode shapes (decode_32k / long_500k skipped).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    mlp_type="gelu",
+    causal=False,
+    input_mode="embeds",
+    supports_decode=False,
+    subquadratic=False,
+)

@@ -1,0 +1,25 @@
+"""llava-next-mistral-7b [vlm] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+
+Mistral-7B decoder backbone.  The anyres-tiling vision frontend is a STUB:
+``input_specs()`` provides precomputed patch embeddings that are concatenated
+ahead of the token embeddings. [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+Full attention => long_500k skipped.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32_000,
+    rope_theta=1_000_000.0,
+    input_mode="tokens",   # text tokens + prepended patch embeds (stub frontend)
+    subquadratic=False,
+)
+
+# anyres stub geometry: number of image patch embeddings prepended per sample.
+N_PATCH_EMBEDS = 576

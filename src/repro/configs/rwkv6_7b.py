@@ -1,0 +1,18 @@
+"""rwkv6-7b [ssm] — 32L d_model=4096 (attention-free) d_ff=14336 vocab=65536.
+
+RWKV-6 "Finch": linear attention with data-dependent per-channel decay.
+[arXiv:2404.05892; hf]
+Attention-free, O(1) decode state => long_500k RUNS.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="rwkv",
+    n_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=65_536,
+    rwkv_head_dim=64,
+    subquadratic=True,
+)

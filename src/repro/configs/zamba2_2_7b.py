@@ -1,0 +1,22 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 32H (GQA kv=32) d_ff=10240, ssm_state=64.
+
+Mamba2 backbone with a SHARED full-attention block applied every 6 layers
+(weights shared across applications). [arXiv:2411.15242; hf]
+Hybrid SSM => long_500k RUNS (SSM state O(1); shared-attn KV kept).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    attention_every=6,
+    subquadratic=True,
+)

@@ -1,0 +1,24 @@
+"""The paper's contribution: adaptive cost/capacity orchestration (§3).
+
+Public surface:
+  policy        — Eq.(5)/(6)/(7)/(8) + switching, pure jittable JAX
+  deployment    — DUProfile / DeploymentUnit (the (model,hw,framework) triplet)
+  capacity      — CapacityPool dynamics (Karpenter stand-in)
+  autoscaler    — KEDA-style replica controller
+  controller    — binary-step mode switcher (+ hysteresis/EWMA extensions)
+  router        — weighted routing, spillover, queue latency, hedging
+  simulator     — discrete-event cluster simulator (Figs. 5-7 testbed)
+  allocation    — LP/greedy exact solvers for Eq.(1)-(3) (beyond paper)
+"""
+from repro.core import (  # noqa: F401
+    allocation,
+    autoscaler,
+    capacity,
+    controller,
+    deployment,
+    metrics,
+    policy,
+    router,
+    simulator,
+)
+from repro.core.deployment import DeploymentUnit, DUProfile  # noqa: F401

@@ -1,0 +1,78 @@
+"""Capacity-pool dynamics: the DU_i^p(t) side of the control loop.
+
+Models what Karpenter NodePools gave the paper: a per-DU ceiling on
+obtainable replicas that moves over time (spot reclaims, capacity
+shortfalls, synthetic limits like Fig. 6's L4 cap), plus a provisioning
+delay between *requesting* a replica and it becoming *ready*
+(node launch + image pull + model load in the paper's stack).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class CapacityEvent:
+    """Pool-capacity change over [start, end): capacity clipped to `limit`."""
+
+    start: float
+    end: float
+    limit: int
+
+
+@dataclass
+class CapacityPool:
+    """Obtainable-replica ceiling for one DU type, with provisioning lag."""
+
+    base_capacity: int
+    provision_delay_s: float = 30.0
+    events: List[CapacityEvent] = field(default_factory=list)
+    # (ready_time, count) for replicas still warming up
+    _pending: List[Tuple[float, int]] = field(default_factory=list)
+    ready: int = 0
+
+    def capacity_at(self, t: float) -> int:
+        """DU_i^p(t): the ceiling at time t (min over active events)."""
+        cap = self.base_capacity
+        for ev in self.events:
+            if ev.start <= t < ev.end:
+                cap = min(cap, ev.limit)
+        return cap
+
+    def request(self, t: float, target: int) -> None:
+        """Scale toward `target` replicas (clipped to capacity at t).
+
+        Scale-ups enter the pending queue and become ready after
+        ``provision_delay_s``; scale-downs are immediate (graceful drain is
+        modeled by the router finishing in-flight work within the tick).
+        """
+        target = min(target, self.capacity_at(t))
+        inflight = sum(n for _, n in self._pending)
+        current = self.ready + inflight
+        if target > current:
+            self._pending.append((t + self.provision_delay_s, target - current))
+        elif target < self.ready:
+            self.ready = target
+            self._pending = []  # cancel warming replicas on scale-down
+
+    def tick(self, t: float) -> int:
+        """Advance time: mature pending replicas; enforce capacity ceiling."""
+        matured = [(rt, n) for rt, n in self._pending if rt <= t]
+        self._pending = [(rt, n) for rt, n in self._pending if rt > t]
+        for _, n in matured:
+            self.ready += n
+        cap = self.capacity_at(t)
+        if self.ready > cap:  # reclaim (spot interruption / forced shortfall)
+            self.ready = cap
+        return self.ready
+
+
+def synthetic_outage(start: float, end: float) -> CapacityEvent:
+    """Fig. 7's simulated insufficient capacity: pool pinned to zero."""
+    return CapacityEvent(start=start, end=end, limit=0)
+
+
+def synthetic_limit(start: float, end: float, limit: int) -> CapacityEvent:
+    """Fig. 6's synthetic L4 capacity limit."""
+    return CapacityEvent(start=start, end=end, limit=limit)

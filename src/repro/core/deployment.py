@@ -1,0 +1,103 @@
+"""Deployment units: the (model, hardware, framework) triplet of §3.1.
+
+``DUProfile`` carries the per-unit signals the control loop consumes:
+max single-replica throughput ``T_i^max``, latency ``L_i``, and hourly cost,
+from which the paper's *cost of inference per second* is derived:
+
+    DU_i^c = cost_per_hour / 3600 / T_i^max        (Table 1)
+
+Profiles come from two sources:
+  * the paper's measured SD21 table (``repro.configs.sd21``) — faithful repro;
+  * ``profile_from_roofline`` — beyond-paper: service rates derived from the
+    compiled dry-run artifact of an LM arch on a TPU tier (DESIGN.md §6.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.configs.base import HardwareTier, ModelConfig
+
+
+@dataclass(frozen=True)
+class DUProfile:
+    """Static profile of one deployment-unit type (one replica)."""
+
+    name: str
+    model: str
+    hardware: str
+    framework: str
+    cost_per_hour: float     # $/replica-hour
+    t_max: float             # breaking-point throughput, requests/s/replica
+    latency_s: float         # single-request latency at healthy utilization
+    chips_per_replica: int = 1
+
+    @property
+    def cost_per_inference(self) -> float:
+        """Table 1 'Cost of Inference/Second': cost/hour ÷ breaking-point RPS.
+
+        (The paper's column divides hourly cost by T_i^max directly; its first
+        two rows differ from this formula by <1.5% — measurement rounding —
+        which tests assert within tolerance.)
+        """
+        return self.cost_per_hour / self.t_max
+
+    @property
+    def dollars_per_request(self) -> float:
+        """True $/request at the breaking point (cost_per_inference / 3600)."""
+        return self.cost_per_hour / 3600.0 / self.t_max
+
+    def with_cost(self, cost_per_hour: float) -> "DUProfile":
+        return replace(self, cost_per_hour=cost_per_hour)
+
+
+@dataclass
+class DeploymentUnit:
+    """Mutable runtime state of a DU pool: requested/provisioned replicas.
+
+    Mirrors the paper's DU_i^r (requested) and DU_i^p (pool capacity).
+    """
+
+    profile: DUProfile
+    requested: int = 0        # DU_i^r(t)
+    pool_capacity: int = 0    # DU_i^p(t) — max replicas currently obtainable
+    ready: int = 0            # replicas actually serving (<= requested)
+
+    @property
+    def supply_rps(self) -> float:
+        return self.ready * self.profile.t_max
+
+    @property
+    def cost_rate(self) -> float:
+        """$/s currently accrued by ready replicas."""
+        return self.ready * self.profile.cost_per_hour / 3600.0
+
+
+def profile_from_roofline(
+    cfg: ModelConfig,
+    tier: HardwareTier,
+    *,
+    step_seconds: float,
+    batch: int,
+    chips: int,
+    framework: str = "jax-jit",
+    mfu_derate: float = 0.55,
+) -> DUProfile:
+    """Beyond-paper: derive a DU profile from dry-run roofline terms.
+
+    ``step_seconds`` is the roofline-dominant term for one serve step of
+    ``batch`` requests on ``chips`` chips (computed by launch/roofline.py);
+    ``mfu_derate`` haircuts the ideal roofline to a realistic service rate.
+    """
+    eff_step = step_seconds / max(mfu_derate, 1e-6)
+    t_max = batch / eff_step
+    return DUProfile(
+        name=f"{cfg.name}-{tier.name}-{framework}",
+        model=cfg.name,
+        hardware=tier.name,
+        framework=framework,
+        cost_per_hour=tier.cost_per_chip_hour * chips,
+        t_max=t_max,
+        latency_s=eff_step,
+        chips_per_replica=chips,
+    )

@@ -1,0 +1,107 @@
+"""Time-series metric accounting (the CloudWatch stand-in, §4.7).
+
+Per-tick records of the quantities the paper plots: per-DU throughput
+(HTTP 200 vs 500), latency, utilization, mode, and accrued cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclass
+class TickRecord:
+    t: float
+    demand_rps: float
+    mode: int
+    weights: np.ndarray
+    ready: np.ndarray            # replicas serving, per DU
+    served_rps: np.ndarray       # successful RPS per DU (HTTP 200)
+    dropped_rps: float           # failed RPS (HTTP 500 equivalent)
+    latency_s: np.ndarray        # mean end-to-end latency per DU
+    utilization: np.ndarray      # per-DU core utilization
+    cost_rate: float             # $/s accrued
+
+
+@dataclass
+class MetricsLog:
+    du_names: Sequence[str]
+    records: List[TickRecord] = field(default_factory=list)
+
+    def append(self, rec: TickRecord) -> None:
+        self.records.append(rec)
+
+    # -- aggregates -----------------------------------------------------------
+    def _stack(self, attr: str) -> np.ndarray:
+        return np.stack([getattr(r, attr) for r in self.records])
+
+    @property
+    def times(self) -> np.ndarray:
+        return np.array([r.t for r in self.records])
+
+    def total_cost(self) -> float:
+        if len(self.records) < 2:
+            return 0.0
+        ts = self.times
+        rates = np.array([r.cost_rate for r in self.records])
+        return float(np.sum(rates[:-1] * np.diff(ts)))
+
+    def total_served(self) -> float:
+        ts = self.times
+        served = self._stack("served_rps").sum(axis=1)
+        if len(ts) < 2:
+            return 0.0
+        return float(np.sum(served[:-1] * np.diff(ts)))
+
+    def total_dropped(self) -> float:
+        ts = self.times
+        dropped = np.array([r.dropped_rps for r in self.records])
+        if len(ts) < 2:
+            return 0.0
+        return float(np.sum(dropped[:-1] * np.diff(ts)))
+
+    def availability(self) -> float:
+        served, dropped = self.total_served(), self.total_dropped()
+        total = served + dropped
+        return served / total if total > 0 else 1.0
+
+    def cost_per_1k_inferences(self) -> float:
+        served = self.total_served()
+        return 1000.0 * self.total_cost() / served if served > 0 else float("inf")
+
+    def latency_percentile(self, q: float = 95.0) -> float:
+        """Served-weighted latency percentile (a pool serving 5% of traffic
+        contributes 5% of the latency mass, as a client would observe)."""
+        lat = self._stack("latency_s").ravel()
+        served = self._stack("served_rps").ravel()
+        mask = served > 0
+        if not np.any(mask):
+            return 0.0
+        lat, w = lat[mask], served[mask]
+        order = np.argsort(lat)
+        lat, w = lat[order], w[order]
+        cdf = np.cumsum(w) / np.sum(w)
+        idx = int(np.searchsorted(cdf, q / 100.0))
+        return float(lat[min(idx, len(lat) - 1)])
+
+    def mode_fraction(self, mode: int) -> float:
+        modes = np.array([r.mode for r in self.records])
+        return float(np.mean(modes == mode)) if len(modes) else 0.0
+
+    def switches(self) -> int:
+        modes = np.array([r.mode for r in self.records])
+        return int(np.sum(modes[1:] != modes[:-1])) if len(modes) > 1 else 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "total_cost_usd": self.total_cost(),
+            "total_served": self.total_served(),
+            "total_dropped": self.total_dropped(),
+            "availability": self.availability(),
+            "cost_per_1k": self.cost_per_1k_inferences(),
+            "p95_latency_s": self.latency_percentile(95.0),
+            "mode_switches": float(self.switches()),
+            "cost_mode_fraction": self.mode_fraction(0),
+        }

@@ -1,0 +1,155 @@
+"""The paper's §3 policy math, as pure jittable JAX.
+
+Implements, exactly as published:
+  * Eq. (5)  cost-optimized weights        w_i^cost ∝ 1/DU_i^c
+  * Eq. (6)  capacity-optimized weights    w_i^cap = 1/n over available units
+  * Eq. (7)  T^target = Σ T_i^max / n
+  * Eq. (8)  T_i^adjusted = min(T_i, T^target)  (capacity normalization)
+  * the binary switching rule between the two weight regimes
+  * Eq. (1)-(3) objective/constraint evaluation helpers
+
+plus the beyond-paper variants (latency-aware weights, hysteresis is in
+controller.py).  Everything here is shape-polymorphic jnp on 1-D arrays
+indexed by deployment unit, so the whole policy step jits and can run inside
+a jitted control loop (or be property-tested with hypothesis).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Mode codes for the binary step function.
+COST_OPTIMIZED = 0
+CAPACITY_OPTIMIZED = 1
+
+
+def cost_weights(cost_per_inference: jax.Array, available: jax.Array) -> jax.Array:
+    """Eq. (5): weights proportional to inverse cost over available units.
+
+    ``available`` is a boolean mask (DU_i^p(t) > 0).  Unavailable units get
+    weight 0; weights renormalize over the rest (the paper's "reduce the
+    weight of DU_i units lacking capacity and normalize").
+    """
+    inv = jnp.where(available, 1.0 / jnp.maximum(cost_per_inference, 1e-30), 0.0)
+    total = jnp.sum(inv)
+    return jnp.where(total > 0, inv / jnp.maximum(total, 1e-30), 0.0)
+
+
+def latency_aware_cost_weights(
+    cost_per_inference: jax.Array, latency_s: jax.Array, available: jax.Array
+) -> jax.Array:
+    """Beyond-paper: the 'cost-to-latency ratio' the paper *describes* in
+    prose for Eq. (5) but does not use in the formula — weight ∝ 1/(c_i·L_i).
+    """
+    score = jnp.where(
+        available,
+        1.0 / jnp.maximum(cost_per_inference * latency_s, 1e-30),
+        0.0,
+    )
+    total = jnp.sum(score)
+    return jnp.where(total > 0, score / jnp.maximum(total, 1e-30), 0.0)
+
+
+def capacity_weights(available: jax.Array) -> jax.Array:
+    """Eq. (6): uniform over units with available capacity."""
+    n = jnp.sum(available.astype(jnp.float32))
+    return jnp.where(available, 1.0 / jnp.maximum(n, 1.0), 0.0)
+
+
+def t_target(t_max: jax.Array, available: jax.Array) -> jax.Array:
+    """Eq. (7): average max throughput across available units."""
+    n = jnp.sum(available.astype(jnp.float32))
+    return jnp.sum(jnp.where(available, t_max, 0.0)) / jnp.maximum(n, 1.0)
+
+
+def t_adjusted(t_max: jax.Array, available: jax.Array) -> jax.Array:
+    """Eq. (8): per-unit throughput clipped to the uniform target.
+
+    Faster units (inf2/trn1 in Table 2) are capped at T^target; units slower
+    than the target keep their own T_i^max — reproduces Table 2's
+    (89.2, 89.2, 89.2, 61.0, 60.0).
+    """
+    tgt = t_target(t_max, available)
+    return jnp.where(available, jnp.minimum(t_max, tgt), 0.0)
+
+
+def supply(requested: jax.Array, t_max: jax.Array, weights: jax.Array) -> jax.Array:
+    """Eq. (6-supply): T^s(t) = Σ w_i · T_i · DU_i^r(t)."""
+    return jnp.sum(weights * t_max * requested)
+
+
+def throughput_constraint_ok(
+    requested: jax.Array, t_max: jax.Array, demand: jax.Array
+) -> jax.Array:
+    """Eq. (2): Σ DU_i^r · T_i ≥ T^d."""
+    return jnp.sum(requested * t_max) >= demand
+
+
+def capacity_constraint_ok(requested: jax.Array, pool: jax.Array) -> jax.Array:
+    """Eq. (3): DU_i^r ≤ DU_i^p for all i."""
+    return jnp.all(requested <= pool)
+
+
+def total_cost_rate(requested: jax.Array, cost_per_hour: jax.Array) -> jax.Array:
+    """Eq. (1) objective: Σ DU_i^r · DU_i^c  (as $/s of provisioned fleet)."""
+    return jnp.sum(requested * cost_per_hour) / 3600.0
+
+
+def switch_mode(
+    requested: jax.Array,
+    pool: jax.Array,
+    t_max: jax.Array,
+    demand: jax.Array,
+) -> jax.Array:
+    """The paper's binary step: COST_OPTIMIZED while Eq.(2)+(3) hold with the
+    cost-optimized allocation; CAPACITY_OPTIMIZED if ∃i: DU_i^r > DU_i^p.
+    """
+    ok = jnp.logical_and(
+        throughput_constraint_ok(requested, t_max, demand),
+        capacity_constraint_ok(requested, pool),
+    )
+    return jnp.where(ok, COST_OPTIMIZED, CAPACITY_OPTIMIZED)
+
+
+def select_weights(
+    mode: jax.Array,
+    cost_per_inference: jax.Array,
+    available: jax.Array,
+) -> jax.Array:
+    """w_i(t) per the switching rule (paper Eq. '5-switch')."""
+    w_cost = cost_weights(cost_per_inference, available)
+    w_cap = capacity_weights(available)
+    return jnp.where(mode == COST_OPTIMIZED, w_cost, w_cap)
+
+
+@partial(jax.jit, static_argnames=())
+def policy_step(
+    cost_per_inference: jax.Array,
+    cost_per_hour: jax.Array,
+    t_max: jax.Array,
+    requested: jax.Array,
+    pool: jax.Array,
+    demand: jax.Array,
+):
+    """One full control-loop policy evaluation (jitted).
+
+    Returns (mode, weights, supply_rps, cost_rate) — the quantities the
+    simulator/serving router consume each tick.
+    """
+    available = pool > 0
+    mode = switch_mode(requested, pool, t_max, demand)
+    w = select_weights(mode, cost_per_inference, available)
+    sup = supply(requested, t_max, w)
+    cost = total_cost_rate(jnp.minimum(requested, pool), cost_per_hour)
+    return mode, w, sup, cost
+
+
+def desired_replicas_for_demand(
+    weights: jax.Array, t_max: jax.Array, demand: jax.Array
+) -> jax.Array:
+    """Replicas per DU needed to serve `demand` split by `weights`
+    (the KEDA targetMetricValue computation: ceil(share / T_i^max))."""
+    share = weights * demand
+    return jnp.ceil(share / jnp.maximum(t_max, 1e-9)).astype(jnp.int32)

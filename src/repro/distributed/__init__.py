@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, compression, fault tolerance."""
+from repro.distributed import compression, fault_tolerance, sharding  # noqa: F401

@@ -1,0 +1,150 @@
+"""Fault tolerance for the training runtime.
+
+At 1000+ nodes the relevant failures are: node loss (reduce world size),
+slow nodes (stragglers), and transient step failures.  The pieces here are
+deliberately mechanism-level so they are testable on CPU:
+
+* ``HeartbeatMonitor`` — failure detection with a deadline;
+* ``ElasticMesh`` — rebuild a smaller/larger mesh from surviving devices
+  and reshard checkpointed state onto it (pairs with checkpoint.restore);
+* ``StepGuard`` — retry/skip semantics around a training step (transient
+  XLA / numerical failures), with a skipped-step budget;
+* ``StragglerPolicy`` — per-step deadline from an EWMA of step times; on
+  the serving side the router's hedging (core.router) is the mitigation.
+
+The serving-side failover — the paper's own resilience mechanism — lives in
+core.controller/core.simulator, not here.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+# ---------------------------------------------------------------------------
+# failure detection
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HeartbeatMonitor:
+    """Deadline-based liveness tracking for worker ids."""
+
+    deadline_s: float = 60.0
+    _last: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, worker: int, t: Optional[float] = None) -> None:
+        self._last[worker] = time.monotonic() if t is None else t
+
+    def dead(self, t: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if t is None else t
+        return sorted(w for w, lt in self._last.items() if now - lt > self.deadline_s)
+
+    def alive(self, t: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if t is None else t
+        return sorted(w for w, lt in self._last.items() if now - lt <= self.deadline_s)
+
+
+# ---------------------------------------------------------------------------
+# elastic re-meshing
+# ---------------------------------------------------------------------------
+
+
+def elastic_mesh(
+    n_devices: int,
+    *,
+    model_parallel: int,
+    pod: Optional[int] = None,
+    axis_names=("data", "model"),
+) -> Mesh:
+    """Largest mesh with fixed TP degree that fits ``n_devices``.
+
+    Node loss shrinks the 'data' axis (TP groups are co-located and fail
+    together in practice); 'data' is rounded down to a power of two so
+    global batch stays divisible.
+    """
+    devices = np.asarray(jax.devices()[:n_devices])
+    data = n_devices // model_parallel
+    data = 2 ** int(np.floor(np.log2(max(data, 1))))
+    use = data * model_parallel
+    shape = (data, model_parallel)
+    if pod is not None:
+        shape = (pod, data // pod, model_parallel)
+        axis_names = ("pod", "data", "model")
+    return Mesh(devices[:use].reshape(shape), axis_names)
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Move (possibly host/numpy) state onto a new mesh's shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        state,
+        shardings,
+    )
+
+
+# ---------------------------------------------------------------------------
+# step-level resilience
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepGuard:
+    """Retry/skip wrapper around one training step.
+
+    Non-finite loss or a raised exception consumes one retry (same batch),
+    then one skip (move on).  Exceeding ``max_skips`` raises — at that point
+    the job should restore from the last checkpoint.
+    """
+
+    max_retries: int = 1
+    max_skips: int = 10
+    skipped: int = 0
+
+    def run(self, step_fn: Callable, *args):
+        attempts = 0
+        while True:
+            try:
+                out = step_fn(*args)
+                loss = out[2]["loss"] if isinstance(out, tuple) and len(out) > 2 else None
+                if loss is not None and not np.isfinite(float(loss)):
+                    raise FloatingPointError(f"non-finite loss {float(loss)}")
+                return out
+            except Exception:
+                attempts += 1
+                if attempts <= self.max_retries:
+                    continue
+                self.skipped += 1
+                if self.skipped > self.max_skips:
+                    raise
+                return None  # caller skips this batch
+
+
+@dataclass
+class StragglerPolicy:
+    """EWMA step-time deadline; flags steps exceeding factor × EWMA."""
+
+    factor: float = 3.0
+    alpha: float = 0.1
+    ewma_s: Optional[float] = None
+    flagged: int = 0
+
+    def observe(self, step_time_s: float) -> bool:
+        if self.ewma_s is None:
+            self.ewma_s = step_time_s
+            return False
+        slow = step_time_s > self.factor * self.ewma_s
+        if slow:
+            self.flagged += 1
+        else:
+            self.ewma_s = self.alpha * step_time_s + (1 - self.alpha) * self.ewma_s
+        return slow
+
+    @property
+    def deadline_s(self) -> Optional[float]:
+        return None if self.ewma_s is None else self.factor * self.ewma_s

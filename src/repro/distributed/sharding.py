@@ -1,0 +1,207 @@
+"""Per-architecture sharding rules: FSDP('data') × TP('model') × DP('pod').
+
+Parameters: path-name-based PartitionSpec rules; stacked layer leaves get a
+leading ``None`` for the L dim automatically.  Divisibility is enforced by
+``_fit``: any dim that does not divide by its assigned axis falls back to
+replication on that axis (e.g. 8 KV heads on a 16-way model axis), so every
+(arch × mesh) combination lowers without manual per-arch exceptions —
+exceptions live in the *rules*, not in the call sites.
+
+Activations / inputs: batch over ('pod','data'); long-context caches shard
+sequence over the axes noted in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+# ---------------------------------------------------------------------------
+# axis helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def has_pod(mesh: Mesh) -> bool:
+    return "pod" in mesh.axis_names
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (regex on leaf name, spec per trailing-dims) — earlier rules win.
+# 'D' = fsdp axis ('data'), 'M' = tensor axis ('model'), '-' = replicated.
+_RULES = [
+    (r"^embed$", ("M", "D")),
+    (r"^(lm_head|head)$", ("D", "M")),
+    # attention
+    (r"^wq$", ("D", "M")),
+    (r"^(wk|wv)$", ("D", "M")),          # falls back to ("D","-") if kv_dim % M != 0
+    (r"^wo$", ("M", "D")),
+    # dense mlp / arctic residual mlp
+    (r"^(w_gate|w_up|res_gate|res_up)$", ("D", "M")),
+    (r"^(w_down|res_down)$", ("M", "D")),
+    # moe (4 trailing dims handled by rank; EP vs TP resolved in _moe_spec)
+    (r"^router$", ("-", "-")),
+    # rwkv
+    (r"^(wr|wg|cm_wr|cm_wk)$", ("D", "M")),
+    (r"^(cm_wv)$", ("M", "D")),
+    (r"^mix_w1$", ("D", "-")),
+    (r"^mix_w2$", ("-", "-", "D")),
+    (r"^decay_a$", ("D", "-")),
+    (r"^decay_b$", ("-", "D")),
+    (r"^(mu|mu_x|w0|u|cm_mu_k|cm_mu_r)$", None),   # small vectors: replicated
+    # mamba2
+    (r"^in_proj$", ("D", "-")),
+    (r"^out_proj$", ("-", "D")),
+    (r"^(conv_w|conv_b|A_log|D|dt_bias)$", None),
+    # norms & misc
+    (r"(^|_)(ln|norm)", None),
+    (r"^(q_norm|k_norm|ln_x_w|ln_x_b|final_norm|out_norm|ln1|ln2)$", None),
+]
+
+
+def _axis(tag: str) -> Optional[str]:
+    return {"D": "data", "M": "model", "-": None}[tag]
+
+
+def _fit(spec_tags, shape, mesh: Mesh):
+    """Map rule tags onto trailing dims; drop axes that don't divide."""
+    out = []
+    for tag, dim in zip(spec_tags, shape):
+        ax = _axis(tag)
+        if ax is not None and ax in mesh.axis_names and dim % mesh.shape[ax] == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def _moe_spec(name: str, shape, cfg: ModelConfig, mesh: Mesh):
+    """Expert weights: EP (E over model) when divisible, else expert-TP."""
+    m = mesh.shape.get("model", 1)
+    E = cfg.n_experts
+    ep = E % m == 0 and E >= m
+    if name in ("w_gate", "w_up"):
+        tags = ("M", "D", "-") if ep else ("-", "D", "M")
+    else:  # w_down
+        tags = ("M", "-", "D") if ep else ("-", "M", "D")
+    return _fit(tags, shape, mesh)
+
+
+_MOE_NAMES = ("w_gate", "w_up", "w_down")
+
+
+def param_pspec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    name = names[-1] if names else ""
+    stacked = "layers" in names[:-1]
+    shape = leaf.shape
+    trailing = shape[1:] if stacked else shape
+
+    in_moe = "moe" in names
+    if in_moe and name in _MOE_NAMES and len(trailing) == 3:
+        spec = _moe_spec(name, trailing, cfg, mesh)
+    else:
+        spec = None
+        for pat, tags in _RULES:
+            if re.search(pat, name):
+                if tags is None:
+                    spec = (None,) * len(trailing)
+                else:
+                    # pad/truncate tags to rank
+                    tags = tags[-len(trailing):] if len(tags) >= len(trailing) else (
+                        ("-",) * (len(trailing) - len(tags)) + tuple(tags)
+                    )
+                    spec = _fit(tags, trailing, mesh)
+                break
+        if spec is None:
+            spec = (None,) * len(trailing)
+
+    full = ((None,) + spec) if stacked else spec
+    return P(*full)
+
+
+def param_pspecs(params_tree, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, cfg, mesh), params_tree
+    )
+
+
+def param_shardings(params_tree, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params_tree, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input / cache / state rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_tree, mesh: Mesh, *, accum: bool):
+    """Training batch: leaves (A, micro, ...) or (B, ...); batch dim over
+    (pod, data) when divisible."""
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def spec(leaf):
+        shape = leaf.shape
+        bdim = 1 if accum else 0
+        lead = (None,) * bdim
+        if shape[bdim] % nb == 0:
+            return P(*lead, ba, *(None,) * (len(shape) - bdim - 1))
+        return P(*(None,) * len(shape))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    """KV/state caches.  Batch over (pod,data) when divisible; otherwise
+    (long_500k, B=1) shard the sequence dim over (data, model)."""
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+    seq_axes = ("data", "model") if "model" in mesh.axis_names else ("data",)
+    ns = int(np.prod([mesh.shape[a] for a in seq_axes]))
+
+    tp = mesh.shape.get("model", 1)
+
+    def spec(leaf):
+        shp = leaf.shape
+        # stacked caches: (L, B, S, ...) or (L, B, ...); zamba (G, B, S, H, D)
+        if len(shp) >= 2 and shp[1] % nb == 0 and shp[1] >= nb:
+            # batch over (pod, data); KV sequence (or head) dim over model
+            if len(shp) >= 3 and shp[2] % tp == 0 and shp[2] >= tp:
+                return P(None, ba, "model", *(None,) * (len(shp) - 3))
+            return P(None, ba, *(None,) * (len(shp) - 2))
+        if len(shp) >= 3 and shp[2] % ns == 0 and shp[2] >= ns:
+            # B=1 (long_500k): sequence over (data, model)
+            return P(None, None, seq_axes, *(None,) * (len(shp) - 3))
+        return P(*(None,) * len(shp))
+
+    return jax.tree.map(spec, cache_tree)
+
+
+def to_shardings(pspec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,111 @@
+"""Flash-decoding Pallas TPU kernel: one query token vs a long KV cache.
+
+Decode attention is HBM-bandwidth-bound (the whole cache is read once per
+token), so the kernel's job is to stream KV through VMEM in large tiles
+while keeping the online-softmax state for the GQA head-group in registers/
+VMEM scratch.  Grid: (B, Hkv, S/bk) — KV tiles innermost; the q tile is the
+(G, D) head-group so the MXU sees a (G, D)×(D, bk) matmul per tile.
+
+Tiles past ``lengths[b]`` are skipped entirely with @pl.when — for a
+32k-token budget cache holding 2k tokens that is a 16× read saving over the
+masked dense einsum (the lax baseline).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,                      # (1,) int32 valid length for this b
+    q_ref, k_ref, v_ref, o_ref,   # (1,G,D), (1,bk,1,D), (1,bk,1,D), (1,G,D)
+    m_ref, l_ref, acc_ref,        # scratch (G,), (G,), (G,D)
+    *,
+    bk: int, nk: int, scale: float,
+):
+    kj = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kj * bk < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                           # (G, bk)
+        pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def decode_attention_pallas(
+    q: jax.Array,          # (B, Hq, D)
+    k_cache: jax.Array,    # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,    # (B,) int32
+    *,
+    block_k: int = 512,
+    softmax_scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, nk)
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk, scale=scale)
+    from repro.kernels.flash_attention.kernel import pltpu_vmem
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, kj: (b,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, kj: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, kj: (b, kj, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, kj: (b, kj, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, kj: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu_vmem((G,), jnp.float32),
+            pltpu_vmem((G,), jnp.float32),
+            pltpu_vmem((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

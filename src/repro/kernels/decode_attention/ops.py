@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for the flash-decoding kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k=512):
+    """One-token GQA attention vs (B,S,Hkv,D) cache with per-seq lengths."""
+    return decode_attention_pallas(
+        q, k_cache, v_cache, lengths, block_k=block_k, interpret=_interpret()
+    )

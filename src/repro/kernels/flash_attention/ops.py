@@ -1,0 +1,54 @@
+"""Public jit'd wrapper for the flash-attention kernel.
+
+Differentiable: forward runs the Pallas kernel; backward recomputes through
+the pure-lax chunked oracle's VJP (flash-style recomputation — no S×S
+residuals are ever stored).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@lru_cache(maxsize=None)
+def _make(causal: bool, window: int, block_q: int, block_k: int):
+    from repro.models import layers
+
+    def ref(q, k, v):
+        return layers.chunked_attention(
+            q, k, v, causal=causal, window=window,
+            q_chunk=block_q, k_chunk=block_k,
+        )
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=_interpret(),
+        )
+
+    def fwd(q, k, v):
+        return fa(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(ref, q, k, v)
+        return vjp(g)
+
+    fa.defvjp(fwd, bwd)
+    return jax.jit(fa)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512, block_k=512):
+    """MHA-form flash attention (expand GQA first). q/k/v: (B,S,H,D)."""
+    S = q.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, k.shape[1])
+    return _make(causal, window, block_q, block_k)(q, k, v)

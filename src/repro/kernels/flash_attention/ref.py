@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel (materializes scores)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, H, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softmax_scale=None,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)   # right-aligned q
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused residual-add RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(
+    x: jax.Array, weight: jax.Array, residual: jax.Array = None, eps: float = 1e-6
+) -> jax.Array:
+    """out = rms_norm(x + residual) * weight; returns (out, x+residual)."""
+    if residual is not None:
+        x = x + residual
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype), x

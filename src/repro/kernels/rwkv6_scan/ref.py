@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the chunked WKV6 kernel: the exact per-step recurrence.
+
+    y_t = r_t · (S_{t-1} + (u ∘ k_t)^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, logw, u, state0):
+    """r,k,v,logw: (B,S,H,N); u: (H,N); state0: (B,H,N,N) fp32.
+    Returns (y (B,S,H,N) fp32, final_state (B,H,N,N) fp32)."""
+    B, S, H, N = r.shape
+
+    def step(S_prev, inputs):
+        rt, kt, vt, wt = inputs                    # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,N,N)
+        # bonus applies u per key-channel: r_t · (S + (u ∘ k_t)^T v_t)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S_prev) + jnp.einsum(
+            "bhn,bhn,bhm->bhm", rt, u[None] * kt, vt
+        )
+        S_new = jnp.exp(wt)[..., None] * S_prev + kv
+        return S_new, y
+
+    seq = lambda x: x.transpose(1, 0, 2, 3).astype(jnp.float32)
+    state, ys = lax.scan(step, state0.astype(jnp.float32),
+                         (seq(r), seq(k), seq(v), seq(logw)))
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Mamba-2 SSD kernel: exact per-step recurrence.
+
+    S_t = exp(Δ_t A_h) S_{t-1} + Δ_t x_t ⊗ B_t
+    y_t = S_t C_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, dt, A, Bm, Cm, state0):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N);
+    state0: (B,H,P,N) fp32.  Returns (y (B,S,H,P) fp32, final_state)."""
+    B, S, H, P = x.shape
+
+    def step(S_prev, inputs):
+        xt, dtt, Bt, Ct = inputs               # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * A[None])            # (B,H)
+        upd = dtt[..., None, None] * xt[..., :, None] * Bt[:, None, None, :]
+        S_new = da[..., None, None] * S_prev + upd
+        y = jnp.einsum("bhpn,bn->bhp", S_new, Ct)
+        return S_new, y
+
+    state, ys = lax.scan(
+        step,
+        state0.astype(jnp.float32),
+        (
+            x.transpose(1, 0, 2, 3).astype(jnp.float32),
+            dt.transpose(1, 0, 2).astype(jnp.float32),
+            Bm.transpose(1, 0, 2).astype(jnp.float32),
+            Cm.transpose(1, 0, 2).astype(jnp.float32),
+        ),
+    )
+    return ys.transpose(1, 0, 2, 3), state

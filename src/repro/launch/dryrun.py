@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:  jit(step, in_shardings, out_shardings).lower(specs).compile()
+on the production mesh — 16×16 (single pod) and 2×16×16 (two pods).  Prints
+memory_analysis (fits-HBM proof) and cost_analysis (roofline inputs), and
+writes one JSON per cell to results/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-done]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES_BY_NAME, get_config, grid_cells, shape_grid
+from repro.launch import inputs as inputs_lib
+from repro.launch import roofline as roofline_lib
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    jitted, args = inputs_lib.build_step(cfg, shape, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # archive the partitioned HLO so analyzer updates can re-score without
+    # recompiling (see launch/reanalyze.py)
+    import gzip
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    hlo_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.hlo.gz"
+    )
+    try:
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(compiled.as_text())
+    except Exception:
+        pass
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem["error"] = str(e)
+
+    terms = roofline_lib.analyze(compiled, cfg, shape, mesh_name, chips)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "roofline": terms.to_dict(),
+    }
+    if verbose:
+        live = (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            - mem.get("alias_size_in_bytes", 0)
+        )
+        print(f"[{arch} × {shape_name} × {mesh_name}] chips={chips}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  ≈ live bytes/device: {live/1e9:.2f} GB (HBM 16 GB)")
+        ca = {
+            "flops/device": terms.flops_per_device,
+            "bytes/device": terms.bytes_per_device,
+        }
+        print(f"  cost_analysis: {ca}")
+        print(
+            f"  roofline: compute={terms.compute_s:.4f}s memory={terms.memory_s:.4f}s "
+            f"collective={terms.collective_s:.4f}s dominant={terms.dominant} "
+            f"useful_flops={terms.useful_flops_fraction:.2f} "
+            f"roofline_frac={terms.roofline_fraction:.3f}"
+        )
+    return result
+
+
+def cell_path(arch, shape_name, mesh_name) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [
+            (cfg.name, shp.name, m)
+            for cfg, shp in grid_cells()
+            for m in meshes
+        ]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = []
+    for arch, shape_name, mesh_name in cells:
+        path = cell_path(arch, shape_name, mesh_name)
+        if args.skip_done and os.path.exists(path):
+            print(f"skip (done): {arch} × {shape_name} × {mesh_name}")
+            continue
+        try:
+            result = run_cell(arch, shape_name, mesh_name)
+        except Exception as e:
+            traceback.print_exc()
+            result = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+            }
+            failures.append((arch, shape_name, mesh_name))
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        sys.exit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,312 @@
+"""Hierarchical cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop body
+ONCE, so scanned-layer programs under-report FLOPs/bytes by ~L×A.  This
+module parses the HLO module into computations, walks from ENTRY multiplying
+by each while's ``known_trip_count`` (emitted by XLA in backend_config), and
+accumulates:
+
+  * flops        — 2·M·N·K per dot (K from the lhs operand's contracting dims)
+  * hbm_bytes    — result+operand bytes of dot/fusion/copy/convert/collective/
+                   (dynamic-)slice/dus/scatter-ish ops: a fusion reads its
+                   inputs and writes its output once, which is exactly the
+                   HBM-traffic model XLA's fusion semantics imply
+  * collectives  — per-kind per-chip bytes, ring-factored (2× all-reduce),
+                   multiplied by trip counts
+
+Shapes in the partitioned module are per-device, so all numbers are
+per-device; replica groups are not needed for the per-chip byte model.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "c64": 8, "c128": 16,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_KIND_RE = re.compile(r"\)?\s*([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_HBM_KINDS = {
+    "dot", "fusion", "copy", "convert", "dynamic-slice",
+    "dynamic-update-slice", "slice", "scatter", "gather", "pad",
+    "concatenate", "broadcast", "reduce", "transpose", "convolution",
+    "select-and-scatter", "sort", "iota", "reverse", "cholesky",
+    "triangular-solve", "rng", "exponential", "log", "add", "multiply",
+    "subtract", "divide", "maximum", "minimum", "compare", "select",
+    "tanh", "custom-call",
+}
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += b * n
+    return total
+
+
+def _shape_elems(type_str: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclass
+class HloOp:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[HloOp] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # op name -> result type
+    root: Optional["HloOp"] = None
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        if raw and not raw.startswith(" "):
+            # computation header: `%name (...) -> ... {` or `ENTRY %name ...`
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", raw)
+            if m and "{" in raw:
+                current = Computation(name=m.group(2))
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+            continue
+        if current is None:
+            continue
+        s = raw.strip()
+        if not s or s == "}":
+            continue
+        m = _OPLINE_RE.match(raw)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        km = _KIND_RE.search(rest)
+        # result type is everything before the kind token
+        kind = km.group(1) if km else ""
+        # find the result-type prefix: up to the kind occurrence
+        idx = rest.find(f"{kind}(") if kind else -1
+        result_type = rest[:idx] if idx > 0 else rest
+        op = HloOp(name=name, kind=kind, result_type=result_type, line=s)
+        current.ops.append(op)
+        current.shapes[name] = result_type
+        if s.startswith("ROOT"):
+            current.root = op
+    return comps, entry
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_count: int = 0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "collective_count": self.collective_count,
+        }
+
+
+def _dot_flops(op: HloOp, comp: Computation) -> float:
+    _, rdims = _shape_elems(op.result_type)
+    m = re.search(r"dot\(([^)]*)\)", op.line)
+    if not m:
+        return 0.0
+    operands = _OPERAND_RE.findall(m.group(1))
+    lhs_type = comp.shapes.get(operands[0], "") if operands else ""
+    _, ldims = _shape_elems(lhs_type)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    k = 1
+    if cm and ldims:
+        for idx in cm.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(ldims):
+                    k *= ldims[i]
+    rn = 1
+    for d in rdims:
+        rn *= d
+    return 2.0 * rn * k
+
+
+def _operand_bytes(op: HloOp, comp: Computation) -> float:
+    m = re.search(rf"{re.escape(op.kind)}\(([^)]*)\)", op.line)
+    if not m:
+        return 0.0
+    total = 0.0
+    for operand in _OPERAND_RE.findall(m.group(1)):
+        total += _shape_bytes(comp.shapes.get(operand, ""))
+    return total
+
+
+def _dus_bytes(op: HloOp, comp: Computation) -> float:
+    """dynamic-update-slice touches only the update region (read+write) —
+    counting the full destination buffer per while-iteration overstates scan
+    stack traffic by O(trip_count)."""
+    m = re.search(r"dynamic-update-slice\(([^)]*)\)", op.line)
+    if m:
+        operands = _OPERAND_RE.findall(m.group(1))
+        if len(operands) >= 2:
+            upd = _shape_bytes(comp.shapes.get(operands[1], ""))
+            if upd > 0:
+                return 2.0 * upd
+    return 2.0 * _shape_bytes(op.result_type) * 0.0  # unknown: skip
+
+
+def _fusion_bytes(op: HloOp, comp: Computation, comps, cm) -> float:
+    """HBM bytes for a fusion: result + operands, EXCEPT when the fusion
+    root is a (dynamic-)slice/update — then only the slice region moves and
+    the big buffer operand is aliased through."""
+    called = comps.get(cm.group(1)) if cm else None
+    root = called.root if called else None
+    root_kind = root.kind if root else ""
+    if root_kind == "dynamic-update-slice":
+        upd = _dus_bytes(root, called)
+        # plus non-aliased fusion inputs (exclude the pass-through buffer,
+        # identified as any operand with the same type as the result)
+        extra = 0.0
+        m = re.search(rf"{re.escape(op.kind)}\(([^)]*)\)", op.line)
+        if m:
+            res_bytes = _shape_bytes(op.result_type)
+            for o in _OPERAND_RE.findall(m.group(1)):
+                b = _shape_bytes(comp.shapes.get(o, ""))
+                if abs(b - res_bytes) > 1e-9:
+                    extra += min(b, upd)   # inputs feeding the update region
+        return upd + extra
+    if root_kind in ("dynamic-slice", "slice"):
+        return 2.0 * _shape_bytes(op.result_type)
+    return _shape_bytes(op.result_type) + _operand_bytes(op, comp)
+
+
+def analyze_text(text: str) -> CostTotals:
+    comps, entry = parse_module(text)
+    totals = CostTotals()
+    seen_stack: List[str] = []
+
+    def walk(comp_name: str, mult: float) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for op in comp.ops:
+            kind = op.kind
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if base_kind == "while":
+                tm = _TRIP_RE.search(op.line)
+                trip = float(tm.group(1)) if tm else 1.0
+                cm = _CALLED_RE.search(op.line)
+                if cm:
+                    walk(cm.group(1), mult * trip)
+                continue
+            if base_kind == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    for b in _OPERAND_RE.findall(bm.group(1)):
+                        walk(b, mult)
+                continue
+            if base_kind in ("call", "async-start"):
+                cm = _CALLED_RE.search(op.line)
+                if cm:
+                    walk(cm.group(1), mult)   # may contain collectives
+                continue
+            if base_kind in ("fusion", "map", "reduce-window"):
+                cm = _CALLED_RE.search(op.line)
+                if cm:
+                    # fusions: count internal dots (rare) but not elementwise
+                    walk_dots_only(cm.group(1), mult)
+                totals.hbm_bytes += mult * _fusion_bytes(op, comp, comps, cm)
+                continue
+            if base_kind == "dynamic-slice":
+                # reads+writes only the slice, not the sliced-from buffer
+                totals.hbm_bytes += mult * 2.0 * _shape_bytes(op.result_type)
+                continue
+            if base_kind == "dynamic-update-slice":
+                totals.hbm_bytes += mult * _dus_bytes(op, comp)
+                continue
+            if base_kind in COLLECTIVE_FACTORS:
+                b = _shape_bytes(op.result_type) * COLLECTIVE_FACTORS[base_kind]
+                totals.collective_bytes += mult * b
+                totals.collective_by_kind[base_kind] += mult * b
+                totals.collective_count += int(mult)
+                totals.hbm_bytes += mult * _shape_bytes(op.result_type)
+                continue
+            if base_kind == "dot":
+                totals.flops += mult * _dot_flops(op, comp)
+                totals.hbm_bytes += mult * (
+                    _shape_bytes(op.result_type) + _operand_bytes(op, comp)
+                )
+                continue
+            if base_kind == "convolution":
+                # flops ≈ 2 × result elems × (K window size); approximate via
+                # operand1 size — fine since our models avoid conv ops.
+                _, rdims = _shape_elems(op.result_type)
+                rn = 1
+                for d in rdims:
+                    rn *= d
+                totals.flops += mult * 2.0 * rn
+                totals.hbm_bytes += mult * (
+                    _shape_bytes(op.result_type) + _operand_bytes(op, comp)
+                )
+                continue
+            if base_kind in _HBM_KINDS:
+                totals.hbm_bytes += mult * (
+                    _shape_bytes(op.result_type) + _operand_bytes(op, comp)
+                )
+        seen_stack.pop()
+
+    def walk_dots_only(comp_name: str, mult: float) -> None:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "dot":
+                totals.flops += mult * _dot_flops(op, comp)
+
+    walk(entry, 1.0)
+    return totals

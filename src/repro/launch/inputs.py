@@ -1,0 +1,214 @@
+"""ShapeDtypeStruct input stand-ins + jitted step builders per (arch × shape).
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input — shardable, zero allocation — the dry-run lowers against
+them.  ``build_step`` pairs them with the right jitted function:
+
+  train_4k     -> train_step (grad-accum AdamW)
+  prefill_32k  -> model.prefill        (encoder archs: the encode step)
+  decode_*     -> model.decode         (one token against a full cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding
+from repro.models.model import Model
+from repro.training import optimizer as opt_lib
+from repro.training.train_step import make_train_step
+
+N_PATCHES = 576          # llava anyres stub: patch embeds per sample
+DECODE_PAD = 256         # decode cache buffer = seq_len + DECODE_PAD
+
+# Per-data-shard microbatch (sequences) per arch — sized in DESIGN.md §5 so
+# √L-remat residuals fit v5e HBM.  The accumulation factor follows from the
+# mesh: A = global_batch / (batch_shards × PER_SHARD_MICRO).
+PER_SHARD_MICRO = {
+    "qwen3-0.6b": 8,
+    "qwen3-4b": 4,
+    "starcoder2-15b": 2,
+    "llama3-405b": 1,
+    "hubert-xlarge": 8,
+    "arctic-480b": 1,
+    "mixtral-8x22b": 2,
+    "rwkv6-7b": 2,
+    "zamba2-2.7b": 4,
+    "llava-next-mistral-7b": 2,
+}
+
+
+def accum_steps(cfg: ModelConfig, shape: InputShape, mesh=None) -> int:
+    n_shards = 1
+    if mesh is not None:
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_shards *= mesh.shape[a]
+    psm = PER_SHARD_MICRO.get(cfg.name, 2)
+    A = max(1, shape.global_batch // (n_shards * psm))
+    while shape.global_batch % (A * n_shards) != 0 and A > 1:
+        A -= 1
+    return A
+
+# bf16 moments for ≥100B-param archs (DESIGN.md §5 memory budget).
+BF16_MOMENT_ARCHS = {"llama3-405b", "arctic-480b", "mixtral-8x22b"}
+
+
+def optimizer_config(cfg: ModelConfig) -> opt_lib.AdamWConfig:
+    mdt = "bfloat16" if cfg.name in BF16_MOMENT_ARCHS else "float32"
+    return opt_lib.AdamWConfig(moment_dtype=mdt)
+
+
+def accum_dtype(cfg: ModelConfig) -> str:
+    return "bfloat16" if cfg.name in BF16_MOMENT_ARCHS else "float32"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh=None) -> Dict[str, Any]:
+    A = accum_steps(cfg, shape, mesh)
+    micro = shape.global_batch // A
+    S = shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    if cfg.family == "encoder":
+        return {
+            "embeds": _sds((A, micro, S, cfg.d_model), jnp.bfloat16),
+            "targets": _sds((A, micro, S), i32),
+            "mask": _sds((A, micro, S), f32),
+        }
+    if cfg.family == "vlm":
+        s_text = S - N_PATCHES
+        return {
+            "inputs": _sds((A, micro, s_text), i32),
+            "patches": _sds((A, micro, N_PATCHES, cfg.d_model), jnp.bfloat16),
+            "targets": _sds((A, micro, s_text), i32),
+        }
+    return {
+        "inputs": _sds((A, micro, S), i32),
+        "targets": _sds((A, micro, S), i32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "encoder":
+        return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        return {
+            "inputs": _sds((B, S - N_PATCHES), i32),
+            "patches": _sds((B, N_PATCHES, cfg.d_model), jnp.bfloat16),
+        }
+    return {"inputs": _sds((B, S), i32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, model: Model):
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), jnp.int32)
+    cache = model.cache_specs(B, S + DECODE_PAD)
+    cache_len = _sds((), jnp.int32)
+    return tokens, cache, cache_len
+
+
+def input_specs(arch_or_cfg, shape: InputShape, model: Model = None):
+    """Public entry: ShapeDtypeStructs for every model input of a cell."""
+    cfg = arch_or_cfg
+    if isinstance(cfg, str):
+        from repro.configs import get_config
+
+        cfg = get_config(cfg)
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)  # mesh-agnostic view (A for no-mesh)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    model = model or Model(cfg)
+    return decode_specs(cfg, shape, model)
+
+
+# ---------------------------------------------------------------------------
+# jitted steps with shardings (what dryrun lowers)
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: InputShape, mesh):
+    model = Model(cfg, mesh)
+    ocfg = optimizer_config(cfg)
+    step = make_train_step(model, ocfg, accum_dtype=accum_dtype(cfg))
+
+    params_specs = model.param_specs()
+    opt_specs = jax.eval_shape(lambda: opt_lib.init(params_specs, ocfg))
+    batch_specs = train_batch_specs(cfg, shape, mesh)
+
+    p_sh = sharding.to_shardings(sharding.param_pspecs(params_specs, cfg, mesh), mesh)
+    scalar_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    o_sh = opt_lib.AdamWState(step=scalar_sh, m=p_sh, v=p_sh)
+    b_sh = sharding.to_shardings(
+        sharding.batch_pspecs(batch_specs, mesh, accum=True), mesh
+    )
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (params_specs, opt_specs, batch_specs)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: InputShape, mesh):
+    model = Model(cfg, mesh)
+    params_specs = model.param_specs()
+    batch_specs = prefill_batch_specs(cfg, shape)
+    p_sh = sharding.to_shardings(sharding.param_pspecs(params_specs, cfg, mesh), mesh)
+    b_sh = sharding.to_shardings(
+        sharding.batch_pspecs(batch_specs, mesh, accum=False), mesh
+    )
+    cache_specs = jax.eval_shape(
+        lambda p, b: model.prefill(p, b)[1], params_specs, batch_specs
+    )
+    c_sh = sharding.to_shardings(
+        sharding.cache_pspecs(cache_specs, cfg, mesh, shape), mesh
+    )
+    jitted = jax.jit(
+        model.prefill,
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(None, c_sh),
+    )
+    return jitted, (params_specs, batch_specs)
+
+
+def build_decode_step(cfg: ModelConfig, shape: InputShape, mesh):
+    model = Model(cfg, mesh)
+    params_specs = model.param_specs()
+    tokens, cache_specs, clen = decode_specs(cfg, shape, model)
+    p_sh = sharding.to_shardings(sharding.param_pspecs(params_specs, cfg, mesh), mesh)
+    t_sh = sharding.to_shardings(
+        sharding.batch_pspecs(tokens, mesh, accum=False), mesh
+    )
+    c_sh = sharding.to_shardings(
+        sharding.cache_pspecs(cache_specs, cfg, mesh, shape), mesh
+    )
+    jitted = jax.jit(
+        model.decode,
+        in_shardings=(p_sh, t_sh, c_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+    )
+    return jitted, (params_specs, tokens, cache_specs, clen)
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh):
+    """Returns (jitted_fn, example_args) for the cell."""
+    if shape.kind == "train":
+        jitted, (ps, os_, bs) = build_train_step(cfg, shape, mesh)
+        return jitted, (ps, os_, bs)
+    if shape.kind == "prefill":
+        jitted, (ps, bs) = build_prefill_step(cfg, shape, mesh)
+        return jitted, (ps, bs)
+    jitted, (ps, toks, cs, clen) = build_decode_step(cfg, shape, mesh)
+    return jitted, (ps, toks, cs, clen)

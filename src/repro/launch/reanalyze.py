@@ -1,0 +1,50 @@
+"""Re-score archived dry-run HLO with the current analyzer (no recompiles).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch import hlo_analysis, roofline
+from repro.launch.dryrun import RESULTS_DIR
+
+
+def main():
+    for gz in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.hlo.gz"))):
+        base = os.path.basename(gz)[: -len(".hlo.gz")]
+        arch, shape_name, mesh_name = base.split("__")
+        json_path = os.path.join(RESULTS_DIR, base + ".json")
+        if not os.path.exists(json_path):
+            continue
+        with open(json_path) as f:
+            cell = json.load(f)
+        if not cell.get("ok"):
+            continue
+        with gzip.open(gz, "rt") as f:
+            text = f.read()
+        totals = hlo_analysis.analyze_text(text)
+        cfg = get_config(arch)
+        shape = SHAPES_BY_NAME[shape_name]
+        terms = roofline.RooflineTerms(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=cell["chips"],
+            flops_per_device=totals.flops,
+            bytes_per_device=totals.hbm_bytes,
+            collective_bytes=totals.collective_bytes,
+            collective_breakdown=dict(totals.collective_by_kind),
+            model_flops=roofline.model_flops_for_cell(cfg, shape),
+            min_bytes=roofline.min_bytes_for_cell(cfg, shape),
+        )
+        cell["roofline"] = terms.to_dict()
+        with open(json_path, "w") as f:
+            json.dump(cell, f, indent=1)
+        print(f"rescored {base}: dominant={terms.dominant} "
+              f"frac={terms.roofline_fraction:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Render the dry-run/roofline results into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def load(results_dir: str):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def live_gb(cell) -> float:
+    ma = cell.get("memory_analysis", {})
+    return (
+        ma.get("argument_size_in_bytes", 0)
+        + ma.get("temp_size_in_bytes", 0)
+        + ma.get("output_size_in_bytes", 0)
+        - ma.get("alias_size_in_bytes", 0)
+    ) / 1e9
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | compile s | live GB/dev | flops/dev | HLO bytes/dev | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if not c.get("ok"):
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | FAILED | {c.get('error','')[:40]} | | | |"
+            )
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['chips']} "
+            f"| {c.get('compile_s', 0):.0f} | {live_gb(c):.1f} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {r['collective_bytes']:.2e} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(cells, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | ideal s | roofline frac | useful flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if not c.get("ok") or c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** | {r.get('ideal_s', 0):.4f} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_flops_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def summary(cells) -> str:
+    ok = [c for c in cells if c.get("ok")]
+    fail = [c for c in cells if not c.get("ok")]
+    doms = {}
+    for c in ok:
+        doms[c["roofline"]["dominant"]] = doms.get(c["roofline"]["dominant"], 0) + 1
+    out = [
+        f"cells compiled OK: {len(ok)}; failed: {len(fail)}",
+        f"dominant-term counts: {doms}",
+    ]
+    if ok:
+        worst = min(
+            (c for c in ok if c["mesh"] == "single"),
+            key=lambda c: c["roofline"]["roofline_fraction"],
+        )
+        out.append(
+            f"worst roofline fraction (single): {worst['arch']}×{worst['shape']} "
+            f"= {worst['roofline']['roofline_fraction']:.4f}"
+        )
+        coll = max(
+            (c for c in ok if c["mesh"] == "single"),
+            key=lambda c: c["roofline"]["collective_s"],
+        )
+        out.append(
+            f"most collective-bound (single): {coll['arch']}×{coll['shape']} "
+            f"= {coll['roofline']['collective_s']:.2f}s"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=RESULTS_DIR)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    cells = load(args.dir)
+    print("## §Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## §Roofline (single-pod, 256 chips)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## §Roofline (multi-pod, 512 chips)\n")
+    print(roofline_table(cells, "multi"))
+    print("\n## Summary\n")
+    print(summary(cells))
+
+
+if __name__ == "__main__":
+    main()

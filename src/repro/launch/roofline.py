@@ -1,0 +1,176 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = per-chip collective bytes / ICI link bw
+
+All three inputs come from ``launch.hlo_analysis`` — a hierarchical walk of
+the post-SPMD HLO (per-device shapes) that multiplies by each while-loop's
+``known_trip_count``: dot FLOPs, an HBM-traffic model (operand+result bytes
+of dot/fusion/copy/collective ops; slices count only the region moved), and
+per-kind collective bytes with ring factors (2× all-reduce).  Single-link
+50 GB/s accounting: conservative, consistent across perf iterations (deltas
+are what the hillclimb optimizes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import HardwareTier, InputShape, ModelConfig, TPU_V5E
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, float]
+    model_flops: float              # 6·N·D (active params)
+    tier: HardwareTier = field(default_factory=lambda: TPU_V5E)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.tier.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.tier.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.tier.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): remat/redundancy waste catcher."""
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops / total_hlo if total_hlo > 0 else 0.0
+
+    min_bytes: float = 0.0          # decode: unavoidable HBM traffic (weights+cache)
+
+    @property
+    def ideal_s(self) -> float:
+        """The unavoidable time for this step on this many chips:
+        train/prefill → model FLOPs at peak; decode → weights+cache streamed
+        once at full HBM bandwidth (decode is bandwidth-bound by nature)."""
+        compute_ideal = self.model_flops / (self.chips * self.tier.peak_flops)
+        if self.min_bytes > 0:
+            mem_ideal = self.min_bytes / (self.chips * self.tier.hbm_bw)
+            return max(compute_ideal, mem_ideal)
+        return compute_ideal
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_s / dominant-term time: how close the compiled program is
+        to the workload's own roofline."""
+        return self.ideal_s / self.bound_s if self.bound_s > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "min_bytes": self.min_bytes,
+            "ideal_s": self.ideal_s,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for_cell(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N_active·D for train; 2·N_active·D for a forward-only step."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def min_bytes_for_cell(cfg: ModelConfig, shape: InputShape) -> float:
+    """Decode-only: unavoidable HBM traffic per step = weights streamed once
+    + the KV/state cache read once + written once at the new position."""
+    if shape.kind != "decode":
+        return 0.0
+    weight_bytes = 2.0 * cfg.active_param_count()      # bf16, active experts
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    if cfg.family == "rwkv":
+        N = cfg.rwkv_head_dim
+        H = cfg.d_model // N
+        cache = cfg.n_layers * B * (H * N * N * 4 + 2 * cfg.d_model * 2)
+    elif cfg.family == "hybrid":
+        d_inner = 2 * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        cache = cfg.n_layers * B * H * cfg.ssm_head_dim * cfg.ssm_state * 4
+        G = cfg.n_layers // cfg.attention_every
+        cache += G * B * S * cfg.n_kv_heads * hd * 2 * 2
+    else:
+        S_eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        cache = cfg.n_layers * B * S_eff * cfg.n_kv_heads * hd * 2 * 2
+    return weight_bytes + cache
+
+
+def analyze(
+    compiled,
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh_name: str,
+    chips: int,
+    tier: HardwareTier = TPU_V5E,
+) -> RooflineTerms:
+    """Trip-count-aware analysis of the compiled per-device module.
+
+    Uses launch.hlo_analysis (hierarchical walk multiplying while-loop
+    known_trip_counts) — the raw ``cost_analysis()`` numbers under-count
+    scanned programs by ~L×A on the CPU backend (body counted once); they
+    are preserved in the dry-run JSON for reference only.
+    """
+    from repro.launch import hlo_analysis
+
+    totals = hlo_analysis.analyze_text(compiled.as_text())
+    return RooflineTerms(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=totals.flops,
+        bytes_per_device=totals.hbm_bytes,
+        collective_bytes=totals.collective_bytes,
+        collective_breakdown=dict(totals.collective_by_kind),
+        model_flops=model_flops_for_cell(cfg, shape),
+        min_bytes=min_bytes_for_cell(cfg, shape),
+        tier=tier,
+    )

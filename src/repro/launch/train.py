@@ -1,0 +1,139 @@
+"""Training launcher: sharded train loop with checkpoint/restart, elastic
+re-meshing, straggler tracking, and optional compressed cross-pod grad sync.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 200 --seq-len 256 --global-batch 16 --reduced
+
+(--reduced runs the smoke-scale config so the loop executes on CPU; the full
+configs are for the real mesh.)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data-parallel", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=0)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--simulate-failure-at", type=int, default=-1)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.distributed import sharding
+    from repro.distributed.compression import make_ef_transform
+    from repro.distributed.fault_tolerance import StepGuard, StragglerPolicy
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import Model
+    from repro.training import checkpoint as ckpt
+    from repro.training import optimizer as opt
+    from repro.training.data import DataConfig, PrefetchIterator
+    from repro.training.train_step import make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduce(), name=cfg.name)
+    shape = InputShape("cli", "train", args.seq_len, args.global_batch)
+
+    mesh = None
+    if args.data_parallel or args.model_parallel:
+        mesh = make_host_mesh(args.data_parallel or 1, args.model_parallel or 1)
+
+    model = Model(cfg, mesh)
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                           decay_steps=args.steps)
+    params = model.init(jax.random.key(0))
+    state = opt.init(params, ocfg)
+    if mesh is not None:
+        p_sh = sharding.to_shardings(sharding.param_pspecs(params, cfg, mesh), mesh)
+        params = jax.device_put(params, p_sh)
+        state = opt.AdamWState(step=state.step,
+                               m=jax.device_put(state.m, p_sh),
+                               v=jax.device_put(state.v, p_sh))
+
+    grad_transform = None
+    ef_state = None
+    if args.compress_grads:
+        init_fn, transform = make_ef_transform("int8")
+        ef_state = init_fn(params)
+        holder = {"state": ef_state}
+
+        def grad_transform(g):   # noqa: F811 — closure over EF state
+            out, holder["state"] = transform(g, holder["state"])
+            return out
+
+    step_fn = jax.jit(make_train_step(model, ocfg, grad_transform=grad_transform))
+
+    start_step = 0
+    checkpointer = None
+    if args.ckpt_dir:
+        checkpointer = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
+        like = jax.eval_shape(lambda: {"params": params, "opt": state})
+        restored, got = ckpt.restore_latest(args.ckpt_dir, like)
+        if got >= 0:
+            params, state = restored["params"], restored["opt"]
+            start_step = got
+            print(f"resumed from step {got}")
+
+    dcfg = DataConfig(seed=0, accum_steps=args.accum)
+    data = PrefetchIterator(cfg, shape, dcfg, start_step=start_step)
+    guard = StepGuard()
+    straggler = StragglerPolicy()
+
+    ctx = mesh if mesh is not None else _nullcontext()
+    with ctx:
+        for i in range(start_step, args.steps):
+            step_idx, batch = next(data)
+            assert step_idx == i
+            if i == args.simulate_failure_at:
+                raise SystemExit(17)  # simulated node loss (restart picks up)
+            t0 = time.perf_counter()
+            out = guard.run(step_fn, params, state, batch)
+            if out is None:
+                continue
+            params, state, metrics = out
+            dt = time.perf_counter() - t0
+            slow = straggler.observe(dt)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(
+                    f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+                    + (" [straggler]" if slow else "")
+                )
+            if checkpointer and (i + 1) % args.ckpt_every == 0:
+                checkpointer.save({"params": params, "opt": state}, i + 1)
+    if checkpointer:
+        checkpointer.save({"params": params, "opt": state}, args.steps)
+        checkpointer.wait()
+    data.close()
+    print("done")
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

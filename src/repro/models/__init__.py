@@ -1,0 +1,2 @@
+"""Model execution layer: all 10 assigned architectures, pure JAX."""
+from repro.models.model import Model  # noqa: F401

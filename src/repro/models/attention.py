@@ -1,0 +1,184 @@
+"""Full attention block: projections, GQA, qk-norm, RoPE, KV cache.
+
+Cache layouts
+-------------
+* full attention: ``k/v`` of shape (B, S_max, Hkv, Dh); ``cache_len`` scalar.
+* sliding-window (mixtral): ring buffer of shape (B, W, Hkv, Dh) — bounds
+  long_500k cache memory to the window (keys stored with absolute RoPE, so
+  relative phases stay correct as the ring wraps).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_cache, Hkv, Dh)
+    v: jax.Array
+    # cache_len lives at the model level (shared across layers)
+
+
+def init_attn_params(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, qd), dtype),
+        "wk": layers.dense_init(ks[1], (d, kvd), dtype),
+        "wv": layers.dense_init(ks[2], (d, kvd), dtype),
+        "wo": layers.dense_init(ks[3], (qd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B = x.shape[0]
+    S = x.shape[1]
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _head_shard_constraint(t: jax.Array, mesh) -> jax.Array:
+    """Pin (B, S, H, Dh) to batch-over-(pod,data) × heads-over-model."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    B, _, H, _ = t.shape
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    bspec = ba if (B % nb == 0 and B >= nb) else None
+    hspec = "model" if H % mesh.shape["model"] == 0 else None
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, P(bspec, None, hspec, None))
+    )
+
+
+def _expand_and_pad_heads(q, k, v, cfg: ModelConfig, mesh):
+    """GQA→MHA expansion + zero-pad heads to a multiple of the TP degree.
+
+    Head-sharding only partitions when H % tp == 0; arctic's 56 heads pad
+    to 64 (14% waste, vs full replication of the score matmuls otherwise).
+    Padded q rows are zero ⇒ uniform softmax over garbage v, sliced off
+    before the output projection — exactness is unaffected.
+    """
+    B, S, Hq, Dh = q.shape
+    G = Hq // cfg.n_kv_heads
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    tp = mesh.shape["model"] if (mesh is not None and "model" in mesh.axis_names) else 1
+    Hp = ((Hq + tp - 1) // tp) * tp
+    if Hp != Hq:
+        pad = [(0, 0), (0, 0), (0, Hp - Hq), (0, 0)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    q = _head_shard_constraint(q, mesh)
+    k = _head_shard_constraint(k, mesh)
+    v = _head_shard_constraint(v, mesh)
+    return q, k, v, Hq
+
+
+def attention_block(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    mesh=None,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Prefill / training attention (chunked flash path)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    cache = None
+    if return_cache:
+        kc, vc = k, v
+        if cfg.sliding_window > 0 and S >= cfg.sliding_window:
+            # keep last W entries; ring-aligned when S % W == 0
+            kc = kc[:, -cfg.sliding_window:]
+            vc = vc[:, -cfg.sliding_window:]
+        cache = KVCache(k=kc, v=vc)
+    qe, ke, ve, Hq = _expand_and_pad_heads(q, k, v, cfg, mesh)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(
+            qe, ke, ve,
+            causal=cfg.causal,
+            window=cfg.sliding_window,
+            block_q=min(512, S),
+            block_k=min(512, S),
+        )
+    else:
+        out = layers.chunked_attention(
+            qe, ke, ve,
+            causal=cfg.causal,
+            window=cfg.sliding_window,
+            q_chunk=min(1024, S),
+            k_chunk=min(1024, S),
+        )
+    out = out[:, :, :Hq, :]
+    out = jnp.einsum("bsq,qd->bsd", out.reshape(B, S, cfg.q_dim), p["wo"])
+    return out, cache
+
+
+def attention_decode(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, 1, d) — one new token
+    cache: KVCache,
+    cache_len: jax.Array,               # scalar int32: tokens already cached
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, KVCache]:
+    """One decode step: append to cache (ring for SWA), attend, project."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.broadcast_to(cache_len, (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    W = cache.k.shape[1]
+    if cfg.sliding_window > 0:
+        write_at = cache_len % W
+        eff_len = jnp.minimum(cache_len + 1, W)
+        swa = True
+    else:
+        write_at = cache_len
+        eff_len = cache_len + 1
+        swa = False
+    k_c = lax.dynamic_update_slice(cache.k, k_new, (0, write_at, 0, 0))
+    v_c = lax.dynamic_update_slice(cache.v, v_new, (0, write_at, 0, 0))
+
+    out = layers.decode_attention(
+        q[:, 0], k_c, v_c, eff_len,
+        window=0 if swa else 0,   # ring buffer already bounds the window
+    )
+    out = jnp.einsum("bq,qd->bd", out.reshape(B, cfg.q_dim), p["wo"])[:, None, :]
+    return out, KVCache(k=k_c, v=v_c)
+
+
+def empty_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    S_cache = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    shape = (batch, S_cache, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))

@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD) block, chunked scan formulation.
+
+Per head h (P channels, N state dims, scalar decay per step):
+
+    S_t = exp(Δ_t·A_h) · S_{t-1} + Δ_t · x_t ⊗ B_t        S ∈ R^{P×N}
+    y_t = S_t · C_t + D_h · x_t
+
+The chunked "SSD" form computes within-chunk contributions with a (C,C)
+pairwise decay matrix *per head* (scalar decay ⇒ cheap) and carries the
+(B,H,P,N) state across chunks.  All pairwise decays are exp(non-positive).
+This is the oracle for the ``repro.kernels.ssd_scan`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+CONV_K = 4   # depthwise causal conv kernel width
+
+
+class Mamba2LayerCache(NamedTuple):
+    conv: jax.Array      # (B, CONV_K-1, conv_channels) — conv tail
+    state: jax.Array     # (B, H, P, N) fp32 ssm state
+
+
+def dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    return d_inner, P, H, N, conv_ch
+
+
+def init_mamba2_layer(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    d_inner, P, H, N, conv_ch = dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": layers.dense_init(ks[0], (d, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": layers.dense_init(ks[1], (CONV_K, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": layers.dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. x: (B,S,C); w: (K,C). Returns
+    (conv_out (B,S,C), new_tail (B,K-1,C))."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)             # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i : i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_tail = xp[:, S:]                                # last K-1 inputs
+    return jax.nn.silu(out).astype(x.dtype), new_tail
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H) — post-softplus
+    A: jax.Array,        # (H,) negative
+    Bm: jax.Array,       # (B, S, N)
+    Cm: jax.Array,       # (B, S, N)
+    state0: jax.Array,   # (B, H, P, N) fp32
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state)."""
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xc = x.reshape(B, nc, chunk, H, Pd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(S_prev, inputs):
+        xb, dtb, Bb, Cb = inputs          # (B,H,C,P), (B,H,C), (B,C,N), (B,C,N)
+        da = dtb * Af[None, :, None]      # (B,H,C) log-decay, <= 0
+        cum = jnp.cumsum(da, axis=2)
+        # inter-chunk: y_t += exp(cum[t]) · C_t · S_prev
+        y_inter = jnp.einsum("bcn,bhpn->bhcp", Cb, S_prev) * jnp.exp(cum)[..., None]
+        # intra-chunk pairwise (scalar per head)
+        G = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :])      # (B,H,C,C)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))            # s <= t
+        cb = jnp.einsum("btn,bsn->bts", Cb, Bb)                   # (B,C,C)
+        att = cb[:, None] * jnp.where(tri[None, None], G, 0.0)
+        att = att * dtb[:, :, None, :]                            # weight Δ_s
+        y_intra = jnp.einsum("bhts,bhsp->bhtp", att, xb)
+        # state update
+        dec_end = jnp.exp(cum[:, :, -1:] - cum)                   # (B,H,C)
+        S_new = jnp.exp(cum[:, :, -1])[..., None, None] * S_prev + jnp.einsum(
+            "bhs,bhsp,bsn->bhpn", dtb * dec_end, xb, Bb
+        )
+        return S_new, y_inter + y_intra
+
+    state, yc = lax.scan(chunk_step, state0.astype(jnp.float32), (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Pd)
+    return y, state
+
+
+def ssd_decode(x, dt, A, Bm, Cm, state):
+    """One step. x: (B,H,P); dt: (B,H); Bm/Cm: (B,N); state: (B,H,P,N)."""
+    xf, dtf, Bf, Cf = (t.astype(jnp.float32) for t in (x, dt, Bm, Cm))
+    da = jnp.exp(dtf * A.astype(jnp.float32)[None, :])            # (B,H)
+    upd = dtf[..., None, None] * xf[..., :, None] * Bf[:, None, None, :]
+    state_new = da[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state_new, Cf)
+    return y, state_new
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_inner, P, H, N, _ = dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xr = zxbcdt[..., d_inner : 2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner : 2 * d_inner + N]
+    Cm = zxbcdt[..., 2 * d_inner + N : 2 * d_inner + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * N :]
+    return z, xr, Bm, Cm, dt_raw
+
+
+def mamba2_layer(p, x, cfg: ModelConfig, cache: Mamba2LayerCache = None, mesh=None):
+    """Sequence form. x: (B, S, d). Returns (x, new_cache)."""
+    B, S, d = x.shape
+    d_inner, P, H, N, conv_ch = dims(cfg)
+    xn = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", xn, p["in_proj"])
+    z, xr, Bm, Cm, dt_raw = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    tail = None if cache is None else cache.conv.astype(conv_in.dtype)
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], tail)
+    xr = conv_out[..., :d_inner].reshape(B, S, H, P)
+    Bm = conv_out[..., d_inner : d_inner + N]
+    Cm = conv_out[..., d_inner + N :]
+
+    # pin scan-input shardings: batch over (pod,data), heads over model —
+    # without this SPMD replicates the whole SSD scan (EXPERIMENTS.md §Perf)
+    xr = layers.shard_batch_heads(xr, mesh, head_axis=2)
+    Bm = layers.shard_batch_heads(Bm, mesh, head_axis=99)
+    Cm = layers.shard_batch_heads(Cm, mesh, head_axis=99)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    dt = layers.shard_batch_heads(dt, mesh, head_axis=2)
+    A = -jnp.exp(p["A_log"])
+    state0 = jnp.zeros((B, H, P, N), jnp.float32) if cache is None else cache.state
+    if cfg.use_pallas:
+        from repro.kernels.ssd_scan.ops import ssd
+
+        y, state = ssd(xr, dt, A, Bm, Cm, state0)
+    else:
+        y, state = ssd_chunked(xr, dt, A, Bm, Cm, state0)
+    y = y + p["D"][None, None, :, None] * xr.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm then out-proj
+    y = layers.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        p["out_norm"], cfg.norm_eps,
+    )
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + out, Mamba2LayerCache(conv=new_tail, state=state)
+
+
+def mamba2_layer_decode(p, x, cfg: ModelConfig, cache: Mamba2LayerCache):
+    """One token. x: (B, 1, d)."""
+    B, _, d = x.shape
+    d_inner, P, H, N, conv_ch = dims(cfg)
+    xn = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", xn, p["in_proj"])
+    z, xr, Bm, Cm, dt_raw = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)     # (B,1,C)
+    conv_out, new_tail = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"], cache.conv.astype(conv_in.dtype)
+    )
+    xr = conv_out[:, 0, :d_inner].reshape(B, H, P)
+    Bm = conv_out[:, 0, d_inner : d_inner + N]
+    Cm = conv_out[:, 0, d_inner + N :]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_decode(xr, dt, A, Bm, Cm, cache.state)
+    y = y + p["D"][None, :, None] * xr.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner)
+    y = layers.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        p["out_norm"], cfg.norm_eps,
+    )
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + out, Mamba2LayerCache(conv=new_tail, state=state)
+
+
+def empty_cache(cfg: ModelConfig, batch: int, dtype) -> Mamba2LayerCache:
+    d_inner, P, H, N, conv_ch = dims(cfg)
+    return Mamba2LayerCache(
+        conv=jnp.zeros((batch, CONV_K - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )

@@ -1,0 +1,144 @@
+"""Model facade: one uniform API over all six families.
+
+    model = Model(cfg, mesh)
+    params = model.init(key)                       # real arrays
+    specs  = model.param_specs(key)                # ShapeDtypeStructs (dry-run)
+    loss, metrics = model.loss(params, batch)      # training objective
+    logits, cache = model.prefill(params, batch)   # sequence -> KV/state cache
+    logits, cache = model.decode(params, tokens, cache, cache_len)
+
+Batch dict conventions (match launch.input_specs):
+  tokens-LM : {"inputs": (B,S) i32, "targets": (B,S) i32}
+  encoder   : {"embeds": (B,S,d), "targets": (B,S) i32, "mask": (B,S) f32}
+  vlm       : {"inputs": (B,S_text) i32, "patches": (B,Np,d), "targets": (B,S_text) i32}
+  decode    : tokens (B,1) i32 + cache pytree + cache_len scalar i32
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, mamba2, rwkv6, transformer, zamba2
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class DecoderKVCache(NamedTuple):
+    k: jax.Array   # (L, B, Sc, Hkv, Dh)
+    v: jax.Array
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mesh: Optional[jax.sharding.Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: jax.Array):
+        cfg = self.cfg
+        if cfg.family == "rwkv":
+            return rwkv6.init_rwkv_params(key, cfg)
+        if cfg.family == "hybrid":
+            return zamba2.init_zamba2_params(key, cfg)
+        return transformer.init_transformer_params(key, cfg)
+
+    def param_specs(self):
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # -- embedding ----------------------------------------------------------
+    def _embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            return batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        x = jnp.take(params["embed"], batch["inputs"], axis=0)
+        if cfg.family == "vlm" and "patches" in batch:
+            patches = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    def _backbone_seq(self, params, x, *, return_cache: bool):
+        cfg = self.cfg
+        if cfg.family == "rwkv":
+            x, cache = rwkv6.run_rwkv_seq(params, x, cfg, self.mesh, return_cache=return_cache)
+            return x, cache, jnp.zeros((), jnp.float32)
+        if cfg.family == "hybrid":
+            x, cache = zamba2.run_zamba2_seq(
+                params, x, cfg, self.mesh, return_cache=return_cache
+            )
+            return x, cache, jnp.zeros((), jnp.float32)
+        x, caches, aux = transformer.run_layers_seq(
+            params, x, cfg, self.mesh, return_cache=return_cache
+        )
+        cache = DecoderKVCache(k=caches[0], v=caches[1]) if return_cache else None
+        return x, cache, aux
+
+    # -- training loss -------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        x, _, aux = self._backbone_seq(params, x, return_cache=False)
+        logits = transformer.logits_from_hidden(params, x, cfg, self.mesh)
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        if cfg.family == "vlm":
+            npatch = x.shape[1] - targets.shape[1]
+            logits = logits[:, npatch:]
+        ce = transformer.softmax_xent(logits, targets, mask)
+        loss = ce + MOE_AUX_WEIGHT * aux
+        return loss, {"ce": ce, "moe_aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def prefill(self, params, batch):
+        """Returns (last-position logits (B,V), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        x, cache, _ = self._backbone_seq(params, x, return_cache=True)
+        logits = transformer.logits_from_hidden(params, x[:, -1:], cfg, self.mesh)[:, 0]
+        return logits, cache
+
+    def decode(self, params, tokens, cache, cache_len):
+        """tokens: (B,1) i32; cache_len: scalar i32 (tokens already cached).
+
+        Returns (logits (B,V), new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.family == "rwkv":
+            x, new_cache = rwkv6.run_rwkv_decode(params, x, cache, cfg)
+        elif cfg.family == "hybrid":
+            x, new_cache = zamba2.run_zamba2_decode(
+                params, x, cache, cache_len, cfg, self.mesh
+            )
+        else:
+            x, nk, nv = transformer.run_layers_decode(
+                params, x, cache.k, cache.v, cache_len, cfg, self.mesh
+            )
+            new_cache = DecoderKVCache(k=nk, v=nv)
+        logits = transformer.logits_from_hidden(params, x, cfg, self.mesh)[:, 0]
+        return logits, new_cache
+
+    # -- cache allocation ----------------------------------------------------
+    def empty_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.family == "rwkv":
+            c = rwkv6.empty_cache(cfg, batch, dtype)
+            return rwkv6.RWKVLayerCache(
+                state=jnp.zeros((cfg.n_layers, *c.state.shape), jnp.float32),
+                shift_att=jnp.zeros((cfg.n_layers, *c.shift_att.shape), dtype),
+                shift_ffn=jnp.zeros((cfg.n_layers, *c.shift_ffn.shape), dtype),
+            )
+        if cfg.family == "hybrid":
+            return zamba2.empty_cache(cfg, batch, max_len, dtype)
+        lc = attention.empty_cache(cfg, batch, max_len, dtype)
+        L = cfg.n_layers
+        return DecoderKVCache(
+            k=jnp.zeros((L, *lc.k.shape), dtype),
+            v=jnp.zeros((L, *lc.v.shape), dtype),
+        )
+
+    def cache_specs(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.empty_cache(batch, max_len))

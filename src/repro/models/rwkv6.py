@@ -1,0 +1,351 @@
+"""RWKV-6 "Finch": attention-free token mixing with data-dependent decay.
+
+Recurrence per head (r,k,v ∈ R^N rows, state S ∈ R^{N×N}):
+
+    y_t = r_t · (S_{t-1} + (u ∘ k_t)^T v_t)
+    S_t = diag(w_t) · S_{t-1} + k_t^T v_t          w_t = exp(-exp(ŵ_t)) ∈ (0,1)
+
+The sequence form used for training/prefill is *chunked*: within a chunk all
+pairwise decays D[t,s] = ∏_{u=s+1}^{t-1} w_u are computed from cumulative
+log-decays as exp(non-positive), so nothing overflows; across chunks a
+(B,H,N,N) fp32 state is carried by lax.scan.  This is the pure-JAX oracle the
+``repro.kernels.rwkv6_scan`` Pallas kernel is validated against.
+
+Block layout follows the RWKV-6 paper: time-mix with data-dependent lerp
+(LoRA-produced mixes for r,k,v,w,g), decay LoRA, per-head GroupNorm, and a
+squared-ReLU channel-mix.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+DECAY_LORA = 64
+MIX_LORA = 32
+
+
+class RWKVLayerCache(NamedTuple):
+    state: jax.Array        # (B, H, N, N) fp32 wkv state
+    shift_att: jax.Array    # (B, d) previous token (time-mix shift)
+    shift_ffn: jax.Array    # (B, d) previous token (channel-mix shift)
+
+
+def init_rwkv_layer(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d, f = cfg.d_model, cfg.d_ff
+    N = cfg.rwkv_head_dim
+    H = d // N
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+        # token-shift mixes (static part) + shared data-dependent LoRA
+        "mu": 0.5 * jnp.ones((5, d), dtype),            # r,k,v,w,g
+        "mu_x": 0.5 * jnp.ones((d,), dtype),
+        "mix_w1": layers.dense_init(ks[0], (d, 5 * MIX_LORA), dtype, scale=0.01),
+        "mix_w2": layers.dense_init(ks[1], (5, MIX_LORA, d), dtype, scale=0.01),
+        # projections
+        "wr": layers.dense_init(ks[2], (d, d), dtype),
+        "wk": layers.dense_init(ks[3], (d, d), dtype),
+        "wv": layers.dense_init(ks[4], (d, d), dtype),
+        "wg": layers.dense_init(ks[5], (d, d), dtype),
+        "wo": layers.dense_init(ks[6], (d, d), dtype),
+        # decay: w = w0 + tanh(x_w A) B ; bonus u
+        "w0": jnp.full((d,), -2.0, dtype),
+        "decay_a": layers.dense_init(ks[7], (d, DECAY_LORA), dtype, scale=0.01),
+        "decay_b": layers.dense_init(ks[8], (DECAY_LORA, d), dtype, scale=0.01),
+        "u": jnp.zeros((d,), dtype),
+        "ln_x_w": jnp.ones((d,), jnp.float32),
+        "ln_x_b": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_mu_k": 0.5 * jnp.ones((d,), dtype),
+        "cm_mu_r": 0.5 * jnp.ones((d,), dtype),
+        "cm_wk": layers.dense_init(ks[9], (d, f), dtype),
+        "cm_wv": layers.dense_init(ks[10], (f, d), dtype),
+        "cm_wr": layers.dense_init(ks[11], (d, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked WKV scan (sequence form)
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(
+    r: jax.Array,        # (B, S, H, N)
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,     # (B, S, H, N) log-decay, <= 0
+    u: jax.Array,        # (H, N)
+    state0: jax.Array,   # (B, H, N, N) fp32
+    chunk: int = 64,
+    sub: int = 16,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,N), final_state (B,H,N,N)).
+
+    Two-level chunking (§Perf iteration 1): the naive chunk form
+    materializes a (C,C,N) pairwise-decay tensor per chunk — at rwkv6-7b
+    train shapes that tensor dominated HLO HBM traffic (roofline memory
+    term ≈ 958 s).  Splitting each chunk into ``sub``-blocks lets
+    off-diagonal work run as plain N-contraction matmuls with per-pair
+    boundary renormalization exp(a_t − cum_jend)·exp(cum_jend − cum_s)
+    (both factors ≤ 1 ⇒ overflow-free), leaving only (sub,sub,N) diagonal
+    tensors — a 16-32× cut in scan-path HBM bytes.
+    """
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    sub = min(sub, chunk)
+    if chunk % sub != 0:
+        sub = chunk        # odd chunk: single diagonal block (small-S path)
+    ns = chunk // sub
+
+    def to_chunks(x):
+        return x.reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))   # (nc, B, H, C, N)
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(S_prev, inputs):
+        rb, kb, vb, wb = inputs                         # (B, H, C, N)
+        cum = jnp.cumsum(wb, axis=2)                    # inclusive
+        a = cum - wb                                    # decay chunk-start -> t (excl.)
+        r_dec = rb * jnp.exp(a)
+        y_inter = jnp.einsum("bhtn,bhnm->bhtm", r_dec, S_prev)
+
+        # --- intra-chunk, two-level ---------------------------------------
+        r4 = rb.reshape(B, H, ns, sub, N)
+        k4 = kb.reshape(B, H, ns, sub, N)
+        v4 = vb.reshape(B, H, ns, sub, N)
+        a4 = a.reshape(B, H, ns, sub, N)
+        cum4 = cum.reshape(B, H, ns, sub, N)
+        cum_end = cum4[:, :, :, -1, :]                  # (B,H,ns,N)
+
+        # off-diagonal (key sub-block j strictly before query sub-block i):
+        # att[i,j] = (r ∘ e^{a_t − cumend_j}) · (k ∘ e^{cumend_j − cum_s})
+        pair_ok = jnp.tril(jnp.ones((ns, ns), bool), k=-1)   # j < i
+        expo = a4[:, :, :, None, :, :] - cum_end[:, :, None, :, None, :]
+        expo = jnp.where(pair_ok[None, None, :, :, None, None], expo, -jnp.inf)
+        rmod = r4[:, :, :, None] * jnp.exp(expo)            # (B,H,i,j,t,N)
+        kmod = k4 * jnp.exp(cum_end[:, :, :, None, :] - cum4)   # (B,H,j,s,N)
+        att_off = jnp.einsum("bhijtn,bhjsn->bhijts", rmod, kmod)
+        y_off = jnp.einsum("bhijts,bhjsm->bhitm", att_off, v4)
+
+        # diagonal sub-blocks: small (sub,sub,N) pairwise tensors
+        Dd = jnp.exp(a4[:, :, :, :, None, :] - cum4[:, :, :, None, :, :])
+        tri = jnp.tril(jnp.ones((sub, sub), bool), k=-1)
+        Dd = jnp.where(tri[None, None, None, :, :, None], Dd, 0.0)
+        att_d = jnp.einsum("bhitn,bhitsn,bhisn->bhits", r4, Dd, k4)
+        y_diag = jnp.einsum("bhits,bhism->bhitm", att_d, v4)
+
+        y_intra = (y_off + y_diag).reshape(B, H, chunk, N)
+        y_bonus = jnp.einsum("bhtn,bhtn->bht", rb * uf[None, :, None, :], kb)[..., None] * vb
+        # state to chunk end: decay from s+1..C  (all <= 1)
+        dec_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,H,C,N)
+        S_new = jnp.exp(cum[:, :, -1, :])[..., None] * S_prev + jnp.einsum(
+            "bhsn,bhsm->bhnm", kb * dec_end, vb
+        )
+        return S_new, y_inter + y_intra + y_bonus
+
+    state, yc = lax.scan(chunk_step, state0.astype(jnp.float32), (rc, kc, vc, wc))
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return y, state
+
+
+def wkv_decode(r, k, v, logw, u, state):
+    """Single-step recurrence. r,k,v,logw: (B,H,N); state (B,H,N,N) fp32."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]            # (B,H,N,N)
+    y = jnp.einsum("bhn,bhnm->bhm", rf, state + uf[None, :, :, None] * kv)
+    state_new = jnp.exp(wf)[..., None] * state + kv
+    return y, state_new
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift mixes for (r, k, v, w, g)."""
+    base = x + sx * p["mu_x"]
+    lora = jnp.einsum(
+        "bsd,dr->bsr", base, p["mix_w1"]
+    )
+    lora = jnp.tanh(lora.astype(jnp.float32)).astype(x.dtype)
+    lora = lora.reshape(*lora.shape[:-1], 5, MIX_LORA)
+    mw = jnp.einsum("bsir,ird->bsid", lora, p["mix_w2"])  # (B,S,5,d)
+    mixes = p["mu"][None, None] + mw
+    return x[:, :, None, :] + sx[:, :, None, :] * mixes    # (B,S,5,d)
+
+
+def _time_mix_common(p, xn, sx, cfg: ModelConfig):
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    B, S, _ = xn.shape
+    mixed = _ddlerp(p, xn, sx)
+    xr, xk, xv, xw, xg = (mixed[:, :, i, :] for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]).astype(jnp.float32))
+    # data-dependent decay (log-space, <= ~-e^w0)
+    wln = p["w0"] + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_a"]).astype(jnp.float32)),
+        p["decay_b"].astype(jnp.float32),
+    )
+    logw = -jnp.exp(wln.astype(jnp.float32)).reshape(B, S, H, N)
+    return r, k, v, g, logw, H, N
+
+
+def time_mix(p, x, cfg: ModelConfig, cache: RWKVLayerCache = None, mesh=None):
+    """Sequence form. Returns (out, new_cache_state)."""
+    B, S, d = x.shape
+    xn = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    prev = jnp.zeros((B, 1, d), xn.dtype) if cache is None else cache.shift_att[:, None].astype(xn.dtype)
+    x_shift = jnp.concatenate([prev, xn[:, :-1]], axis=1)
+    sx = x_shift - xn
+    r, k, v, g, logw, H, N = _time_mix_common(p, xn, sx, cfg)
+    # pin scan-input shardings (see mamba2.py / EXPERIMENTS.md §Perf)
+    r = layers.shard_batch_heads(r, mesh)
+    k = layers.shard_batch_heads(k, mesh)
+    v = layers.shard_batch_heads(v, mesh)
+    logw = layers.shard_batch_heads(logw, mesh)
+    state0 = (
+        jnp.zeros((B, H, N, N), jnp.float32) if cache is None else cache.state
+    )
+    if cfg.use_pallas:
+        from repro.kernels.rwkv6_scan.ops import wkv6
+
+        y, state = wkv6(r, k, v, logw, p["u"].reshape(H, N), state0)
+    else:
+        y, state = wkv_chunked(r, k, v, logw, p["u"].reshape(H, N), state0)
+    y = y.reshape(B, S, d)
+    y = layers.group_norm(y, p["ln_x_w"], p["ln_x_b"], H)
+    out = jnp.einsum("bsd,de->bse", (y.astype(jnp.float32) * g).astype(x.dtype), p["wo"])
+    return out, (state, xn[:, -1])
+
+
+def channel_mix(p, x, cfg: ModelConfig, cache: RWKVLayerCache = None):
+    B, S, d = x.shape
+    xn = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    prev = jnp.zeros((B, 1, d), xn.dtype) if cache is None else cache.shift_ffn[:, None].astype(xn.dtype)
+    x_shift = jnp.concatenate([prev, xn[:, :-1]], axis=1)
+    sx = x_shift - xn
+    xk = xn + sx * p["cm_mu_k"]
+    xr = xn + sx * p["cm_mu_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"]).astype(jnp.float32))
+    return (rr * vv.astype(jnp.float32)).astype(x.dtype), xn[:, -1]
+
+
+def rwkv_layer(p, x, cfg: ModelConfig, cache: RWKVLayerCache = None, mesh=None):
+    """Full RWKV layer (sequence form). Returns (x, new_cache)."""
+    att, (state, shift_a) = time_mix(p, x, cfg, cache, mesh)
+    x = x + att
+    ffn, shift_f = channel_mix(p, x, cfg, cache)
+    x = x + ffn
+    return x, RWKVLayerCache(state=state, shift_att=shift_a, shift_ffn=shift_f)
+
+
+def rwkv_layer_decode(p, x, cfg: ModelConfig, cache: RWKVLayerCache):
+    """Single-token step. x: (B, 1, d)."""
+    B, _, d = x.shape
+    N = cfg.rwkv_head_dim
+    H = d // N
+    xn = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    sx = cache.shift_att[:, None].astype(xn.dtype) - xn
+    r, k, v, g, logw, H, N = _time_mix_common(p, xn, sx, cfg)
+    y, state = wkv_decode(
+        r[:, 0], k[:, 0], v[:, 0], logw[:, 0], p["u"].reshape(H, N), cache.state
+    )
+    y = y.reshape(B, 1, d)
+    y = layers.group_norm(y, p["ln_x_w"], p["ln_x_b"], H)
+    att = jnp.einsum("bsd,de->bse", (y.astype(jnp.float32) * g).astype(x.dtype), p["wo"])
+    x = x + att
+    shift_a = xn[:, -1]
+
+    xn2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    sx2 = cache.shift_ffn[:, None].astype(xn2.dtype) - xn2
+    xk = xn2 + sx2 * p["cm_mu_k"]
+    xr = xn2 + sx2 * p["cm_mu_r"]
+    kk = jnp.square(
+        jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_wk"]).astype(jnp.float32))
+    ).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_wr"]).astype(jnp.float32))
+    x = x + (rr * vv.astype(jnp.float32)).astype(x.dtype)
+    return x, RWKVLayerCache(state=state, shift_att=shift_a, shift_ffn=xn2[:, -1])
+
+
+# ---------------------------------------------------------------------------
+# stacked-layer runners (two-level scan, √L remat — see transformer.py)
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_params(key: jax.Array, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": layers.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": jax.vmap(lambda k: init_rwkv_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": layers.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def run_rwkv_seq(params, x, cfg: ModelConfig, mesh=None, *, return_cache: bool = False):
+    from repro.models.transformer import factor_layers
+
+    L = cfg.n_layers
+    G, Lg = factor_layers(L, cfg.scan_group)
+    grouped = jax.tree.map(lambda a: a.reshape(G, Lg, *a.shape[1:]), params["layers"])
+
+    def layer_body(x, lp):
+        x, cache = rwkv_layer(lp, x, cfg, None, mesh)
+        return x, cache if return_cache else None
+
+    def group_body(x, gp):
+        return lax.scan(jax.checkpoint(layer_body), x, gp)
+
+    x, caches = lax.scan(
+        jax.checkpoint(group_body) if cfg.remat else group_body, x, grouped
+    )
+    if return_cache and caches is not None:
+        caches = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), caches)
+    return x, caches
+
+
+def run_rwkv_decode(params, x, caches: RWKVLayerCache, cfg: ModelConfig):
+    """x: (B,1,d); caches stacked (L, ...)."""
+
+    def body(x, inputs):
+        lp, c = inputs
+        x, nc = rwkv_layer_decode(lp, x, cfg, c)
+        return x, nc
+
+    x, new_caches = lax.scan(body, x, (params["layers"], caches))
+    return x, new_caches
+
+
+def empty_cache(cfg: ModelConfig, batch: int, dtype) -> RWKVLayerCache:
+    d = cfg.d_model
+    N = cfg.rwkv_head_dim
+    H = d // N
+    return RWKVLayerCache(
+        state=jnp.zeros((batch, H, N, N), jnp.float32),
+        shift_att=jnp.zeros((batch, d), dtype),
+        shift_ffn=jnp.zeros((batch, d), dtype),
+    )

@@ -1,0 +1,2 @@
+"""Serving layer: engine replicas + request traces."""
+from repro.serving.engine import DecodeSlots, EngineConfig, ServingEngine  # noqa: F401

@@ -1,0 +1,128 @@
+"""Serving engine: prefill/decode steps, batched generation.
+
+One ``ServingEngine`` is a model-server *replica* — the executable behind a
+deployment unit DU_i = (arch, tier, framework).  The orchestrator (core.*)
+decides how many replicas exist and where traffic goes; this layer executes
+the actual JAX steps.
+
+Design notes
+------------
+* ``serve_prefill`` / ``serve_decode`` are the jitted units the multi-pod
+  dry-run lowers (launch.dryrun): decode carries the KV cache as a donated
+  argument so the compiled step updates it in place.
+* Batched generation uses a fixed decode batch with a greedy/temperature
+  sampler; continuous batching (slot reuse) is in ``DecodeSlots``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+@dataclass
+class EngineConfig:
+    max_len: int = 4096
+    decode_batch: int = 8
+    temperature: float = 0.0        # 0 => greedy
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode, donate_argnums=(2,))
+
+    # -- single-shot steps ----------------------------------------------------
+    def prefill(self, batch: Dict[str, Any]):
+        return self._prefill(self.params, batch)
+
+    def decode(self, tokens, cache, cache_len: int):
+        return self._decode(self.params, tokens, cache, jnp.int32(cache_len))
+
+    # -- batched generation ---------------------------------------------------
+    def generate(
+        self, prompt: Dict[str, Any], steps: int, prompt_len: int
+    ) -> np.ndarray:
+        """Greedy/temperature generation for a fixed batch of prompts.
+
+        ``prompt['inputs']`` is (B, S_prompt); returns (B, steps) tokens.
+        """
+        model, cfg = self.model, self.cfg
+        B = jax.tree.leaves(prompt)[0].shape[0]
+        logits, pcache = self.prefill(prompt)
+        cache = self._expand_cache(pcache, B, prompt_len)
+        key = jax.random.key(self.cfg.seed)
+        out = []
+        cache_len = prompt_len
+        tok = self._sample(logits, key)
+        for i in range(steps):
+            out.append(np.asarray(tok))
+            logits, cache = self.decode(tok[:, None], cache, cache_len)
+            cache_len += 1
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature).astype(jnp.int32)
+
+    def _expand_cache(self, pcache, batch: int, prompt_len: int):
+        """Pad the prefill cache into the fixed decode buffer."""
+        buf = self.model.empty_cache(batch, self.cfg.max_len)
+
+        def place(b, c):
+            if b.shape == c.shape:
+                return c
+            # KV-style: pad along the sequence axis (axis 2 of (L,B,S,...))
+            idx = tuple([slice(0, s) for s in c.shape])
+            return b.at[idx].set(c.astype(b.dtype))
+
+        return jax.tree.map(place, buf, pcache)
+
+
+class DecodeSlots:
+    """Continuous batching: fixed decode slots, per-slot request ids.
+
+    The engine decodes a full (B_slots) batch every step; finished or empty
+    slots are refilled from the queue (prefill on admit).  Slot occupancy is
+    what utilization metrics report to the autoscaler.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.request_id = np.full(n_slots, -1, dtype=np.int64)
+        self.remaining = np.zeros(n_slots, dtype=np.int64)
+
+    @property
+    def free(self) -> np.ndarray:
+        return np.nonzero(self.request_id < 0)[0]
+
+    @property
+    def occupancy(self) -> float:
+        return float(np.mean(self.request_id >= 0))
+
+    def admit(self, slot: int, request_id: int, new_tokens: int) -> None:
+        self.request_id[slot] = request_id
+        self.remaining[slot] = new_tokens
+
+    def step(self) -> list:
+        """Advance one decode step; returns request ids that finished."""
+        active = self.request_id >= 0
+        self.remaining[active] -= 1
+        done = np.nonzero(active & (self.remaining <= 0))[0]
+        finished = self.request_id[done].tolist()
+        self.request_id[done] = -1
+        return finished

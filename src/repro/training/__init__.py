@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, checkpointing, data."""
+from repro.training import checkpoint, data, optimizer, train_step  # noqa: F401

@@ -1,0 +1,123 @@
+"""AdamW in pure JAX, with ZeRO-compatible dtype policies.
+
+Optimizer state is created leaf-for-leaf from the parameter tree, so when
+parameters are FSDP×TP sharded the moments inherit the same sharding — the
+ZeRO-1 layout falls out of the partitioner with no extra machinery.
+
+Dtype policy (DESIGN.md §5): update math is always fp32; storage dtypes are
+configurable so ≥100B archs can run bf16 moments (validated in tests to track
+fp32 within tolerance for smoke-scale runs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"        # "bfloat16" for ≥100B archs
+    stacked_update_dtype: str = "float32"  # "bfloat16": halves the per-leaf
+                                           # update transients for stacked
+                                           # layer weights (llama3 §Perf)
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array                # scalar int32
+    m: Any                         # first moments (tree like params)
+    v: Any                         # second moments
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def update(
+    grads, state: AdamWState, params, cfg: AdamWConfig
+) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip > 0 else 1.0
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def leaf_math(p, g, m, v, wdt=jnp.float32):
+        gf = g.astype(wdt) * jnp.asarray(clip, wdt)
+        mf = (b1 * m.astype(wdt) + (1 - b1) * gf)
+        vf = (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32)))
+        mhat = mf.astype(jnp.float32) / bc1
+        vhat = vf / bc2
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, mf.astype(mdt), vf.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    # Chain leaf updates through an optimization barrier: without it XLA
+    # schedules all leaf updates concurrently and materializes fp32 copies
+    # of every stacked weight at once (~10 GB/device for llama3-405b —
+    # EXPERIMENTS.md §Dry-run memory notes).  Serializing lets the buffer
+    # assigner reuse one fp32 scratch across leaves.
+    out = []
+    token = jnp.zeros((), jnp.float32)
+    order = sorted(range(len(flat_p)), key=lambda i: -flat_p[i].size)
+    results = [None] * len(flat_p)
+    for i in order:
+        p, g, m, v = flat_p[i], flat_g[i], flat_m[i], flat_v[i]
+        p, g, m, v, _ = jax.lax.optimization_barrier((p, g, m, v, token))
+        wdt = (jnp.dtype(cfg.stacked_update_dtype)
+               if (p.ndim >= 3 and p.shape[0] > 4) else jnp.float32)
+        new_p, new_m, new_v = leaf_math(p, g, m, v, wdt)
+        token = new_m.reshape(-1)[0].astype(jnp.float32) * 0.0
+        results[i] = (new_p, new_m, new_v)
+    out = results
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (
+        new_params,
+        AdamWState(step=step, m=new_m, v=new_v),
+        {"grad_norm": gnorm, "lr": lr},
+    )

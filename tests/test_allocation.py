@@ -1,0 +1,72 @@
+"""Exact-allocator tests: greedy LP vs brute force (Eqs. 1-3)."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.allocation import (
+    brute_force_integral,
+    heuristic_allocation,
+    optimal_fractional,
+    optimal_integral,
+)
+
+pos = st.floats(min_value=0.5, max_value=50.0)
+
+
+@st.composite
+def instances(draw):
+    n = draw(st.integers(2, 4))
+    cost = [draw(pos) for _ in range(n)]
+    t = [draw(pos) for _ in range(n)]
+    pool = [draw(st.integers(0, 5)) for _ in range(n)]
+    demand = draw(st.floats(min_value=0.0, max_value=100.0))
+    return cost, t, pool, demand
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_integral_matches_brute_force_when_feasible(inst):
+    cost, t, pool, demand = inst
+    bf = brute_force_integral(cost, t, pool, demand, cap=5)
+    greedy = optimal_integral(cost, t, pool, demand)
+    assert greedy.feasible == bf.feasible
+    if bf.feasible:
+        # greedy+trim is near-optimal; allow one marginal-replica of slack
+        worst_unit = max(c for c in cost)
+        assert greedy.cost_rate <= bf.cost_rate + worst_unit + 1e-6
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_fractional_lower_bounds_integral(inst):
+    cost, t, pool, demand = inst
+    frac = optimal_fractional(cost, t, pool, demand)
+    integ = optimal_integral(cost, t, pool, demand)
+    if integ.feasible:
+        assert frac.feasible
+        assert frac.cost_rate <= integ.cost_rate + 1e-6
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_capacity_never_exceeded(inst):
+    cost, t, pool, demand = inst
+    for alloc in (
+        optimal_fractional(cost, t, pool, demand),
+        optimal_integral(cost, t, pool, demand),
+    ):
+        assert np.all(np.asarray(alloc.replicas) <= np.asarray(pool) + 1e-9)
+        assert np.all(np.asarray(alloc.replicas) >= 0)
+
+
+def test_paper_instance_optimal_prefers_inf2():
+    """With Table-1 DUs, the cheapest-per-RPS unit (inf2) fills first."""
+    from repro.configs.sd21 import paper_deployment_units
+
+    dus = paper_deployment_units()
+    cph = [d.cost_per_hour for d in dus]
+    tmax = [d.t_max for d in dus]
+    alloc = optimal_fractional(cph, tmax, [10] * 5, demand=500.0)
+    assert alloc.feasible
+    assert alloc.replicas[0] > 0          # inf2 used
+    assert alloc.replicas[4] == 0         # most expensive (g5-cuda) untouched

@@ -1,0 +1,118 @@
+"""Checkpoint/restart fault-tolerance contract."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as ckpt
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "opt": {"m": jnp.ones((8, 16)) * 0.5, "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    state = _state()
+    ckpt.save(d, state, step=3)
+    restored, step = ckpt.restore_latest(d, jax.eval_shape(lambda: state))
+    assert step == 3
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        state, restored,
+    )
+
+
+def test_latest_picks_newest_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 5, 9, 12):
+        ckpt.save(d, _state(s), step=s, keep=2)
+    assert ckpt.available_steps(d) == [9, 12]
+    _, step = ckpt.restore_latest(d, jax.eval_shape(lambda: _state()))
+    assert step == 12
+
+
+def test_crash_mid_write_ignored(tmp_path):
+    """A .tmp dir (simulated crash) must not be restored."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, _state(1), step=1)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    with open(os.path.join(d, "step_00000009.tmp", "leaf_00000.npy"), "wb") as f:
+        f.write(b"garbage")
+    _, step = ckpt.restore_latest(d, jax.eval_shape(lambda: _state()))
+    assert step == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, _state(), step=1)
+    bad_like = {
+        "params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                   "b": jax.ShapeDtypeStruct((16,), jnp.float32)},
+        "opt": {"m": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+    with pytest.raises(ValueError):
+        ckpt.restore(os.path.join(d, "step_00000001"), bad_like)
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ac = ckpt.AsyncCheckpointer(d, keep=2)
+    for s in (1, 2, 3):
+        ac.save(_state(s), step=s)
+    ac.wait()
+    assert ckpt.available_steps(d) == [2, 3]
+    restored, step = ckpt.restore_latest(d, jax.eval_shape(lambda: _state()))
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(_state(3)["params"]["w"])
+    )
+
+
+def test_training_resume_determinism(tmp_path):
+    """Restart from step k reproduces the uninterrupted run exactly."""
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.models import Model
+    from repro.training import optimizer as opt
+    from repro.training.data import DataConfig, batch_for_step
+    from repro.training.train_step import make_train_step
+
+    cfg = get_config("qwen3-0.6b").reduce()
+    shape = InputShape("tiny", "train", 32, 4)
+    dcfg = DataConfig(seed=7, accum_steps=2)
+    model = Model(cfg)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1)
+    step_fn = jax.jit(make_train_step(model, ocfg))
+
+    params = model.init(jax.random.key(0))
+    state = opt.init(params, ocfg)
+    d = str(tmp_path / "ck")
+
+    # run 4 steps, checkpoint at 2
+    for s in range(4):
+        batch = batch_for_step(cfg, shape, dcfg, s)
+        params, state, _ = step_fn(params, state, batch)
+        if s == 1:
+            ckpt.save(d, {"params": params, "opt": state}, step=s + 1)
+    ref = jax.tree.leaves(params)[0]
+
+    # restart from checkpoint, replay steps 2..3
+    like = jax.eval_shape(lambda: {"params": params, "opt": state})
+    restored, start = ckpt.restore_latest(d, like)
+    p2, s2 = restored["params"], restored["opt"]
+    for s in range(start, 4):
+        batch = batch_for_step(cfg, shape, dcfg, s)
+        p2, s2, _ = step_fn(p2, s2, batch)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(p2)[0], np.float32),
+        np.asarray(ref, np.float32), atol=1e-6,
+    )

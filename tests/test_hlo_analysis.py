@@ -1,0 +1,121 @@
+"""The HLO cost analyzer must be exact on programs with known FLOPs —
+including nested scans and remat (this is what the roofline table rests on)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.launch.hlo_analysis import analyze_text
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_plain_matmul():
+    c = _compile(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 256), jnp.float32),
+    )
+    t = analyze_text(c.as_text())
+    assert t.flops == 2 * 64 * 128 * 256
+
+
+def test_scan_multiplies_by_trip_count():
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        return lax.scan(body, x, ws)[0]
+
+    c = _compile(
+        f,
+        jax.ShapeDtypeStruct((5, 128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    )
+    t = analyze_text(c.as_text())
+    assert t.flops == 5 * 2 * 64 * 128 * 128
+
+
+def test_nested_scan():
+    def f(ws, x):
+        def outer(x, wg):
+            def inner(x, w):
+                return jnp.tanh(x @ w), ()
+            return lax.scan(inner, x, wg)[0], ()
+        return lax.scan(outer, x, ws.reshape(2, 3, 128, 128))[0]
+
+    c = _compile(
+        f,
+        jax.ShapeDtypeStruct((6, 128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    )
+    t = analyze_text(c.as_text())
+    assert t.flops == 6 * 2 * 64 * 128 * 128
+
+
+def test_grad_roughly_triples_flops():
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        return lax.scan(body, x, ws)[0].sum()
+
+    c = _compile(
+        jax.grad(f),
+        jax.ShapeDtypeStruct((5, 128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    )
+    t = analyze_text(c.as_text())
+    assert t.flops == 3 * 5 * 2 * 64 * 128 * 128
+
+
+def test_remat_adds_one_forward():
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        return lax.scan(jax.checkpoint(body), x, ws)[0].sum()
+
+    c = _compile(
+        jax.grad(f),
+        jax.ShapeDtypeStruct((5, 128, 128), jnp.float32),
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+    )
+    t = analyze_text(c.as_text())
+    assert t.flops == 4 * 5 * 2 * 64 * 128 * 128
+
+
+def test_collectives_counted_with_trip_counts():
+    import subprocess, sys, os, textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax import lax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_analysis import analyze_text
+        mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        def f(ws, x):
+            def body(x, w):
+                return jax.nn.relu(x @ w), ()
+            return lax.scan(body, x, ws)[0]
+        ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+        x = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+        with mesh:
+            c = jax.jit(f, in_shardings=(
+                NamedSharding(mesh, P(None, 'data', 'model')),
+                NamedSharding(mesh, P('data', None)),
+            )).lower(ws, x).compile()
+        t = analyze_text(c.as_text())
+        assert t.collective_bytes > 0, 'no collectives found'
+        assert t.collective_count >= 5, t.collective_count   # per-iteration AGs
+        print('OK', t.collective_count, t.collective_bytes)
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,218 @@
+"""Pallas kernel validation: interpret-mode sweeps over shapes/dtypes vs the
+pure-jnp oracles (the per-kernel allclose contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(128, 128), (512, 1024), (256, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_residual", [True, False])
+def test_rmsnorm_kernel(shape, dtype, with_residual):
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+    M, d = shape
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (M, d), dtype)
+    w = jax.random.normal(jax.random.key(1), (d,), dtype)
+    r = jax.random.normal(jax.random.key(2), (M, d), dtype) if with_residual else None
+    o1, s1 = rmsnorm_pallas(x, w, r, block_rows=128, interpret=True)
+    o2, s2 = rmsnorm_ref(x, w, r)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=_tol(dtype), rtol=1e-2
+    )
+    np.testing.assert_allclose(
+        np.asarray(s1, np.float32), np.asarray(s2, np.float32), atol=_tol(dtype), rtol=1e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,H,D", [(256, 4, 64), (128, 2, 128), (512, 1, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 96])
+def test_flash_attention_kernel(S, H, D, causal, window):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B = 2
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    o1 = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=64, block_k=64, interpret=True
+    )
+    o2 = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B, S, H, D = 1, 256, 2, 64
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    o1 = flash_attention_pallas(q, k, v, block_q=128, block_k=128, interpret=True)
+    o2 = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_matches_model_chunked_attention():
+    """The model's lax chunked attention and the Pallas kernel agree."""
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.models.layers import chunked_attention
+
+    B, S, H, D = 2, 256, 4, 64
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    o1 = flash_attention_pallas(q, k, v, block_q=64, block_k=64, interpret=True)
+    o2 = chunked_attention(q, k, v, q_chunk=64, k_chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,Hkv,G,D", [(512, 2, 4, 64), (256, 1, 8, 128), (1024, 4, 1, 64)])
+def test_decode_attention_kernel(S, Hkv, G, D):
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    B = 3
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lengths = jnp.array([S, S // 2, 7], jnp.int32)
+    o1 = decode_attention_pallas(q, k, v, lengths, block_k=128, interpret=True)
+    o2 = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+def test_decode_matches_model_decode_attention():
+    from repro.kernels.decode_attention.kernel import decode_attention_pallas
+    from repro.models.layers import decode_attention
+
+    B, S, Hkv, G, D = 2, 256, 2, 2, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lengths = jnp.array([100, 200], jnp.int32)
+    o1 = decode_attention_pallas(q, k, v, lengths, block_k=64, interpret=True)
+    o2 = decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,H,N,chunk", [(128, 2, 32, 32), (256, 1, 64, 64), (64, 4, 16, 16)])
+def test_wkv6_kernel(S, H, N, chunk):
+    from repro.kernels.rwkv6_scan.kernel import wkv6_pallas
+    from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+    B = 2
+    ks = jax.random.split(jax.random.key(4), 6)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.5)
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, N, N)).astype(jnp.float32)
+    y1, st1 = wkv6_pallas(r, k, v, logw, u, s0, chunk=chunk, interpret=True)
+    y2, st2 = wkv6_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=5e-4, rtol=1e-3)
+
+
+def test_wkv6_matches_model_chunked():
+    """Kernel == the model's wkv_chunked oracle (same chunk math)."""
+    from repro.kernels.rwkv6_scan.kernel import wkv6_pallas
+    from repro.models.rwkv6 import wkv_chunked
+
+    B, S, H, N = 1, 128, 2, 32
+    ks = jax.random.split(jax.random.key(6), 5)
+    r = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.5)
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    y1, st1 = wkv6_pallas(r, k, v, logw, u, s0, chunk=32, interpret=True)
+    y2, st2 = wkv_chunked(r, k, v, logw, u.reshape(H, N), s0, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=5e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,H,P,N,chunk", [(128, 2, 16, 24, 32), (256, 1, 64, 64, 128), (64, 3, 32, 16, 64)])
+def test_ssd_kernel(S, H, P, N, chunk):
+    from repro.kernels.ssd_scan.kernel import ssd_pallas
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    B = 2
+    ks = jax.random.split(jax.random.key(7), 6)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    s0 = jax.random.normal(ks[5], (B, H, P, N)).astype(jnp.float32)
+    y1, st1 = ssd_pallas(x, dt, A, Bm, Cm, s0, chunk=chunk, interpret=True)
+    y2, st2 = ssd_ref(x, dt, A, Bm, Cm, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=5e-4, rtol=1e-3)
+
+
+def test_ssd_state_continuity():
+    """Splitting a sequence across two kernel calls == one call."""
+    from repro.kernels.ssd_scan.kernel import ssd_pallas
+
+    B, S, H, P, N = 1, 128, 2, 16, 16
+    ks = jax.random.split(jax.random.key(8), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    y_full, st_full = ssd_pallas(x, dt, A, Bm, Cm, s0, chunk=32, interpret=True)
+    h = S // 2
+    y1, st1 = ssd_pallas(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h], s0, chunk=32, interpret=True)
+    y2, st2 = ssd_pallas(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:], st1, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), atol=5e-4, rtol=1e-3)

@@ -1,0 +1,56 @@
+"""Launcher smoke tests: train CLI (with crash/resume) and serve CLI."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900, check=True):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run(
+        [sys.executable, "-m"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+    if check:
+        assert p.returncode == 0, p.stderr[-3000:]
+    return p
+
+
+def test_train_cli_with_resume(tmp_path):
+    base = [
+        "repro.launch.train", "--arch", "qwen3-0.6b", "--reduced",
+        "--steps", "30", "--seq-len", "64", "--global-batch", "4",
+        "--accum", "2", "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+    ]
+    p = _run(base + ["--simulate-failure-at", "25"], check=False)
+    assert p.returncode == 17
+    p = _run(base)
+    assert "resumed from step 20" in p.stdout
+    assert "done" in p.stdout
+
+
+def test_serve_cli_paper_dus():
+    p = _run([
+        "repro.launch.serve", "--paper-dus", "--duration", "120",
+        "--demand", "300", "--outage", "40:80", "--execute-samples", "2",
+    ])
+    assert "summary:" in p.stdout
+    assert "real decode tokens" in p.stdout
+
+
+def test_serve_cli_roofline_dus():
+    """Roofline-derived DU profiles from the dry-run artifacts (if present)."""
+    results = os.path.join(REPO, "results", "dryrun")
+    import glob
+
+    if not glob.glob(os.path.join(results, "qwen3-0.6b__decode_32k__single.json")):
+        import pytest
+
+        pytest.skip("no dry-run artifact yet")
+    p = _run([
+        "repro.launch.serve", "--arch", "qwen3-0.6b", "--duration", "60",
+        "--demand", "200", "--execute-samples", "0",
+    ])
+    assert "tpu-v5e" in p.stdout or "falling back" in p.stdout

@@ -1,0 +1,150 @@
+"""Integration tests of the full control loop (simulator-level behavior —
+the paper's §5 claims as assertions)."""
+import numpy as np
+import pytest
+
+from repro.configs.sd21 import paper_deployment_units
+from repro.core import policy
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.capacity import CapacityPool, synthetic_limit, synthetic_outage
+from repro.core.controller import ControllerConfig, ModeController
+from repro.core.router import queue_latency, route
+from repro.core.simulator import ClusterSimulator, SimConfig, bursty, diurnal_cycle, steady
+
+
+def _pools(n=5, cap=20, delay=10.0):
+    return [CapacityPool(base_capacity=cap, provision_delay_s=delay) for _ in range(n)]
+
+
+def test_steady_state_availability():
+    dus = paper_deployment_units()
+    sim = ClusterSimulator(dus, _pools(), steady(400.0), SimConfig(duration_s=900))
+    s = sim.run().summary()
+    assert s["availability"] > 0.97          # only cold-start drops
+    assert s["cost_mode_fraction"] > 0.95    # healthy => cost-optimized
+    assert s["p95_latency_s"] < 2.0
+
+
+def test_failover_and_fallback():
+    """Fig. 7: outage => capacity mode + no availability collapse; recovery
+    => cost mode."""
+    dus = paper_deployment_units()
+    pools = _pools()
+    pools[0].events.append(synthetic_outage(300, 600))
+    sim = ClusterSimulator(dus, pools, steady(400.0), SimConfig(duration_s=900))
+    log = sim.run()
+    modes = np.array([r.mode for r in log.records])
+    served = np.array([r.served_rps.sum() for r in log.records])
+    # capacity mode engaged during the outage
+    assert np.mean(modes[320:580] == policy.CAPACITY_OPTIMIZED) > 0.9
+    # traffic kept flowing (no inf2) — shortfall bounded
+    assert served[320:580].mean() > 0.95 * 400.0
+    # reverted after recovery
+    assert np.mean(modes[700:] == policy.COST_OPTIMIZED) > 0.9
+
+
+def test_cost_mode_is_cheaper_than_capacity_mode():
+    """The paper's premise: Eq.(5) weights blend to the harmonic mean of
+    per-unit costs (≤ uniform's arithmetic mean), so at demand large enough
+    to amortize replica quantization, cost mode is strictly cheaper.
+    (At SMALL demand ceil() noise can invert this — quantified in
+    benchmarks/beyond_paper.py against the LP optimum.)"""
+    dus = paper_deployment_units()
+
+    class ForcedUniform(ModeController):
+        def step(self, *a, **k):
+            d = super().step(*a, **k)
+            d.weights = np.asarray(policy.capacity_weights(np.ones(5, bool)))
+            return d
+
+    results = {}
+    for name, ctrl_cls in (("cost", ModeController), ("uniform", ForcedUniform)):
+        sim = ClusterSimulator(
+            dus, _pools(cap=80), steady(3000.0), SimConfig(duration_s=900)
+        )
+        sim.controller = ctrl_cls(dus, ControllerConfig())
+        s = sim.run().summary()
+        results[name] = s
+    assert results["cost"]["availability"] >= results["uniform"]["availability"] - 0.01
+    assert results["cost"]["cost_per_1k"] < results["uniform"]["cost_per_1k"]
+    # continuum prediction: harmonic vs arithmetic mean of Table-1 costs
+    cpi = np.array([d.cost_per_inference for d in dus])
+    hm = len(cpi) / np.sum(1.0 / cpi)
+    am = float(np.mean(cpi))
+    ratio = results["cost"]["cost_per_1k"] / results["uniform"]["cost_per_1k"]
+    assert abs(ratio - hm / am) < 0.12
+
+
+def test_autoscaler_tracks_demand():
+    a = Autoscaler(target_metric_value=80.0, config=AutoscalerConfig())
+    assert a.desired(0.0, 400.0) == 5
+    assert a.desired(10.0, 800.0) == 10
+    # scale-down held within the stabilization window
+    assert a.desired(20.0, 80.0) == 10
+    assert a.desired(200.0, 80.0) == 1
+
+
+def test_capacity_pool_provisioning_delay():
+    p = CapacityPool(base_capacity=10, provision_delay_s=30.0)
+    p.request(0.0, 4)
+    assert p.tick(0.0) == 0
+    assert p.tick(29.0) == 0
+    assert p.tick(30.0) == 4
+    # forced shortfall reclaims
+    p.events.append(synthetic_limit(40, 50, limit=1))
+    assert p.tick(45.0) == 1
+    assert p.tick(55.0) == 1      # reclaimed replicas don't come back alone
+    p.request(55.0, 4)
+    assert p.tick(90.0) == 4
+
+
+def test_router_spillover_and_drops():
+    ready = np.array([1, 1, 0])
+    t_max = np.array([100.0, 50.0, 80.0])
+    lat = np.array([0.5, 0.5, 0.5])
+    w = np.array([0.2, 0.2, 0.6])   # 60% aimed at a dead pool
+    rr = route(200.0, w, ready, t_max, lat)
+    # dead pool's traffic spilled onto live pools up to their capacity
+    assert rr.served.sum() == pytest.approx(150.0)   # 100 + 50
+    assert rr.dropped == pytest.approx(50.0)
+    assert rr.served[2] == 0.0
+
+
+def test_queue_latency_knee():
+    """Latency flat at low load, knee near saturation (Fig. 4 shape)."""
+    base = 0.67
+    lat_lo = queue_latency(base, 0.2, servers=4)
+    lat_mid = queue_latency(base, 0.7, servers=4)
+    lat_hi = queue_latency(base, 0.98, servers=4)
+    assert lat_lo < base * 1.1
+    assert lat_mid < base * 1.6
+    assert lat_hi > base * 2.0
+
+
+def test_bursty_demand_no_collapse():
+    dus = paper_deployment_units()
+    sim = ClusterSimulator(
+        dus, _pools(cap=40), bursty(300.0, 500.0, 180, 40, seed=1),
+        SimConfig(duration_s=1200),
+    )
+    s = sim.run().summary()
+    assert s["availability"] > 0.90
+
+
+def test_hysteresis_reduces_flapping():
+    """Beyond-paper: hysteresis + dwell removes mode flapping near the
+    capacity edge."""
+    dus = paper_deployment_units()
+
+    def run(ctrl):
+        pools = _pools(cap=3, delay=5.0)
+        sim = ClusterSimulator(
+            dus, pools, bursty(500.0, 450.0, 60, 20, seed=5),
+            SimConfig(duration_s=1200, controller=ctrl),
+        )
+        return sim.run().summary()["mode_switches"]
+
+    faithful = run(ControllerConfig())
+    damped = run(ControllerConfig(hysteresis_margin=0.2, min_dwell_s=120.0,
+                                  demand_ewma_alpha=0.2))
+    assert damped <= faithful

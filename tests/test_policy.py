@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for the paper's §3 policy math."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import policy
+
+finite_floats = st.floats(min_value=1e-4, max_value=1e4, allow_nan=False)
+
+
+@st.composite
+def du_arrays(draw, n_min=1, n_max=8):
+    n = draw(st.integers(n_min, n_max))
+    cost = draw(st.lists(finite_floats, min_size=n, max_size=n))
+    t_max = draw(st.lists(finite_floats, min_size=n, max_size=n))
+    avail = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    return (
+        jnp.array(cost, jnp.float32),
+        jnp.array(t_max, jnp.float32),
+        jnp.array(avail, bool),
+    )
+
+
+@given(du_arrays())
+@settings(max_examples=100, deadline=None)
+def test_cost_weights_simplex(arrs):
+    cost, t_max, avail = arrs
+    w = np.asarray(policy.cost_weights(cost, avail))
+    assert np.all(w >= 0)
+    assert np.all(w[~np.asarray(avail)] == 0), "unavailable units must get 0"
+    if np.any(np.asarray(avail)):
+        assert abs(w.sum() - 1.0) < 1e-3
+    else:
+        assert w.sum() == 0
+
+
+@given(du_arrays(n_min=2))
+@settings(max_examples=100, deadline=None)
+def test_cost_weights_ordering(arrs):
+    """Cheaper available units never get less weight (Eq. 5 monotonicity)."""
+    cost, t_max, avail = arrs
+    w = np.asarray(policy.cost_weights(cost, avail))
+    c = np.asarray(cost)
+    av = np.asarray(avail)
+    idx = np.nonzero(av)[0]
+    for i in idx:
+        for j in idx:
+            if c[i] < c[j]:
+                assert w[i] >= w[j] - 1e-5
+
+
+@given(du_arrays())
+@settings(max_examples=100, deadline=None)
+def test_capacity_weights_uniform(arrs):
+    _, _, avail = arrs
+    w = np.asarray(policy.capacity_weights(avail))
+    av = np.asarray(avail)
+    n = av.sum()
+    if n:
+        assert np.allclose(w[av], 1.0 / n, atol=1e-5)
+    assert np.all(w[~av] == 0)
+
+
+@given(du_arrays())
+@settings(max_examples=100, deadline=None)
+def test_t_adjusted_clipping(arrs):
+    """Eq. 8: adjusted throughput never exceeds T_max nor the target."""
+    _, t_max, avail = arrs
+    adj = np.asarray(policy.t_adjusted(t_max, avail))
+    tgt = float(policy.t_target(t_max, avail))
+    av = np.asarray(avail)
+    assert np.all(adj[av] <= np.asarray(t_max)[av] + 1e-3)
+    assert np.all(adj[av] <= tgt + 1e-3)
+    assert np.all(adj[~av] == 0)
+
+
+def test_paper_table2_exact():
+    t_max = jnp.array([105.0, 130.0, 90.0, 61.0, 60.0])
+    avail = jnp.ones(5, bool)
+    adj = np.asarray(policy.t_adjusted(t_max, avail))
+    assert np.allclose(adj, [89.2, 89.2, 89.2, 61.0, 60.0], atol=0.05)
+
+
+@given(du_arrays(), st.floats(min_value=0.0, max_value=1e5))
+@settings(max_examples=100, deadline=None)
+def test_switch_consistency(arrs, demand):
+    """Mode is COST iff both Eq.(2) and Eq.(3) hold for requested=pool."""
+    cost, t_max, avail = arrs
+    pool = jnp.where(avail, 3, 0)
+    requested = pool  # fully provisioned
+    mode = int(policy.switch_mode(requested, pool, t_max, jnp.float32(demand)))
+    supply = float(jnp.sum((requested * t_max).astype(jnp.float32)))
+    if abs(supply - demand) <= 1e-4 * max(abs(demand), 1.0):
+        return  # f32-vs-f64 comparison boundary: either mode is acceptable
+    if supply >= demand:
+        assert mode == policy.COST_OPTIMIZED
+    else:
+        assert mode == policy.CAPACITY_OPTIMIZED
+
+
+@given(du_arrays(), st.floats(min_value=1.0, max_value=1e4))
+@settings(max_examples=50, deadline=None)
+def test_selected_weights_match_mode(arrs, demand):
+    cost, t_max, avail = arrs
+    mode = jnp.int32(policy.CAPACITY_OPTIMIZED)
+    w = np.asarray(policy.select_weights(mode, cost, avail))
+    assert np.allclose(w, np.asarray(policy.capacity_weights(avail)), atol=1e-6)
+    mode = jnp.int32(policy.COST_OPTIMIZED)
+    w = np.asarray(policy.select_weights(mode, cost, avail))
+    assert np.allclose(w, np.asarray(policy.cost_weights(cost, avail)), atol=1e-6)
+
+
+def test_paper_table1_cost_column():
+    from repro.configs.sd21 import PAPER_COST_PER_INFERENCE, paper_deployment_units
+
+    for du in paper_deployment_units():
+        paper = PAPER_COST_PER_INFERENCE[du.name]
+        assert abs(du.cost_per_inference - paper) / paper < 0.02

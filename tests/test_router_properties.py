@@ -1,0 +1,66 @@
+"""Hypothesis property tests on the router + simulator conservation laws."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.router import queue_latency, route
+
+pos = st.floats(min_value=0.1, max_value=500.0)
+
+
+@st.composite
+def route_instances(draw):
+    n = draw(st.integers(1, 6))
+    w = np.array([draw(st.floats(min_value=0.0, max_value=1.0)) for _ in range(n)])
+    w = w / w.sum() if w.sum() > 0 else np.full(n, 1.0 / n)
+    ready = np.array([draw(st.integers(0, 5)) for _ in range(n)])
+    t_max = np.array([draw(pos) for _ in range(n)])
+    lat = np.array([draw(st.floats(min_value=0.05, max_value=2.0)) for _ in range(n)])
+    demand = draw(st.floats(min_value=0.0, max_value=2000.0))
+    return demand, w, ready, t_max, lat
+
+
+@given(route_instances())
+@settings(max_examples=150, deadline=None)
+def test_route_conserves_traffic(inst):
+    """served + dropped == demand (no requests invented or lost)."""
+    demand, w, ready, t_max, lat = inst
+    rr = route(demand, w, ready, t_max, lat)
+    total = float(rr.served.sum()) + rr.dropped
+    assert abs(total - demand) < 1e-6 * max(demand, 1.0) + 1e-6
+
+
+@given(route_instances())
+@settings(max_examples=150, deadline=None)
+def test_route_capacity_never_exceeded(inst):
+    """No pool serves beyond ready × T_max."""
+    demand, w, ready, t_max, lat = inst
+    rr = route(demand, w, ready, t_max, lat)
+    mu = ready * t_max
+    assert np.all(rr.served <= mu + 1e-6)
+    assert np.all(rr.served >= -1e-9)
+    assert np.all(rr.utilization <= 1.0 + 1e-9)
+
+
+@given(route_instances())
+@settings(max_examples=100, deadline=None)
+def test_route_no_unnecessary_drops(inst):
+    """Drops occur only when the whole fleet is saturated."""
+    demand, w, ready, t_max, lat = inst
+    rr = route(demand, w, ready, t_max, lat)
+    fleet = float((ready * t_max).sum())
+    if rr.dropped > 1e-6:
+        assert float(rr.served.sum()) >= fleet - 1e-6
+
+
+@given(st.floats(min_value=0.01, max_value=5.0),
+       st.floats(min_value=0.0, max_value=0.999),
+       st.integers(1, 64))
+@settings(max_examples=150, deadline=None)
+def test_queue_latency_monotone(base, rho, servers):
+    """Latency ≥ base, increasing in ρ, decreasing in server count."""
+    lat = queue_latency(base, rho, servers)
+    assert lat >= base - 1e-9
+    if rho < 0.99:
+        assert queue_latency(base, rho + 0.009, servers) >= lat - 1e-9
+    assert queue_latency(base, rho, servers + 1) <= lat + 1e-9

@@ -1,0 +1,191 @@
+"""Training substrate tests: optimizer math, data determinism, loss descent,
+fault tolerance, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.models import Model
+from repro.training import optimizer as opt
+from repro.training.data import DataConfig, PrefetchIterator, batch_for_step
+from repro.training.train_step import make_train_step
+
+
+def test_adamw_matches_reference():
+    """Our AdamW equals a hand-rolled reference on a toy problem."""
+    cfg = opt.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                          grad_clip=0.0, warmup_steps=1, decay_steps=10**9)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, -0.2, 0.3])}
+    state = opt.init(p, cfg)
+    new_p, state, _ = opt.update(g, state, p, cfg)
+    m = 0.1 * np.array([0.1, -0.2, 0.3])
+    v = 0.01 * np.array([0.1, -0.2, 0.3]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    lr1 = opt.lr_at(cfg, jnp.int32(1))
+    expect = np.array([1.0, -2.0, 3.0]) - np.asarray(lr1) * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-5)
+
+
+def test_grad_clip_bounds_update():
+    cfg = opt.AdamWConfig(grad_clip=1.0)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(p, cfg)
+    _, _, metrics = opt.update(g, state, p, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_bf16_moments_track_fp32():
+    """bf16 moments (the ≥100B policy) stay within tolerance of fp32."""
+    key = jax.random.key(0)
+    p = {"w": jax.random.normal(key, (64, 64))}
+    runs = {}
+    for mdt in ("float32", "bfloat16"):
+        cfg = opt.AdamWConfig(lr=1e-2, moment_dtype=mdt, warmup_steps=1)
+        params = jax.tree.map(jnp.copy, p)
+        state = opt.init(params, cfg)
+        for i in range(10):
+            g = jax.tree.map(lambda x: jnp.sin(x + i), params)
+            params, state, _ = opt.update(g, state, params, cfg)
+        runs[mdt] = params["w"]
+    rel = float(jnp.linalg.norm(runs["bfloat16"] - runs["float32"])
+                / jnp.linalg.norm(runs["float32"]))
+    assert rel < 0.05, rel
+
+
+def test_loss_descends_small_model():
+    """A few hundred optimizer steps on a tiny memorization task."""
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=10, decay_steps=300)
+    params = model.init(jax.random.key(0))
+    state = opt.init(params, ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    toks = jax.random.randint(jax.random.key(1), (1, 4, 33), 0, cfg.vocab_size)
+    batch = {"inputs": toks[..., :-1], "targets": toks[..., 1:]}
+    first = None
+    for i in range(60):
+        params, state, metrics = step(params, state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+    last = float(metrics["loss"])
+    assert last < first * 0.5, (first, last)
+
+
+def test_accumulation_equivalence():
+    """A=4 microbatches == A=1 with the same total batch (grad averaging)."""
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(2), (8, 33), 0, cfg.vocab_size)
+    b1 = {"inputs": toks[None, :, :-1], "targets": toks[None, :, 1:]}
+    b4 = {"inputs": toks.reshape(4, 2, 33)[..., :-1],
+          "targets": toks.reshape(4, 2, 33)[..., 1:]}
+    step = jax.jit(make_train_step(model, ocfg))
+    p1, _, m1 = step(params, opt.init(params, ocfg), b1)
+    p4, _, m4 = step(params, opt.init(params, ocfg), b4)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p4)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_data_determinism_and_prefetch():
+    cfg = get_config("qwen3-0.6b").reduce()
+    shape = InputShape("t", "train", 16, 8)
+    dcfg = DataConfig(seed=3, accum_steps=2)
+    a = batch_for_step(cfg, shape, dcfg, 5)
+    b = batch_for_step(cfg, shape, dcfg, 5)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    it = PrefetchIterator(cfg, shape, dcfg, start_step=5, prefetch=2)
+    step, batch = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(batch["inputs"], a["inputs"])
+    it.close()
+
+
+def test_step_guard_retries_and_skips():
+    from repro.distributed.fault_tolerance import StepGuard
+
+    calls = {"n": 0}
+
+    def flaky_step(x):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return x, None, {"loss": jnp.float32(1.0)}
+
+    guard = StepGuard(max_retries=1, max_skips=2)
+    out = guard.run(flaky_step, 42)
+    assert out[0] == 42 and calls["n"] == 2
+
+    def always_bad(x):
+        raise RuntimeError("dead")
+
+    assert guard.run(always_bad, 1) is None
+    assert guard.skipped == 1
+    with pytest.raises(RuntimeError):
+        guard.run(always_bad, 1)
+        guard.run(always_bad, 1)
+
+
+def test_straggler_policy():
+    from repro.distributed.fault_tolerance import StragglerPolicy
+
+    sp = StragglerPolicy(factor=3.0)
+    assert not sp.observe(1.0)
+    for _ in range(5):
+        assert not sp.observe(1.1)
+    assert sp.observe(10.0)
+    assert sp.flagged == 1
+
+
+def test_heartbeat_monitor():
+    from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+    hb = HeartbeatMonitor(deadline_s=10.0)
+    hb.beat(0, t=0.0)
+    hb.beat(1, t=0.0)
+    hb.beat(1, t=8.0)
+    assert hb.dead(t=11.0) == [0]
+    assert hb.alive(t=11.0) == [1]
+
+
+def test_error_feedback_compression_converges():
+    """Error feedback: accumulated compressed grads ≈ accumulated true grads."""
+    from repro.distributed.compression import make_ef_transform
+
+    init_fn, transform = make_ef_transform("int8")
+    g_like = {"w": jnp.zeros((32, 32))}
+    state = init_fn(g_like)
+    rng = np.random.default_rng(0)
+    total_true = np.zeros((32, 32), np.float32)
+    total_comp = np.zeros((32, 32), np.float32)
+    f = jax.jit(transform)
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)}
+        total_true += np.asarray(g["w"])
+        out, state = f(g, state)
+        total_comp += np.asarray(out["w"])
+    rel = np.linalg.norm(total_comp - total_true) / np.linalg.norm(total_true)
+    assert rel < 0.02, rel
+
+
+def test_elastic_mesh_shrink():
+    from repro.distributed.fault_tolerance import elastic_mesh
+
+    m = elastic_mesh(1, model_parallel=1)
+    assert m.devices.size == 1
+    assert m.axis_names == ("data", "model")
+
+
+def test_int8_quantization_roundtrip():
+    from repro.distributed.compression import dequantize_int8, quantize_int8
+
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((16, 64)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(dequantize_int8(q, s) - x)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
