@@ -48,16 +48,62 @@ def run() -> List[Row]:
                  f"gflops_per_s={flops/us/1e3:.1f}"))
 
     # decode attention ref
-    from repro.kernels.decode_attention.ref import decode_attention_ref
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_ref,
+        decode_attention_splitk_ref,
+    )
 
     kc = jax.random.normal(key, (4, 4096, 4, 64), jnp.float32)
     vc = jax.random.normal(jax.random.key(3), (4, 4096, 4, 64), jnp.float32)
     qd = jax.random.normal(jax.random.key(4), (4, 16, 64), jnp.float32)
     lens = jnp.array([4096, 2048, 1024, 100], jnp.int32)
     f = jax.jit(lambda q, k, v, l: decode_attention_ref(q, k, v, l))
-    us = time_us(lambda: jax.block_until_ready(f(qd, kc, vc, lens)), iters=10)
-    rows.append(("kernels/decode_attention_ref_4k", us,
-                 f"cache_gb_per_s={2*kc.nbytes/us/1e3:.1f}"))
+    us_dec = time_us(lambda: jax.block_until_ready(f(qd, kc, vc, lens)), iters=10)
+    rows.append(("kernels/decode_attention_ref_4k", us_dec,
+                 f"cache_gb_per_s={2*kc.nbytes/us_dec/1e3:.1f}"))
+
+    # split-K flash decoding (two-stage) on the same 4k cache — the
+    # decomposition the Pallas split-K kernel implements tile-wise
+    f_sk = jax.jit(lambda q, k, v, l: decode_attention_splitk_ref(q, k, v, l, k_splits=4))
+    us_sk = time_us(lambda: jax.block_until_ready(f_sk(qd, kc, vc, lens)), iters=10)
+    rows.append(("kernels/decode_splitk_4k", us_sk,
+                 f"k_splits=4,speedup_vs_singlepass={us_dec/us_sk:.2f}x"))
+
+    # fused scanned generation vs the seed per-step python loop
+    # (B=8, steps=64, reduced qwen3-0.6b — the acceptance row: >=2x)
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, EngineConfig(max_len=128))
+    B, P, steps = 8, 16, 64
+    prompt = {"inputs": jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)}
+
+    us_scan = time_us(
+        lambda: eng.generate(prompt, steps=steps, prompt_len=P), iters=3, warmup=1
+    )
+
+    def perstep_loop():
+        logits, pcache = eng.prefill(prompt)
+        cache = eng._expand_cache(pcache, B, P)
+        k = jax.random.key(0)
+        tok = eng._sample(logits, k)
+        out, clen = [], P
+        for _ in range(steps):
+            out.append(np.asarray(tok))            # per-token host sync
+            logits, cache = eng.decode(tok[:, None], cache, clen)
+            clen += 1
+            k, sub = jax.random.split(k)
+            tok = eng._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    us_loop = time_us(perstep_loop, iters=3, warmup=1)
+    tok_s = B * steps / (us_scan / 1e6)
+    rows.append(("kernels/generate_tokens_per_s", us_scan,
+                 f"tok_per_s={tok_s:.0f},speedup_vs_perstep={us_loop/us_scan:.1f}x"))
 
     # rwkv6 chunked vs naive scan (chunking is the kernel's algorithm)
     from repro.models.rwkv6 import wkv_chunked

@@ -126,7 +126,9 @@ def compressed_psum(tree, mesh, axis: str = "pod"):
 
     leaves, treedef = jax.tree.flatten(tree)
     specs = tuple(P(*(None,) * leaf.ndim) for leaf in leaves)
-    out = jax.shard_map(
+    from repro.jax_compat import shard_map
+
+    out = shard_map(
         body, mesh=mesh, in_specs=specs, out_specs=specs, check_vma=False
     )(*leaves)
     return treedef.unflatten(list(out))

@@ -1,0 +1,31 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The repo targets the newest jax (top-level ``jax.shard_map``,
+``jax.sharding.AxisType``) but must also run on jax 0.4.x containers where
+those names live elsewhere or do not exist.  Keep every version gate in this
+one module so call sites stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with a fallback to the 0.4.x experimental API.
+
+    Newer jax spells the replication-check flag ``check_vma``; the
+    experimental version spells it ``check_rep``.  Both default to the
+    permissive setting here because our bodies do explicit psums.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        except TypeError:  # pre-rename top-level export
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -1,20 +1,51 @@
-"""Public jit'd wrapper for the flash-decoding kernel."""
+"""Public jit'd wrapper for the flash-decoding kernels.
+
+``decode_attention`` dispatches between the single-stage kernel (short
+caches: grid is already wide enough at B·Hkv) and the two-stage split-K
+kernel (long caches: B·Hkv·K grid cells walk KV chunks concurrently).
+``k_splits=0`` picks the split automatically from the cache length.
+"""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas,
+    decode_attention_splitk,
+)
+
+# caches at/above this length get the split-K treatment by default
+SPLITK_MIN_S = 2048
+SPLITK_MAX = 8
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("block_k",))
-def decode_attention(q, k_cache, v_cache, lengths, *, block_k=512):
+def auto_k_splits(S: int, block_k: int = 512) -> int:
+    """Largest split ≤ SPLITK_MAX whose chunk is a whole number of blocks."""
+    if S < SPLITK_MIN_S:
+        return 1
+    for k in range(min(SPLITK_MAX, S // block_k), 1, -1):
+        if S % k == 0 and (S // k) % min(block_k, S // k) == 0:
+            return k
+    return 1
+
+
+@partial(jax.jit, static_argnames=("block_k", "k_splits"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k=512, k_splits=0):
     """One-token GQA attention vs (B,S,Hkv,D) cache with per-seq lengths."""
+    S = k_cache.shape[1]
+    if k_splits == 0:
+        k_splits = auto_k_splits(S, block_k)
+    if k_splits > 1:
+        return decode_attention_splitk(
+            q, k_cache, v_cache, lengths,
+            k_splits=k_splits, block_k=block_k, interpret=_interpret(),
+        )
     return decode_attention_pallas(
         q, k_cache, v_cache, lengths, block_k=block_k, interpret=_interpret()
     )

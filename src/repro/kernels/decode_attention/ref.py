@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the decode-attention kernel (GQA, length-masked)."""
+"""Pure-jnp oracles for the decode-attention kernels (GQA, length-masked).
+
+``decode_attention_ref`` is the single-pass softmax; ``decode_attention_
+splitk_ref`` expresses the same math in the two-stage split-K decomposition
+(per-chunk partial (m, l, acc) + log-sum-exp combine) so the Pallas split-K
+kernel has a shape-faithful oracle and the benchmark can measure what the
+decomposition itself buys on a given backend.
+"""
 from __future__ import annotations
 
 import math
@@ -29,4 +36,44 @@ def decode_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def decode_attention_splitk_ref(
+    q: jax.Array,          # (B, Hq, D)
+    k_cache: jax.Array,    # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,    # (B,) int32
+    *,
+    k_splits: int = 4,
+    softmax_scale=None,
+) -> jax.Array:
+    """Two-stage split-K softmax in pure lax: the KV axis is cut into
+    ``k_splits`` chunks, each producing an unnormalized partial state, then
+    merged with the standard max-rescaled combine."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    assert S % k_splits == 0
+    ck = S // k_splits
+
+    qg = q.reshape(B, Hkv, G, D)
+    kb = k_cache.reshape(B, k_splits, ck, Hkv, D)
+    vb = v_cache.reshape(B, k_splits, ck, Hkv, D)
+    s = jnp.einsum("bhgd,bckhd->bchgk", qg, kb,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(k_splits)[:, None] * ck + jnp.arange(ck)[None, :]
+    valid = pos[None] < lengths[:, None, None]                    # (B, C, ck)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                       # (B, C, H, G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bchgk,bckhd->bchgd", p.astype(v_cache.dtype), vb,
+                     preferred_element_type=jnp.float32)
+    m_star = jnp.max(m, axis=1)                                   # (B, H, G)
+    alpha = jnp.exp(m - m_star[:, None])
+    l_star = jnp.sum(l * alpha, axis=1)
+    out = jnp.sum(acc * alpha[..., None], axis=1)
+    out = out / jnp.maximum(l_star, 1e-30)[..., None]
     return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,4 +1,4 @@
-"""Flash attention (prefill/training fwd) as a Pallas TPU kernel.
+"""Flash attention (prefill/training fwd) as a Pallas TPU kernel — GQA-native.
 
 TPU adaptation (DESIGN.md hardware-adaptation notes): the CUDA flash
 algorithm maps warps to score tiles; on TPU the analogue is MXU-shaped
@@ -6,7 +6,13 @@ algorithm maps warps to score tiles; on TPU the analogue is MXU-shaped
 softmax state (m, l, acc) living in VMEM scratch that persists across the
 innermost (KV) grid dimension.
 
-Grid: (B·H, Sq/bq, Sk/bk) — KV innermost so scratch carries per-(bh, q-blk).
+GQA is handled *inside* the kernel: q arrives at full Hq = G·Hkv width but
+k/v stay at Hkv width.  The grid walks (B·Hkv, Sq/bq, Sk/bk) and each step
+loads one (G, bq, D) query group against a single shared (bk, D) KV tile —
+the (G·bq, D)×(D, bk) matmul feeds the MXU one KV read per *group* instead
+of per query head, so KV HBM traffic and VMEM footprint never multiply by
+G (8× for llama3-405b).  G == 1 recovers the plain MHA kernel.
+
 Causal/sliding-window masking is positional (iota over the tile); the causal
 upper triangle of KV blocks is skipped entirely via @pl.when (no MXU work),
 unlike the baseline lax implementation which masks but still multiplies.
@@ -27,7 +33,7 @@ def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref,       # VMEM tiles
     m_ref, l_ref, acc_ref,            # scratch (persist across kv grid dim)
     *,
-    bq: int, bk: int, nk: int,
+    bq: int, bk: int, nk: int, g: int,
     causal: bool, window: int, scale: float, sk_minus_sq: int,
 ):
     qi = pl.program_id(1)
@@ -39,7 +45,7 @@ def _flash_kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # absolute positions of this tile
+    # absolute positions of this tile (shared by all G heads of the group)
     q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + sk_minus_sq
     k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
 
@@ -52,42 +58,44 @@ def _flash_kernel(
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0].astype(jnp.float32)          # (bq, d)
-        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        q = q_ref[0].astype(jnp.float32).reshape(g * bq, -1)   # (G·bq, d)
+        k = k_ref[0].astype(jnp.float32)                       # (bk, d)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ) * scale                                  # (bq, bk)
+        ) * scale                                              # (G·bq, bk)
+        s = s.reshape(g, bq, bk)
         mask = jnp.ones((bq, bk), jnp.bool_)
         if causal:
             mask &= k_pos <= q_pos
         if window > 0:
             mask &= k_pos > q_pos - window
-        s = jnp.where(mask, s, NEG_INF)
+        s = jnp.where(mask[None], s, NEG_INF)
 
-        m_prev = m_ref[...]
+        m_prev = m_ref[...]                                    # (G, bq)
         l_prev = l_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
+        p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1)
         m_ref[...] = m_new
         pv = jax.lax.dot_general(
-            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            p.reshape(g * bq, bk).astype(v_ref.dtype), v_ref[0],
+            (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
-        )
-        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        ).reshape(g, bq, -1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
 
     @pl.when(kj == nk - 1)
     def _finalize():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(
             o_ref.dtype
         )
 
 
 def flash_attention_pallas(
-    q: jax.Array,            # (B, Sq, H, D)
-    k: jax.Array,            # (B, Sk, H, D)
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Sk, Hkv, D); Hkv divides Hq (GQA-native)
     v: jax.Array,
     *,
     causal: bool = True,
@@ -97,44 +105,52 @@ def flash_attention_pallas(
     softmax_scale=None,
     interpret: bool = False,
 ) -> jax.Array:
-    B, Sq, H, D = q.shape
-    Sk = k.shape[1]
-    assert k.shape[2] == H, "expand GQA before the kernel (see models/attention)"
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, f"GQA head mismatch: Hq={Hq} Hkv={Hkv}"
+    G = Hq // Hkv
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
     assert Sq % bq == 0 and Sk % bk == 0
     nq, nk = Sq // bq, Sk // bk
 
-    # (B, S, H, D) -> (B*H, S, D)
-    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    # q: (B, Sq, Hkv·G, D) -> (B·Hkv, G, Sq, D); query head h serves kv head
+    # h // G (the same grouping convention as the decode kernel/ref).
+    qf = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * Hkv, G, Sq, D
+    )
+    # k/v: (B, Sk, Hkv, D) -> (B·Hkv, Sk, D) — never widened to Hq.
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
 
-    grid = (B * H, nq, nk)
+    grid = (B * Hkv, nq, nk)
     kernel = functools.partial(
         _flash_kernel,
-        bq=bq, bk=bk, nk=nk,
+        bq=bq, bk=bk, nk=nk, g=G,
         causal=causal, window=window, scale=scale, sk_minus_sq=Sk - Sq,
     )
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, G, bq, D), lambda bh, qi, kj: (bh, 0, qi, 0)),
             pl.BlockSpec((1, bk, D), lambda bh, qi, kj: (bh, kj, 0)),
             pl.BlockSpec((1, bk, D), lambda bh, qi, kj: (bh, kj, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        out_specs=pl.BlockSpec((1, G, bq, D), lambda bh, qi, kj: (bh, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, Sq, D), q.dtype),
         scratch_shapes=[
-            pltpu_vmem((bq,), jnp.float32),
-            pltpu_vmem((bq,), jnp.float32),
-            pltpu_vmem((bq, D), jnp.float32),
+            pltpu_vmem((G, bq), jnp.float32),
+            pltpu_vmem((G, bq), jnp.float32),
+            pltpu_vmem((G, bq, D), jnp.float32),
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    # (B·Hkv, G, Sq, D) -> (B, Sq, Hq, D)
+    return out.reshape(B, Hkv, G, Sq, D).transpose(0, 3, 1, 2, 4).reshape(
+        B, Sq, Hq, D
+    )
 
 
 def pltpu_vmem(shape, dtype):

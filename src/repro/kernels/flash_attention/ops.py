@@ -1,14 +1,18 @@
 """Public jit'd wrapper for the flash-attention kernel.
 
-Differentiable: forward runs the Pallas kernel; backward recomputes through
-the pure-lax chunked oracle's VJP (flash-style recomputation — no S×S
-residuals are ever stored).
+Accepts GQA-form inputs directly: q at Hq heads, k/v at Hkv heads with
+Hkv | Hq.  The forward kernel maps query groups onto shared KV tiles so the
+expansion never materializes; only the *backward* recompute (which reuses
+the pure-lax chunked oracle's VJP — flash-style recomputation, no S×S
+residuals stored) widens KV, and jax.vjp folds the group gradients back to
+Hkv width automatically.
 """
 from __future__ import annotations
 
 from functools import lru_cache
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
@@ -22,6 +26,10 @@ def _make(causal: bool, window: int, block_q: int, block_k: int):
     from repro.models import layers
 
     def ref(q, k, v):
+        G = q.shape[2] // k.shape[2]
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
         return layers.chunked_attention(
             q, k, v, causal=causal, window=window,
             q_chunk=block_q, k_chunk=block_k,
@@ -47,7 +55,7 @@ def _make(causal: bool, window: int, block_q: int, block_k: int):
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=512, block_k=512):
-    """MHA-form flash attention (expand GQA first). q/k/v: (B,S,H,D)."""
+    """GQA/MHA flash attention. q: (B,S,Hq,D); k/v: (B,S,Hkv,D), Hkv | Hq."""
     S = q.shape[1]
     block_q = min(block_q, S)
     block_k = min(block_k, k.shape[1])

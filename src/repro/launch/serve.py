@@ -72,6 +72,9 @@ def main(argv=None):
                     help="use the paper's SD21 Table-1 profiles")
     ap.add_argument("--execute-samples", type=int, default=4,
                     help="real decode steps executed per 60s of sim time")
+    ap.add_argument("--continuous", action="store_true",
+                    help="run the sample decode through DecodeSlots "
+                         "continuous batching instead of a fixed batch")
     args = ap.parse_args(argv)
 
     from repro.configs.sd21 import paper_deployment_units
@@ -101,8 +104,11 @@ def main(argv=None):
               f"${d.cost_per_hour:.2f}/hr  c_i={d.cost_per_inference:.5f}")
     print("summary:", {k: round(v, 4) for k, v in s.items()})
 
-    # execute REAL decode steps for a sample of routed requests
+    # execute REAL decode steps for a sample of routed requests — the same
+    # fused scan path whose measured tokens/s backs the DU t_max profiles
     if args.execute_samples > 0:
+        import time
+
         import jax
 
         from repro.configs import get_config
@@ -112,15 +118,31 @@ def main(argv=None):
         cfg = get_config(args.arch).reduce()
         model = Model(cfg)
         params = model.init(jax.random.key(0))
-        eng = ServingEngine(model, params, EngineConfig(max_len=64))
-        prompt = {
-            "inputs": jax.numpy.asarray(
-                np.random.default_rng(0).integers(0, cfg.vocab_size, (4, 16))
-            )
-        }
-        toks = eng.generate(prompt, steps=args.execute_samples, prompt_len=16)
-        print(f"executed {toks.size} real decode tokens on replica engine "
-              f"(reduced {args.arch}); sample: {toks[0].tolist()}")
+        eng = ServingEngine(model, params, EngineConfig(max_len=64, decode_batch=4))
+        rng = np.random.default_rng(0)
+        if args.continuous:
+            reqs = [(rng.integers(0, cfg.vocab_size, (1, 16)),
+                     args.execute_samples) for _ in range(4)]
+            t0 = time.perf_counter()
+            res = eng.serve_queue(reqs)
+            dt = time.perf_counter() - t0
+            n = sum(v.size for v in res.values())
+            print(f"continuous batching: {n} tokens over {len(reqs)} requests "
+                  f"in {dt:.3f}s ({n / dt:.1f} tok/s); "
+                  f"sample: {res[0].tolist()}")
+        else:
+            prompt = {
+                "inputs": jax.numpy.asarray(
+                    rng.integers(0, cfg.vocab_size, (4, 16))
+                )
+            }
+            toks = eng.generate(prompt, steps=args.execute_samples, prompt_len=16)
+            t0 = time.perf_counter()
+            toks = eng.generate(prompt, steps=args.execute_samples, prompt_len=16)
+            dt = time.perf_counter() - t0
+            print(f"executed {toks.size} real decode tokens on replica engine "
+                  f"(reduced {args.arch}, {toks.size / dt:.1f} tok/s warm); "
+                  f"sample: {toks[0].tolist()}")
     return log
 
 

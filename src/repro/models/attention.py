@@ -40,13 +40,50 @@ def init_attn_params(key: jax.Array, cfg: ModelConfig, dtype) -> Dict[str, jax.A
     return p
 
 
-def _project_qkv(p, x, cfg: ModelConfig, positions):
+def fuse_qkv_weights(p) -> jax.Array:
+    """Concatenate wq/wk/wv into one (d, qd+2·kvd) matrix.  Called ONCE per
+    decode dispatch on the stacked (L, ...) layer weights — outside the
+    layer scan — so the concat is loop-invariant w.r.t. the token scan and
+    costs nothing per step (see transformer.run_layers_decode)."""
+    return jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=-1)
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, *, fused: bool = False,
+                 wqkv: Optional[jax.Array] = None):
+    """QKV projection.  ``fused=True`` (decode hot path) runs the three
+    projections as ONE matmul — bitwise identical per output column, but a
+    third of the matmul dispatches.  Pass a precomputed ``wqkv``
+    (``fuse_qkv_weights``) when calling from inside a scanned layer loop;
+    otherwise the concat happens here (fine when ``p`` is loop-invariant,
+    e.g. zamba2's single shared attention block)."""
     B = x.shape[0]
     S = x.shape[1]
     hd = cfg.resolved_head_dim
-    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
-    k = jnp.einsum("bsd,dk->bsk", x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
-    v = jnp.einsum("bsd,dk->bsk", x, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    if fused:
+        w = wqkv if wqkv is not None else fuse_qkv_weights(p)
+        qkv = jnp.einsum("bsd,dk->bsk", x, w)
+        q, k, v = jnp.split(qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim], axis=-1)
+        q = q.reshape(B, S, Hq, hd)
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        # one norm+rope pass over the concatenated (Hq+Hkv) head axis —
+        # rms_norm reduces over hd (per head, unaffected by the concat) and
+        # rope depends only on positions; assembling the (H, hd) norm
+        # weight costs two broadcasts + a concat of a tiny tensor.
+        qk = jnp.concatenate([q, k], axis=2)
+        if cfg.qk_norm:
+            wqk = jnp.concatenate([
+                jnp.broadcast_to(p["q_norm"], (Hq, hd)),
+                jnp.broadcast_to(p["k_norm"], (Hkv, hd)),
+            ])
+            qk = layers.rms_norm(qk, wqk, cfg.norm_eps)
+        qk = layers.apply_rope(qk, positions, cfg.rope_theta)
+        q, k = qk[:, :, :Hq], qk[:, :, Hq:]
+        return q, k, v
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(B, S, Hq, hd)
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"]).reshape(B, S, Hkv, hd)
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"]).reshape(B, S, Hkv, hd)
     if cfg.qk_norm:
         q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -73,6 +110,10 @@ def _head_shard_constraint(t: jax.Array, mesh) -> jax.Array:
     )
 
 
+def _tp_degree(mesh) -> int:
+    return mesh.shape["model"] if (mesh is not None and "model" in mesh.axis_names) else 1
+
+
 def _expand_and_pad_heads(q, k, v, cfg: ModelConfig, mesh):
     """GQA→MHA expansion + zero-pad heads to a multiple of the TP degree.
 
@@ -80,13 +121,17 @@ def _expand_and_pad_heads(q, k, v, cfg: ModelConfig, mesh):
     to 64 (14% waste, vs full replication of the score matmuls otherwise).
     Padded q rows are zero ⇒ uniform softmax over garbage v, sliced off
     before the output projection — exactness is unaffected.
+
+    This is the *fallback* layout: the Pallas flash kernel is GQA-native
+    (``_gqa_native_ok``) and keeps KV at Hkv width, so expansion only runs
+    for the pure-lax path and for TP degrees that force q-head padding.
     """
     B, S, Hq, Dh = q.shape
     G = Hq // cfg.n_kv_heads
     if G > 1:
         k = jnp.repeat(k, G, axis=2)
         v = jnp.repeat(v, G, axis=2)
-    tp = mesh.shape["model"] if (mesh is not None and "model" in mesh.axis_names) else 1
+    tp = _tp_degree(mesh)
     Hp = ((Hq + tp - 1) // tp) * tp
     if Hp != Hq:
         pad = [(0, 0), (0, 0), (0, Hp - Hq), (0, 0)]
@@ -97,6 +142,15 @@ def _expand_and_pad_heads(q, k, v, cfg: ModelConfig, mesh):
     k = _head_shard_constraint(k, mesh)
     v = _head_shard_constraint(v, mesh)
     return q, k, v, Hq
+
+
+def _gqa_native_ok(cfg: ModelConfig, mesh) -> bool:
+    """The Pallas kernel can take KV at Hkv width whenever the q heads shard
+    cleanly over TP (KV shards too when Hkv % tp == 0, else it replicates —
+    still Hkv-wide per device, never G× expanded).  Only a TP degree that
+    does not divide Hq (arctic's 56 heads on tp=16) needs the padded
+    MHA-form fallback."""
+    return cfg.n_heads % _tp_degree(mesh) == 0
 
 
 def attention_block(
@@ -121,7 +175,17 @@ def attention_block(
             kc = kc[:, -cfg.sliding_window:]
             vc = vc[:, -cfg.sliding_window:]
         cache = KVCache(k=kc, v=vc)
-    qe, ke, ve, Hq = _expand_and_pad_heads(q, k, v, cfg, mesh)
+    gqa_native = cfg.use_pallas and _gqa_native_ok(cfg, mesh)
+    if gqa_native:
+        # GQA-native kernel: KV stays at Hkv width end to end — no
+        # jnp.repeat, so KV HBM traffic/VMEM never multiply by the group
+        # size (8× for llama3-405b).
+        qe = _head_shard_constraint(q, mesh)
+        ke = _head_shard_constraint(k, mesh)
+        ve = _head_shard_constraint(v, mesh)
+        Hq = qe.shape[2]
+    else:
+        qe, ke, ve, Hq = _expand_and_pad_heads(q, k, v, cfg, mesh)
     if cfg.use_pallas:
         from repro.kernels.flash_attention.ops import flash_attention
 
@@ -149,31 +213,55 @@ def attention_decode(
     p: Dict[str, jax.Array],
     x: jax.Array,                       # (B, 1, d) — one new token
     cache: KVCache,
-    cache_len: jax.Array,               # scalar int32: tokens already cached
+    cache_len: jax.Array,               # scalar int32 OR (B,) per-slot lengths
     cfg: ModelConfig,
+    wqkv: Optional[jax.Array] = None,   # precomputed fuse_qkv_weights(p)
 ) -> Tuple[jax.Array, KVCache]:
-    """One decode step: append to cache (ring for SWA), attend, project."""
+    """One decode step: append to cache (ring for SWA), attend, project.
+
+    ``cache_len`` may be a scalar (fixed-batch generation: every sequence is
+    at the same position) or a (B,) vector (continuous batching: each slot
+    has its own length; writes go to per-slot positions via a vmapped
+    dynamic_update_slice).  With ``cfg.use_pallas`` the attention runs the
+    flash-decoding kernel (length-skipped tiles, split-K for long caches)
+    instead of the dense einsum over the full ``max_len`` cache.
+    """
     B = x.shape[0]
-    hd = cfg.resolved_head_dim
-    positions = jnp.broadcast_to(cache_len, (B, 1)).astype(jnp.int32)
-    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    ragged = cache_len.ndim == 1
+    positions = (
+        cache_len[:, None] if ragged
+        else jnp.broadcast_to(cache_len, (B, 1)).astype(jnp.int32)
+    )
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, fused=True, wqkv=wqkv)
 
     W = cache.k.shape[1]
     if cfg.sliding_window > 0:
         write_at = cache_len % W
         eff_len = jnp.minimum(cache_len + 1, W)
-        swa = True
     else:
         write_at = cache_len
         eff_len = cache_len + 1
-        swa = False
-    k_c = lax.dynamic_update_slice(cache.k, k_new, (0, write_at, 0, 0))
-    v_c = lax.dynamic_update_slice(cache.v, v_new, (0, write_at, 0, 0))
+    if ragged:
+        k_c = jax.vmap(
+            lambda c, n, w: lax.dynamic_update_slice(c, n, (w, 0, 0))
+        )(cache.k, k_new, write_at)
+        v_c = jax.vmap(
+            lambda c, n, w: lax.dynamic_update_slice(c, n, (w, 0, 0))
+        )(cache.v, v_new, write_at)
+    else:
+        k_c = lax.dynamic_update_slice(cache.k, k_new, (0, write_at, 0, 0))
+        v_c = lax.dynamic_update_slice(cache.v, v_new, (0, write_at, 0, 0))
 
-    out = layers.decode_attention(
-        q[:, 0], k_c, v_c, eff_len,
-        window=0 if swa else 0,   # ring buffer already bounds the window
-    )
+    # ring buffer already bounds the SWA window, so only length masking
+    # remains — which is exactly the flash-decoding kernel's contract.
+    if cfg.use_pallas and W % min(512, W) == 0:
+        from repro.kernels.decode_attention.ops import decode_attention as kdecode
+
+        lengths = eff_len if ragged else jnp.broadcast_to(eff_len, (B,))
+        out = kdecode(q[:, 0], k_c, v_c, lengths)
+    else:
+        out = layers.decode_attention(q[:, 0], k_c, v_c, eff_len, window=0)
     out = jnp.einsum("bq,qd->bd", out.reshape(B, cfg.q_dim), p["wo"])[:, None, :]
     return out, KVCache(k=k_c, v=v_c)
 

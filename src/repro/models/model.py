@@ -100,8 +100,13 @@ class Model:
         logits = transformer.logits_from_hidden(params, x[:, -1:], cfg, self.mesh)[:, 0]
         return logits, cache
 
-    def decode(self, params, tokens, cache, cache_len):
-        """tokens: (B,1) i32; cache_len: scalar i32 (tokens already cached).
+    def decode(self, params, tokens, cache, cache_len, fused=None):
+        """tokens: (B,1) i32; cache_len: scalar i32 (tokens already cached)
+        or (B,) per-slot lengths (continuous batching).
+
+        ``fused`` is an optional ``fused_decode_weights(params)`` result —
+        pass it when calling decode inside a token-generation scan so the
+        fused projection matrices are built once per dispatch, not per step.
 
         Returns (logits (B,V), new_cache)."""
         cfg = self.cfg
@@ -114,11 +119,19 @@ class Model:
             )
         else:
             x, nk, nv = transformer.run_layers_decode(
-                params, x, cache.k, cache.v, cache_len, cfg, self.mesh
+                params, x, cache.k, cache.v, cache_len, cfg, self.mesh,
+                fused=fused,
             )
             new_cache = DecoderKVCache(k=nk, v=nv)
         logits = transformer.logits_from_hidden(params, x, cfg, self.mesh)[:, 0]
         return logits, new_cache
+
+    def fused_decode_weights(self, params):
+        """Precomputed decode projection fusions for the scanned hot path
+        (transformer families only; None-able pass-through otherwise)."""
+        if self.cfg.family in ("rwkv", "hybrid"):
+            return None
+        return transformer.fused_decode_weights(params, self.cfg)
 
     # -- cache allocation ----------------------------------------------------
     def empty_cache(self, batch: int, max_len: int):

@@ -202,20 +202,51 @@ def run_layers_seq(
 # ---------------------------------------------------------------------------
 
 
+def fused_decode_weights(params: Dict, cfg: ModelConfig):
+    """Precompute the fused decode projection matrices on the stacked
+    (L, ...) layer leaves: wqkv = [wq|wk|wv] and (swiglu only)
+    w_gu = [w_gate|w_up].
+
+    Call this OUTSIDE the token-generation scan (see ServingEngine) and
+    pass the result to ``run_layers_decode``: the concats then run once per
+    generate dispatch and enter the token loop as invariant operands.
+    Computing them *inside* the loop body (the default when ``fused`` is
+    None — fine for single-step callers) re-materializes the concatenated
+    matrices every token whenever the layer scan is a real while loop,
+    which measurably costs decode throughput."""
+    wqkv = attention.fuse_qkv_weights(params["layers"]["attn"])
+    w_gu = None
+    if not cfg.is_moe and cfg.mlp_type != "gelu":
+        w_gu = layers.fuse_gate_up_weights(
+            params["layers"]["mlp"]["w_gate"], params["layers"]["mlp"]["w_up"]
+        )
+    return {"wqkv": wqkv, "w_gu": w_gu}
+
+
 def run_layers_decode(
     params: Dict,
     x: jax.Array,                # (B, 1, d)
     cache_k: jax.Array,          # (L, B, Sc, Hkv, Dh)
     cache_v: jax.Array,
-    cache_len: jax.Array,        # scalar int32
+    cache_len: jax.Array,        # scalar int32 or (B,)
     cfg: ModelConfig,
     mesh=None,
+    fused: Optional[Dict] = None,   # fused_decode_weights(params, cfg)
 ):
+    if fused is None:
+        fused = fused_decode_weights(params, cfg)
+    xs_w = (
+        fused["wqkv"],
+        fused["w_gu"] if fused["w_gu"] is not None
+        else jnp.zeros((cfg.n_layers, 1), cache_k.dtype),
+    )
+
     def body(x, inputs):
-        lp, ck, cv = inputs
+        lp, ck, cv, wqkv_l, wgu_l = inputs
         h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
         a, new_cache = attention.attention_decode(
-            lp["attn"], h, attention.KVCache(k=ck, v=cv), cache_len, cfg
+            lp["attn"], h, attention.KVCache(k=ck, v=cv), cache_len, cfg,
+            wqkv=wqkv_l,
         )
         x = x + a
         h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -226,11 +257,16 @@ def run_layers_decode(
             hu = jax.nn.gelu(hu.astype(jnp.float32)).astype(h.dtype)
             m = jnp.einsum("...f,fd->...d", hu, lp["mlp"]["w_down"])
         else:
-            m = layers.swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+            m = layers.swiglu_fused(h, wgu_l, lp["mlp"]["w_down"])
         x = x + m
         return x, (new_cache.k, new_cache.v)
 
-    x, (new_k, new_v) = lax.scan(body, x, (params["layers"], cache_k, cache_v))
+    # small unroll: decode bodies are tiny, so the layer loop's while
+    # overhead is material on CPU/small models; 4 keeps HLO size bounded
+    x, (new_k, new_v) = lax.scan(
+        body, x, (params["layers"], cache_k, cache_v, *xs_w),
+        unroll=min(4, cfg.n_layers),
+    )
     return x, new_k, new_v
 
 

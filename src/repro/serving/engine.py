@@ -1,29 +1,48 @@
-"""Serving engine: prefill/decode steps, batched generation.
+"""Serving engine: prefill/decode steps, scanned batched generation.
 
 One ``ServingEngine`` is a model-server *replica* — the executable behind a
 deployment unit DU_i = (arch, tier, framework).  The orchestrator (core.*)
 decides how many replicas exist and where traffic goes; this layer executes
 the actual JAX steps.
 
-Design notes
-------------
-* ``serve_prefill`` / ``serve_decode`` are the jitted units the multi-pod
-  dry-run lowers (launch.dryrun): decode carries the KV cache as a donated
-  argument so the compiled step updates it in place.
-* Batched generation uses a fixed decode batch with a greedy/temperature
-  sampler; continuous batching (slot reuse) is in ``DecodeSlots``.
+Decode-path design
+------------------
+The paper prices every DU by its measured per-replica throughput ``t_max``
+(Eq. 5/6), so engine overhead directly inflates cost-optimized cost and
+shrinks capacity-optimized headroom.  The token loop is therefore fully
+fused:
+
+* ``generate`` runs ONE jitted ``lax.scan`` over the decode steps — the
+  sampler, KV-cache update, and ``cache_len`` advance all live inside the
+  scan body, so a call costs one dispatch and one device→host transfer
+  (the final (B, steps) token block) regardless of ``steps``.  The seed
+  implementation dispatched one jitted decode per token and synced
+  ``np.asarray(tok)`` per token: O(steps) host↔device round trips.
+* ``serve_queue`` is the continuous-batching variant driven by
+  ``DecodeSlots``: fixed decode slots with *per-slot* cache lengths (the
+  (B,) ragged form of ``model.decode``), admission by per-request prefill
+  written into the slot's cache stripe, and decoding in jitted scan chunks
+  of ``chunk`` steps between admission points.  Slots that finish mid-chunk
+  produce discarded tokens until the chunk boundary — chunk-granularity
+  iteration-level scheduling.
+* Sampling semantics (greedy / temperature with a carried split key) are
+  bit-identical to the seed per-step loop, which the fast-path tests
+  assert token-exactly.
+
+The jitted scan donates the KV cache, so the compiled step updates the
+decode buffer in place; ``serve_prefill``/``serve_decode`` remain the units
+the multi-pod dry-run lowers (launch.dryrun).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.configs.base import ModelConfig
 from repro.models.model import Model
 
 
@@ -33,6 +52,8 @@ class EngineConfig:
     decode_batch: int = 8
     temperature: float = 0.0        # 0 => greedy
     seed: int = 0
+    decode_chunk: int = 8           # scan steps between continuous-batching
+                                    # admission points (serve_queue)
 
 
 class ServingEngine:
@@ -42,42 +63,80 @@ class ServingEngine:
         self.cfg = cfg
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
+        self._gen = jax.jit(
+            self._gen_scan, static_argnums=(5,), donate_argnums=(2,)
+        )
+        self._chunk = jax.jit(
+            self._chunk_scan, static_argnums=(5,), donate_argnums=(1,)
+        )
+        self._place = jax.jit(self._place_slot, donate_argnums=(0,))
 
     # -- single-shot steps ----------------------------------------------------
     def prefill(self, batch: Dict[str, Any]):
         return self._prefill(self.params, batch)
 
-    def decode(self, tokens, cache, cache_len: int):
-        return self._decode(self.params, tokens, cache, jnp.int32(cache_len))
+    def decode(self, tokens, cache, cache_len):
+        """One decode step.  ``cache_len``: scalar (fixed batch) or (B,)
+        per-slot lengths (continuous batching)."""
+        return self._decode(self.params, tokens, cache, jnp.asarray(cache_len, jnp.int32))
 
-    # -- batched generation ---------------------------------------------------
+    # -- fused generation -----------------------------------------------------
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature).astype(jnp.int32)
+
+    def _gen_scan(self, params, tok0, cache, cache_len, key, steps: int):
+        """One jitted scan: emits the carried token, decodes, samples next.
+        Greedy mode carries no PRNG key (argmax needs none), and a small
+        unroll amortizes the while-loop overhead of tiny per-step graphs."""
+        greedy = self.cfg.temperature <= 0.0
+        # fused projection weights built ONCE per dispatch, outside the
+        # scan: they enter the while loop as invariant operands instead of
+        # being re-concatenated every token.
+        fused = self.model.fused_decode_weights(params)
+
+        def step(carry, _):
+            tok, cache, clen, key = carry
+            logits, cache = self.model.decode(
+                params, tok[:, None], cache, clen, fused=fused
+            )
+            if not greedy:
+                key, sub = jax.random.split(key)
+                nxt = self._sample(logits, sub)
+            else:
+                nxt = self._sample(logits, key)
+            return (nxt, cache, clen + 1, key), tok
+
+        (_, cache, _, _), toks = lax.scan(
+            step, (tok0, cache, cache_len, key), None, length=steps,
+            unroll=min(4, steps),
+        )
+        return toks.T, cache                      # (B, steps)
+
     def generate(
         self, prompt: Dict[str, Any], steps: int, prompt_len: int
     ) -> np.ndarray:
         """Greedy/temperature generation for a fixed batch of prompts.
 
         ``prompt['inputs']`` is (B, S_prompt); returns (B, steps) tokens.
+        O(1) host↔device transfers: one prefill dispatch, one scan dispatch,
+        one np.asarray of the full token block.
         """
-        model, cfg = self.model, self.cfg
+        if prompt_len + steps > self.cfg.max_len:
+            raise ValueError(
+                f"prompt_len={prompt_len} + steps={steps} exceeds "
+                f"max_len={self.cfg.max_len}"
+            )
         B = jax.tree.leaves(prompt)[0].shape[0]
         logits, pcache = self.prefill(prompt)
         cache = self._expand_cache(pcache, B, prompt_len)
         key = jax.random.key(self.cfg.seed)
-        out = []
-        cache_len = prompt_len
-        tok = self._sample(logits, key)
-        for i in range(steps):
-            out.append(np.asarray(tok))
-            logits, cache = self.decode(tok[:, None], cache, cache_len)
-            cache_len += 1
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, sub)
-        return np.stack(out, axis=1)
-
-    def _sample(self, logits, key):
-        if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.cfg.temperature).astype(jnp.int32)
+        tok0 = self._sample(logits, key)
+        toks, _ = self._gen(
+            self.params, tok0, cache, jnp.int32(prompt_len), key, steps
+        )
+        return np.asarray(toks)
 
     def _expand_cache(self, pcache, batch: int, prompt_len: int):
         """Pad the prefill cache into the fixed decode buffer."""
@@ -91,6 +150,116 @@ class ServingEngine:
             return b.at[idx].set(c.astype(b.dtype))
 
         return jax.tree.map(place, buf, pcache)
+
+    # -- continuous batching (DecodeSlots-driven) ----------------------------
+    def _chunk_scan(self, params, cache, tok, lens, key, steps: int):
+        """Ragged decode chunk: every slot advances ``steps`` tokens with its
+        own cache length; empty/finished slots decode discarded garbage
+        (their writes clamp to the last cache row)."""
+        max_row = jnp.int32(self.cfg.max_len - 1)
+        greedy = self.cfg.temperature <= 0.0
+        fused = self.model.fused_decode_weights(params)
+
+        def step(carry, _):
+            tok, cache, lens, key = carry
+            logits, cache = self.model.decode(
+                params, tok[:, None], cache, lens, fused=fused
+            )
+            if not greedy:
+                key, sub = jax.random.split(key)
+                nxt = self._sample(logits, sub)
+            else:
+                nxt = self._sample(logits, key)
+            return (nxt, cache, jnp.minimum(lens + 1, max_row), key), tok
+
+        (tok, cache, lens, key), toks = lax.scan(
+            step, (tok, cache, lens, key), None, length=steps,
+            unroll=min(4, steps),
+        )
+        return cache, tok, lens, key, toks        # toks: (steps, B)
+
+    def _place_slot(self, cache, pcache, slot):
+        """Write a B=1 prefill cache into slot ``slot`` of the decode buffer.
+
+        Works for every cache family whose leaves carry batch at axis 1
+        (KV: (L,B,S,H,D); SSM/RWKV states: (L,B,...)) — the prefill leaf is
+        placed at a zero offset in every axis except batch."""
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def place(buf, c):
+            start = tuple(
+                slot if a == 1 else jnp.int32(0) for a in range(buf.ndim)
+            )
+            return lax.dynamic_update_slice(buf, c.astype(buf.dtype), start)
+
+        return jax.tree.map(place, cache, pcache)
+
+    def serve_queue(
+        self,
+        requests: Sequence[Tuple[np.ndarray, int]],   # [(inputs (1,Sp), max_new)]
+        *,
+        slots: Optional["DecodeSlots"] = None,
+    ) -> Dict[int, np.ndarray]:
+        """Continuous batching: admit queued requests into free decode slots,
+        decode the full slot batch in jitted scan chunks, refill as requests
+        finish.  Returns {request_index: (max_new,) tokens}.
+
+        Throughput model: one prefill dispatch per admission + one scan
+        dispatch and ONE device→host transfer per ``decode_chunk`` steps —
+        dispatch/sync count is O(requests + total_steps / chunk), never
+        O(total tokens).
+        """
+        n_slots = self.cfg.decode_batch
+        slots = slots if slots is not None else DecodeSlots(n_slots)
+        chunk = max(1, self.cfg.decode_chunk)
+
+        cache = self.model.empty_cache(n_slots, self.cfg.max_len)
+        lens = jnp.zeros((n_slots,), jnp.int32)
+        tok = jnp.zeros((n_slots,), jnp.int32)
+        key = jax.random.key(self.cfg.seed)
+
+        queue: List[Tuple[int, np.ndarray, int]] = []
+        out: Dict[int, List[int]] = {}
+        for rid, (inp, max_new) in enumerate(requests):
+            inp = np.asarray(inp)
+            max_new = int(max_new)
+            out[rid] = []
+            if max_new <= 0:
+                continue                          # nothing to generate
+            if inp.shape[1] + max_new > self.cfg.max_len:
+                raise ValueError(
+                    f"request {rid}: prompt_len={inp.shape[1]} + "
+                    f"max_new={max_new} exceeds max_len={self.cfg.max_len}"
+                )
+            queue.append((rid, inp, max_new))
+        admissions = 0
+
+        while queue or slots.occupancy > 0.0:
+            # admit while there is work and a free slot
+            for s in slots.free:
+                if not queue:
+                    break
+                rid, inp, max_new = queue.pop(0)
+                logits, pcache = self.prefill({"inputs": jnp.asarray(inp)})
+                cache = self._place(cache, pcache, int(s))
+                lens = lens.at[s].set(inp.shape[1])
+                akey = jax.random.fold_in(key, admissions)
+                admissions += 1
+                tok = tok.at[s].set(self._sample(logits, akey)[0])
+                slots.admit(int(s), rid, max_new)
+
+            # decode one chunk for the whole slot batch
+            cache, tok, lens, key, toks = self._chunk(
+                self.params, cache, tok, lens, key, chunk
+            )
+            toks_np = np.asarray(toks)            # ONE transfer per chunk
+            for t in range(chunk):
+                active = np.nonzero(slots.request_id >= 0)[0]
+                for s in active:
+                    out[int(slots.request_id[s])].append(int(toks_np[t, s]))
+                slots.step()
+
+        return {rid: np.asarray(v, np.int64) for rid, v in out.items()}
 
 
 class DecodeSlots:

@@ -1,4 +1,8 @@
 """Exact-allocator tests: greedy LP vs brute force (Eqs. 1-3)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings

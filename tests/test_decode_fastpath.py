@@ -1,0 +1,249 @@
+"""Fast-path coverage for the fused decode pipeline.
+
+Three contracts:
+* scanned ``ServingEngine.generate`` is token-exact vs the seed per-step
+  loop (greedy and temperature sampling with a fixed key);
+* the GQA-native flash kernel equals the ``jnp.repeat``-expanded reference;
+* split-K flash decoding equals ``decode_attention_ref`` across ragged
+  ``lengths`` (and the single-stage kernel).
+Plus the DecodeSlots continuous-batching variant and ragged (B,) cache_len
+decode.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# scanned generation
+# ---------------------------------------------------------------------------
+
+
+def _perstep_reference(eng, model, params, prompt, steps, prompt_len):
+    """The seed implementation: one jitted dispatch + host sync per token."""
+    B = jax.tree.leaves(prompt)[0].shape[0]
+    logits, pcache = eng.prefill(prompt)
+    cache = eng._expand_cache(pcache, B, prompt_len)
+    key = jax.random.key(eng.cfg.seed)
+    tok = eng._sample(logits, key)
+    dec = jax.jit(model.decode)
+    out, cache_len = [], prompt_len
+    for _ in range(steps):
+        out.append(np.asarray(tok))
+        logits, cache = dec(params, tok[:, None], cache, jnp.int32(cache_len))
+        cache_len += 1
+        key, sub = jax.random.split(key)
+        tok = eng._sample(logits, sub)
+    return np.stack(out, axis=1)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_scanned_generate_token_exact(qwen, temperature):
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg, model, params = qwen
+    eng = ServingEngine(
+        model, params, EngineConfig(max_len=64, temperature=temperature, seed=5)
+    )
+    B, P, steps = 2, 16, 8
+    prompt = {"inputs": jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)}
+    fast = eng.generate(prompt, steps=steps, prompt_len=P)
+    ref = _perstep_reference(eng, model, params, prompt, steps, P)
+    assert fast.shape == (B, steps)
+    np.testing.assert_array_equal(fast, ref)
+
+
+def test_serve_queue_continuous_batching(qwen):
+    """Ragged admission/finish over DecodeSlots; single-slot case must equal
+    fixed-batch greedy generate."""
+    from repro.serving import EngineConfig, ServingEngine
+
+    cfg, model, params = qwen
+    eng = ServingEngine(
+        model, params,
+        EngineConfig(max_len=64, decode_batch=3, temperature=0.0, decode_chunk=4),
+    )
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 12)), n) for n in (6, 9, 3, 7, 5)]
+    res = eng.serve_queue(reqs)
+    assert set(res) == set(range(len(reqs)))
+    for rid, (_, n) in enumerate(reqs):
+        assert res[rid].shape == (n,)
+        assert (res[rid] >= 0).all() and (res[rid] < cfg.vocab_size).all()
+
+    solo = ServingEngine(
+        model, params,
+        EngineConfig(max_len=64, decode_batch=1, temperature=0.0, decode_chunk=2),
+    ).serve_queue([(reqs[0][0], 6)])
+    fixed = ServingEngine(
+        model, params, EngineConfig(max_len=64, temperature=0.0)
+    ).generate({"inputs": jnp.asarray(reqs[0][0])}, steps=6, prompt_len=12)
+    np.testing.assert_array_equal(solo[0], fixed[0])
+
+
+def test_ragged_cache_len_matches_scalar(qwen):
+    """(B,) all-equal cache_len must reproduce the scalar decode exactly."""
+    cfg, model, params = qwen
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.key(2), (B, S + 1), 0, cfg.vocab_size)
+    full, _ = jax.jit(model.prefill)(params, {"inputs": toks})
+    _, cache = jax.jit(model.prefill)(params, {"inputs": toks[:, :S]})
+    buf = model.empty_cache(B, S + 8)
+    cache = type(cache)(
+        k=buf.k.at[:, :, :S].set(cache.k), v=buf.v.at[:, :, :S].set(cache.v)
+    )
+    d_scalar, _ = jax.jit(model.decode)(params, toks[:, S:], cache, jnp.int32(S))
+    d_ragged, _ = jax.jit(model.decode)(
+        params, toks[:, S:], cache, jnp.full((B,), S, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(d_ragged), np.asarray(d_scalar), atol=1e-5, rtol=1e-5
+    )
+    assert float(jnp.max(jnp.abs(d_scalar - full))) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# GQA-native flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Hkv,G", [(2, 4), (1, 8), (4, 1), (3, 2)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 96), (False, 0)])
+def test_gqa_native_flash_vs_expanded_ref(Hkv, G, causal, window):
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B, S, D = 2, 256, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv * G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=64, block_k=64,
+        interpret=True,
+    )
+    ref = attention_ref(
+        q, jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2),
+        causal=causal, window=window,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-3)
+
+
+def test_gqa_flash_grad_matches_expanded():
+    """custom_vjp backward folds group grads back to Hkv-width KV."""
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    B, S, Hkv, G, D = 1, 128, 2, 2, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv * G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+
+    def loss_fast(q, k, v):
+        return jnp.sum(jnp.square(flash_attention(q, k, v, block_q=64, block_k=64)))
+
+    def loss_ref(q, k, v):
+        o = attention_ref(q, jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2))
+        return jnp.sum(jnp.square(o))
+
+    g_fast = jax.grad(loss_fast, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_fast, g_ref):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# split-K flash decoding
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k_splits", [2, 4, 8])
+@pytest.mark.parametrize("S,Hkv,G,D", [(1024, 2, 4, 64), (512, 1, 8, 32)])
+def test_splitk_decode_vs_ref(k_splits, S, Hkv, G, D):
+    from repro.kernels.decode_attention.kernel import decode_attention_splitk
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    B = 4
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    # ragged: full, mid-chunk, inside first chunk, nearly empty
+    lengths = jnp.array([S, S // 2 + 17, S // k_splits - 3, 2], jnp.int32)
+    out = decode_attention_splitk(
+        q, k, v, lengths, k_splits=k_splits, block_k=128, interpret=True
+    )
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-3)
+
+
+def test_splitk_matches_single_stage():
+    from repro.kernels.decode_attention.kernel import (
+        decode_attention_pallas,
+        decode_attention_splitk,
+    )
+
+    B, S, Hkv, G, D = 2, 512, 2, 2, 64
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lengths = jnp.array([S, 77], jnp.int32)
+    o1 = decode_attention_splitk(q, k, v, lengths, k_splits=4, block_k=64, interpret=True)
+    o2 = decode_attention_pallas(q, k, v, lengths, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=1e-3)
+
+
+def test_auto_k_splits_contract():
+    from repro.kernels.decode_attention.ops import auto_k_splits
+
+    assert auto_k_splits(1024) == 1          # short cache: single stage
+    for S in (2048, 4096, 32768):
+        k = auto_k_splits(S)
+        assert k > 1 and S % k == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: use_pallas decode path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x22b"])
+def test_pallas_decode_matches_prefill(arch):
+    """attention_decode honors use_pallas (flash-decoding kernel) and stays
+    consistent with prefill — including the mixtral SWA ring cache."""
+    cfg = get_config(arch).reduce()
+    kw = {"use_pallas": True}
+    if cfg.is_moe:
+        kw["capacity_factor"] = 16.0
+    cfg = dataclasses.replace(cfg, **kw)
+    model = Model(cfg)
+    B, S = 2, 32
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0, cfg.vocab_size)
+    full, _ = jax.jit(model.prefill)(params, {"inputs": toks})
+    _, cache = jax.jit(model.prefill)(params, {"inputs": toks[:, :S]})
+    buf = model.empty_cache(B, S + 8)
+    sc = min(cache.k.shape[2], buf.k.shape[2])
+    cache = type(cache)(
+        k=buf.k.at[:, :, :sc].set(cache.k[:, :, :sc]),
+        v=buf.v.at[:, :, :sc].set(cache.v[:, :, :sc]),
+    )
+    dec, _ = jax.jit(model.decode)(params, toks[:, S:], cache, jnp.int32(S))
+    assert float(jnp.max(jnp.abs(dec - full))) < 2e-4

@@ -5,6 +5,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

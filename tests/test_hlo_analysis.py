@@ -97,8 +97,8 @@ def test_collectives_counted_with_trip_counts():
         from jax import lax
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import analyze_text
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(2, 4)
         def f(ws, x):
             def body(x, w):
                 return jax.nn.relu(x @ w), ()

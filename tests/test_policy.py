@@ -1,8 +1,11 @@
 """Property-based tests (hypothesis) for the paper's §3 policy math."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import policy

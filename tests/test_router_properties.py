@@ -1,4 +1,8 @@
 """Hypothesis property tests on the router + simulator conservation laws."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import numpy as np
 from hypothesis import given, settings

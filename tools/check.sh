@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Smoke gate: tier-1 tests + kernel micro-benches.
+# Usage: tools/check.sh   (from the repo root or anywhere)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== kernel benchmarks (smoke) =="
+python -m benchmarks.run --only kernels
+
+echo "check.sh: OK"
