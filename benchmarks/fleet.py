@@ -1,0 +1,70 @@
+"""Fleet-runtime benchmarks: measured goodput of the closed control loop.
+
+Two rows:
+  * ``fleet/goodput_tokens_per_s`` — saturated single-replica fleet vs a
+    bare ``ServingEngine.serve_queue`` over the same burst: the runtime's
+    bookkeeping overhead expressed as a goodput ratio (acceptance: >= 0.5x);
+  * ``fleet/failover_drill`` — the 2-tier outage drill: completion rate,
+    retries survived, and control-loop ticks to drain.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+
+
+def run() -> List[Row]:
+    from repro.configs import get_config
+    from repro.fleet.runtime import build_demo_fleet, build_saturated_fleet
+    from repro.models import Model
+    from repro.serving import EngineConfig, ServingEngine
+
+    rows: List[Row] = []
+
+    # -- goodput at equal replica count ------------------------------------
+    n_req = 32
+    rt = build_saturated_fleet(n_requests=n_req, n_replicas=1, decode_batch=4)
+    reqs = [(r.prompt, r.max_new) for r in rt.workload]
+    t0 = time.perf_counter()
+    report = rt.run()
+    fleet_wall = time.perf_counter() - t0
+    fleet_goodput = report.goodput_tokens_per_s
+
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    bare = ServingEngine(model, params,
+                         EngineConfig(max_len=64, decode_batch=4, decode_chunk=4))
+    bare.serve_queue(reqs[:2])                 # warm
+    t0 = time.perf_counter()
+    ref = bare.serve_queue(reqs)
+    bare_goodput = sum(v.size for v in ref.values()) / (time.perf_counter() - t0)
+
+    rows.append((
+        "fleet/goodput_tokens_per_s",
+        fleet_wall / n_req * 1e6,              # us per request end-to-end
+        f"goodput_tok_per_s={fleet_goodput:.0f},"
+        f"vs_bare_serve_queue={fleet_goodput / max(bare_goodput, 1e-9):.2f}x",
+    ))
+
+    # -- failover drill ----------------------------------------------------
+    rt = build_demo_fleet(n_requests=40, rate=2.0, outage=(6.0, 16.0))
+    t0 = time.perf_counter()
+    report = rt.run()
+    wall = time.perf_counter() - t0
+    s = report.summary()
+    rows.append((
+        "fleet/failover_drill",
+        wall / max(report.ticks, 1) * 1e6,     # us per control-loop tick
+        f"completed={int(s['requests_completed'])}/40,"
+        f"dropped={int(s['requests_dropped'])},"
+        f"retries={int(s['total_retries'])},"
+        f"mode_changes={int(s['mode_changes'])},"
+        f"ticks={report.ticks}",
+    ))
+    return rows

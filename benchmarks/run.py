@@ -18,6 +18,7 @@ MODULES = [
     ("fig7", "benchmarks.fig7_failover"),
     ("beyond", "benchmarks.beyond_paper"),
     ("kernels", "benchmarks.kernels"),
+    ("fleet", "benchmarks.fleet"),
 ]
 
 

@@ -1,0 +1,119 @@
+"""Fleet serving demo: the paper's control loop closed over LIVE replicas.
+
+A heterogeneous 2-tier fleet (cheap small-batch replicas vs premium
+large-batch replicas, same reduced qwen3-0.6b weights) serves a Poisson
+request trace while the control loop runs on MEASURED signals — EWMA
+per-replica throughput, queue depth, TTFT/TPOT from the telemetry bus —
+instead of the analytic Table-1 constants.  Mid-run, the cheap tier's
+capacity pool is pinned to zero (the Fig.-7 outage): its replicas are
+killed mid-decode, their in-flight requests requeue onto the premium tier,
+the controller flips to capacity-optimized on the measured shortfall, and
+flips back after recovery.
+
+The run asserts the PR's acceptance criteria:
+  * zero lost requests through the outage (every request completes);
+  * a controller mode trace containing cost -> capacity -> cost;
+  * fleet goodput (tokens/s of decode wall time) within 2x of one bare
+    ``ServingEngine.serve_queue`` run over the same requests.
+
+    PYTHONPATH=src python examples/fleet_serving.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import policy
+from repro.fleet.runtime import build_demo_fleet
+from repro.models import Model
+from repro.serving import EngineConfig, ServingEngine
+
+N_REQUESTS = 80
+RATE = 2.0
+OUTAGE = (10.0, 25.0)
+
+print(f"fleet: 2 tiers (cheap x2 slots, premium x4 slots), "
+      f"{N_REQUESTS} requests @ {RATE}/s, cheap-tier outage t={OUTAGE}")
+rt = build_demo_fleet(n_requests=N_REQUESTS, rate=RATE, outage=OUTAGE)
+requests = list(rt.workload)
+t0 = time.perf_counter()
+report = rt.run()
+wall = time.perf_counter() - t0
+
+s = report.summary()
+print("\nper-request ledger:")
+print(f"  completed {int(s['requests_completed'])}/{N_REQUESTS}, "
+      f"dropped {int(s['requests_dropped'])}, "
+      f"retries after replica kills: {int(s['total_retries'])}")
+print(f"  p50 TTFT {s['p50_ttft_s']:.2f}s  p95 TTFT {s['p95_ttft_s']:.2f}s  "
+      f"mean TPOT {s['mean_tpot_s']:.3f}s")
+print(f"  accrued cost ${s['total_cost_usd']:.4f} over {report.ticks} ticks")
+tier_counts = report.requests.per_tier_counts()
+print(f"  served per tier: {tier_counts}")
+
+print("\ncontroller mode trace (0=cost-optimized, 1=capacity-optimized):")
+print(" ", [(round(t, 1), m) for t, m in report.mode_trace])
+seq = report.mode_sequence()
+
+
+def has_subsequence(seq, pattern):
+    it = iter(seq)
+    return all(any(x == want for x in it) for want in pattern)
+
+
+assert int(s["requests_dropped"]) == 0, "requests were lost!"
+assert int(s["requests_completed"]) == N_REQUESTS
+assert has_subsequence(seq, [policy.COST_OPTIMIZED,
+                             policy.CAPACITY_OPTIMIZED,
+                             policy.COST_OPTIMIZED]), seq
+assert seq[0] == policy.COST_OPTIMIZED
+
+# -- token-exactness: fleet outputs == ONE bare engine, same requests -------
+cfg = get_config("qwen3-0.6b").reduce()
+model = Model(cfg)
+params = model.init(jax.random.key(0))
+bare = ServingEngine(model, params,
+                     EngineConfig(max_len=64, decode_batch=4, decode_chunk=4))
+batch = [(r.prompt, r.max_new) for r in requests]
+ref = bare.serve_queue(batch)
+mismatch = sum(
+    0 if np.array_equal(report.outputs[r.rid], ref[i]) else 1
+    for i, r in enumerate(requests)
+)
+assert mismatch == 0, f"{mismatch} requests decoded differently"
+print(f"\ntoken-exact: {len(requests)}/{len(requests)} fleet outputs match "
+      f"the bare engine (through {int(s['total_retries'])} retries)")
+
+# -- goodput at EQUAL replica count -----------------------------------------
+# one fleet replica vs one bare engine, same slots, same saturating burst:
+# isolates the runtime's bookkeeping overhead from occupancy effects
+from repro.fleet.runtime import build_saturated_fleet
+
+sat = build_saturated_fleet(n_requests=40, n_replicas=1, decode_batch=4)
+sat_reqs = [(r.prompt, r.max_new) for r in sat.workload]
+sat_report = sat.run()
+fleet_goodput = sat_report.goodput_tokens_per_s
+
+bare.serve_queue(sat_reqs[:2])                   # warm this shape
+t0 = time.perf_counter()
+ref2 = bare.serve_queue(sat_reqs)
+bare_wall = time.perf_counter() - t0
+bare_goodput = sum(v.size for v in ref2.values()) / bare_wall
+
+print(f"goodput @ 1 replica, saturating burst: fleet {fleet_goodput:.0f} "
+      f"tok/s vs bare serve_queue {bare_goodput:.0f} tok/s "
+      f"({fleet_goodput / bare_goodput:.2f}x)")
+assert fleet_goodput * 2.0 >= bare_goodput, (
+    f"fleet goodput {fleet_goodput:.0f} not within 2x of bare "
+    f"{bare_goodput:.0f}")
+
+print(f"\nmeasured telemetry at end of run:")
+for tier, sig in report.telemetry.items():
+    print(f"  {tier}: {sig['rate_per_replica']:.2f} req/s/replica, "
+          f"occupancy {sig['occupancy']:.2f}, "
+          f"TTFT {sig['ttft_s']:.2f}s, TPOT {sig['tpot_s']:.3f}s")
+print(f"\nwall: {wall:.1f}s  |  fleet_serving OK")

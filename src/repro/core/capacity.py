@@ -40,21 +40,37 @@ class CapacityPool:
                 cap = min(cap, ev.limit)
         return cap
 
+    @property
+    def inflight(self) -> int:
+        """Replicas requested but still provisioning (not yet ready)."""
+        return sum(n for _, n in self._pending)
+
     def request(self, t: float, target: int) -> None:
         """Scale toward `target` replicas (clipped to capacity at t).
 
         Scale-ups enter the pending queue and become ready after
         ``provision_delay_s``; scale-downs are immediate (graceful drain is
         modeled by the router finishing in-flight work within the tick).
+        When ``ready <= target < ready + inflight`` the pending queue is
+        trimmed to ``target - ready`` (keeping the earliest, i.e. soonest-
+        ready, requests) so maturing replicas never overshoot the target.
         """
         target = min(target, self.capacity_at(t))
-        inflight = sum(n for _, n in self._pending)
-        current = self.ready + inflight
+        current = self.ready + self.inflight
         if target > current:
             self._pending.append((t + self.provision_delay_s, target - current))
         elif target < self.ready:
             self.ready = target
             self._pending = []  # cancel warming replicas on scale-down
+        elif target < current:
+            keep = target - self.ready
+            trimmed: List[Tuple[float, int]] = []
+            for rt, n in self._pending:
+                take = min(n, keep)
+                if take > 0:
+                    trimmed.append((rt, take))
+                    keep -= take
+            self._pending = trimmed
 
     def tick(self, t: float) -> int:
         """Advance time: mature pending replicas; enforce capacity ceiling."""

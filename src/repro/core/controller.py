@@ -68,7 +68,31 @@ class ModeController:
         demand: float,
         requested: np.ndarray,
         pool: np.ndarray,
+        measured_t_max: Optional[np.ndarray] = None,
     ) -> SwitchDecision:
+        """Evaluate the binary step for one tick.
+
+        ``measured_t_max`` closes the loop over the live data plane: when
+        given (the fleet runtime's per-tier EWMA of measured per-replica
+        throughput), the capacity constraint and supply estimates use the
+        *observed* service rates instead of the static Table-1 profile
+        constants.  Omitted, behavior is byte-identical to the analytic
+        simulator path.
+        """
+        t_max = (
+            np.asarray(measured_t_max, dtype=np.float64)
+            if measured_t_max is not None
+            else self.t_max
+        )
+        # Table 1's DU_i^c = cost/hr ÷ T_i^max, with the measured denominator
+        # when the data plane reports one: a tier serving slower than its
+        # nominal profile becomes proportionally more expensive per inference
+        # and loses cost-optimized weight.
+        cost_per_inference = (
+            self.cost_per_hour / np.maximum(t_max, 1e-9)
+            if measured_t_max is not None
+            else self.cost_per_inference
+        )
         demand_s = self._condition_demand(demand)
         available = pool > 0
 
@@ -78,13 +102,13 @@ class ModeController:
         # current replica counts — otherwise a scaled-to-zero dead pool
         # looks "satisfied" and the controller would flap back to cost mode
         # mid-outage.
-        w_full = np.asarray(policy.cost_weights(self.cost_per_inference,
+        w_full = np.asarray(policy.cost_weights(cost_per_inference,
                                                 np.ones_like(available)))
         tentative = np.ceil(
-            w_full * demand_s / np.maximum(0.8 * self.t_max, 1e-9)
+            w_full * demand_s / np.maximum(0.8 * t_max, 1e-9)
         ).astype(np.int64)
         cap_violated = bool(np.any(tentative > pool))
-        supply_possible = float(np.sum(pool * self.t_max))
+        supply_possible = float(np.sum(pool * t_max))
 
         prev = self.mode
         if cap_violated or supply_possible < demand_s:
@@ -92,7 +116,7 @@ class ModeController:
         else:
             margin = 1.0 + self.config.hysteresis_margin
             if prev == policy.CAPACITY_OPTIMIZED and float(
-                np.sum(np.minimum(requested, pool) * self.t_max)
+                np.sum(np.minimum(requested, pool) * t_max)
             ) < demand_s * margin:
                 want = policy.CAPACITY_OPTIMIZED  # hold until margin met
             else:
@@ -109,10 +133,10 @@ class ModeController:
         if want == policy.COST_OPTIMIZED:
             if self.config.latency_aware:
                 w = policy.latency_aware_cost_weights(
-                    self.cost_per_inference, self.latency, available
+                    cost_per_inference, self.latency, available
                 )
             else:
-                w = policy.cost_weights(self.cost_per_inference, available)
+                w = policy.cost_weights(cost_per_inference, available)
         else:
             w = policy.capacity_weights(available)
         return SwitchDecision(

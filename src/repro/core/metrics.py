@@ -1,12 +1,15 @@
 """Time-series metric accounting (the CloudWatch stand-in, §4.7).
 
 Per-tick records of the quantities the paper plots: per-DU throughput
-(HTTP 200 vs 500), latency, utilization, mode, and accrued cost.
+(HTTP 200 vs 500), latency, utilization, mode, and accrued cost — plus
+per-REQUEST records (``RequestRecord``/``RequestLog``) for the fleet
+runtime, where the unit of accounting is an individual generation request:
+TTFT, TPOT, retries after replica failures, and goodput tokens.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -104,4 +107,103 @@ class MetricsLog:
             "p95_latency_s": self.latency_percentile(95.0),
             "mode_switches": float(self.switches()),
             "cost_mode_fraction": self.mode_fraction(0),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-request accounting (fleet runtime)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RequestRecord:
+    """One completed generation request, timestamped in control-loop time."""
+
+    rid: int
+    arrival_t: float
+    first_token_t: float          # when the first output token crossed a
+                                  # chunk boundary (TTFT reference point)
+    complete_t: float
+    prompt_len: int
+    tokens: int                   # goodput tokens actually delivered
+    retries: int = 0              # replica deaths survived
+    tier: str = ""
+    replica: str = ""
+    slo_class: str = "interactive"
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_t - self.arrival_t
+
+    @property
+    def latency_s(self) -> float:
+        return self.complete_t - self.arrival_t
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token after the first (0 for 1-token outputs)."""
+        if self.tokens <= 1:
+            return 0.0
+        return (self.complete_t - self.first_token_t) / (self.tokens - 1)
+
+
+@dataclass
+class RequestLog:
+    """Request-granularity ledger: the measured half of the control loop."""
+
+    records: List[RequestRecord] = field(default_factory=list)
+    dropped: List[int] = field(default_factory=list)   # rids lost for good
+
+    def append(self, rec: RequestRecord) -> None:
+        self.records.append(rec)
+
+    def goodput_tokens(self) -> int:
+        return int(sum(r.tokens for r in self.records))
+
+    def goodput_tokens_per_s(self) -> float:
+        """Delivered tokens per second of control-loop time."""
+        if not self.records:
+            return 0.0
+        t0 = min(r.arrival_t for r in self.records)
+        t1 = max(r.complete_t for r in self.records)
+        span = t1 - t0
+        return self.goodput_tokens() / span if span > 0 else 0.0
+
+    def total_retries(self) -> int:
+        return int(sum(r.retries for r in self.records))
+
+    def _percentile(self, values: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+    def ttft_percentile(self, q: float = 95.0, slo_class: Optional[str] = None) -> float:
+        vals = [r.ttft_s for r in self.records
+                if slo_class is None or r.slo_class == slo_class]
+        return self._percentile(vals, q)
+
+    def latency_percentile(self, q: float = 95.0, slo_class: Optional[str] = None) -> float:
+        vals = [r.latency_s for r in self.records
+                if slo_class is None or r.slo_class == slo_class]
+        return self._percentile(vals, q)
+
+    def tpot_mean(self) -> float:
+        vals = [r.tpot_s for r in self.records if r.tokens > 1]
+        return float(np.mean(vals)) if vals else 0.0
+
+    def per_tier_counts(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self.records:
+            counts[r.tier] = counts.get(r.tier, 0) + 1
+        return counts
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests_completed": float(len(self.records)),
+            "requests_dropped": float(len(self.dropped)),
+            "goodput_tokens": float(self.goodput_tokens()),
+            "goodput_tokens_per_s": self.goodput_tokens_per_s(),
+            "total_retries": float(self.total_retries()),
+            "p50_ttft_s": self.ttft_percentile(50.0),
+            "p95_ttft_s": self.ttft_percentile(95.0),
+            "p95_latency_s": self.latency_percentile(95.0),
+            "mean_tpot_s": self.tpot_mean(),
         }

@@ -1,0 +1,36 @@
+"""Fleet runtime: the paper's control loop closed over LIVE replicas.
+
+Three layers now exist in this repo:
+
+  * ``core/`` — the analytic simulator: M/D/c latency formulas and Table-1
+    ``t_max`` constants (fast, deterministic, reproduces the paper's
+    figures);
+  * ``fleet/`` — THIS layer: an event-driven runtime hosting many
+    ``ServingEngine`` replicas across heterogeneous tiers, running
+    ``ModeController`` + ``Autoscaler`` + ``CapacityPool`` against
+    *measured* per-replica signals (tokens/s, queue depth, TTFT/TPOT) —
+    the live replacement for the analytic ``t_max``;
+  * ``serving/`` — one replica's data plane: fused scanned decode and
+    ``DecodeSlots`` continuous batching.
+
+The fleet runtime is request-granular: every request is dispatched,
+retried on replica death, and accounted individually (``RequestLog``).
+"""
+from repro.fleet.dispatcher import Dispatcher  # noqa: F401
+from repro.fleet.replica import Replica, ReplicaState  # noqa: F401
+from repro.fleet.runtime import (  # noqa: F401
+    FailureEvent,
+    FleetConfig,
+    FleetReport,
+    FleetRuntime,
+    TierSpec,
+    build_demo_fleet,
+)
+from repro.fleet.telemetry import Ewma, TelemetryBus  # noqa: F401
+from repro.fleet.workload import (  # noqa: F401
+    BATCH,
+    INTERACTIVE,
+    Request,
+    SLOClass,
+    poisson_trace,
+)

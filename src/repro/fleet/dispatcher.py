@@ -1,0 +1,163 @@
+"""Request-granularity weighted dispatch (the live ALB).
+
+The analytic router splits a scalar RPS by the controller's weights; here
+every individual request is placed on a concrete replica:
+
+  * tier choice follows the controller weights (largest-deficit rounding, so
+    realized traffic tracks the weights without randomness);
+  * replica choice within a tier is least-loaded-first over replicas whose
+    bounded queue has room;
+  * a request whose weighted tier is full SPILLS to any tier with headroom
+    (the paper's "reduce the weight of units lacking capacity");
+  * if nowhere has room it stays in the backlog and retries next tick —
+    requests are only dropped after ``max_retries`` replica failures;
+  * optional hedging duplicates a fraction of requests onto a second tier,
+    first completion wins and cancels the twin (straggler mitigation).
+
+On replica death ``on_failure`` requeues the victim's in-flight rids at the
+FRONT of the backlog (oldest work first) with a retry tick.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fleet.replica import Replica
+from repro.fleet.workload import Request
+
+
+class Dispatcher:
+    def __init__(self, tiers: Sequence[str], *, max_retries: int = 16,
+                 hedge_fraction: float = 0.0):
+        self.tiers = list(tiers)
+        self.max_retries = max_retries
+        self.hedge_fraction = hedge_fraction
+        self.backlog: Deque[Request] = deque()
+        # rid -> (request, primary replica, optional hedge replica)
+        self.inflight: Dict[int, Tuple[Request, Replica, Optional[Replica]]] = {}
+        self.dropped: List[Request] = []
+        self.dispatched_per_tier: Dict[str, int] = {t: 0 for t in tiers}
+        self._deficit = np.zeros(len(tiers), dtype=np.float64)
+        self._hedge_debt = 0.0
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, reqs: Iterable[Request]) -> None:
+        self.backlog.extend(reqs)
+
+    @property
+    def quiet(self) -> bool:
+        return not self.backlog and not self.inflight
+
+    # -- placement ----------------------------------------------------------
+    def _pick_tier(self, weights: np.ndarray,
+                   has_room: np.ndarray) -> Optional[int]:
+        """Largest-deficit weighted choice among tiers with room."""
+        w = np.where(has_room, np.maximum(weights, 0.0), 0.0)
+        if w.sum() <= 0:
+            # weights point only at full/dead tiers: spill anywhere with room
+            candidates = np.nonzero(has_room)[0]
+            return int(candidates[0]) if len(candidates) else None
+        w = w / w.sum()
+        self._deficit += w
+        order = np.argsort(-self._deficit)
+        for i in order:
+            if has_room[i]:
+                self._deficit[i] -= 1.0
+                return int(i)
+        return None
+
+    @staticmethod
+    def _best_replica(replicas: List[Replica]) -> Optional[Replica]:
+        accepting = [r for r in replicas if r.accepting]
+        if not accepting:
+            return None
+        return min(accepting, key=lambda r: r.load)
+
+    def dispatch(self, weights: np.ndarray,
+                 replicas_by_tier: Dict[str, List[Replica]]) -> int:
+        """Place as much of the backlog as current capacity allows.
+
+        Returns the number of requests placed this tick; whatever could not
+        be placed stays in the backlog (zero silent drops).
+        """
+        weights = np.asarray(weights, dtype=np.float64)
+        placed = 0
+        while self.backlog:
+            req = self.backlog[0]
+            has_room = np.array(
+                [self._best_replica(replicas_by_tier.get(t, [])) is not None
+                 for t in self.tiers]
+            )
+            ti = self._pick_tier(weights, has_room)
+            if ti is None:
+                break                     # no capacity anywhere: retry next tick
+            self.backlog.popleft()
+            tier = self.tiers[ti]
+            rep = self._best_replica(replicas_by_tier[tier])
+            if rep is None or not rep.submit(req):
+                # _pick_tier guaranteed room; a refusal here is a logic bug
+                raise RuntimeError(f"tier {tier} refused request {req.rid}")
+            hedge = self._maybe_hedge(req, ti, weights, replicas_by_tier)
+            self.inflight[req.rid] = (req, rep, hedge)
+            self.dispatched_per_tier[tier] += 1
+            placed += 1
+        return placed
+
+    def _maybe_hedge(self, req: Request, primary_ti: int, weights: np.ndarray,
+                     replicas_by_tier: Dict[str, List[Replica]]) -> Optional[Replica]:
+        if self.hedge_fraction <= 0.0:
+            return None
+        self._hedge_debt += self.hedge_fraction
+        if self._hedge_debt < 1.0:
+            return None
+        for ti, tier in enumerate(self.tiers):
+            if ti == primary_ti:
+                continue
+            rep = self._best_replica(replicas_by_tier.get(tier, []))
+            if rep is not None and rep.submit(req):
+                self._hedge_debt -= 1.0
+                return rep
+        return None
+
+    # -- completion / failure ----------------------------------------------
+    def on_complete(self, rid: int, source: Replica) -> Optional[Tuple[Request, Replica]]:
+        """First completion wins; the hedge twin (if any) is cancelled.
+        Returns (request, serving_replica) or None for a duplicate/cancelled
+        completion."""
+        entry = self.inflight.pop(rid, None)
+        if entry is None:
+            return None                   # hedge twin finished after winner
+        req, primary, hedge = entry
+        loser = hedge if source is primary else primary
+        if loser is not None and loser is not source and loser.session is not None:
+            loser.session.cancel(rid)
+        return req, source
+
+    def on_failure(self, victim: Replica, rids: List[int]) -> Tuple[List[Request], List[Request]]:
+        """Requeue a dead replica's in-flight work.  Returns
+        (requeued, dropped) request lists."""
+        requeued: List[Request] = []
+        dropped: List[Request] = []
+        for rid in rids:
+            entry = self.inflight.get(rid)
+            if entry is None:
+                continue
+            req, primary, hedge = entry
+            survivor = hedge if primary is victim else primary
+            if survivor is not None and survivor is not victim and survivor.live:
+                # hedge twin still running: strip the dead leg, keep going
+                self.inflight[rid] = (req, survivor, None)
+                continue
+            del self.inflight[rid]
+            retried = req.retried()
+            if retried.retries > self.max_retries:
+                self.dropped.append(retried)
+                dropped.append(retried)
+            else:
+                requeued.append(retried)
+        # oldest work to the front so retried requests cut the line
+        for req in reversed(requeued):
+            self.backlog.appendleft(req)
+        return requeued, dropped

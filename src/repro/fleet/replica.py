@@ -1,0 +1,126 @@
+"""Replica lifecycle: provisioning → warming → ready → draining → failed.
+
+One ``Replica`` is a live deployment-unit instance: a ``QueueSession``
+(bounded request queue + decode slots) over a tier-shared ``ServingEngine``.
+Sharing the engine means every replica of a tier reuses ONE set of params
+and ONE set of compiled functions (provisioning a replica is cheap — it
+allocates a fresh KV-cache session, not a fresh jit), while keeping
+per-replica decode state fully isolated.
+
+Lifecycle transitions (driven by the fleet runtime against the
+``CapacityPool`` it mirrors):
+
+  PROVISIONING --warm()--> WARMING --activate()--> READY
+  READY --drain()--> DRAINING --(pump to empty)--> TERMINATED
+  READY/DRAINING --fail()--> FAILED   (in-flight rids returned for requeue)
+"""
+from __future__ import annotations
+
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+from repro.fleet.workload import Request
+from repro.serving.engine import PumpReport, QueueSession, ServingEngine
+
+
+class ReplicaState(enum.Enum):
+    PROVISIONING = "provisioning"   # node requested, nothing allocated yet
+    WARMING = "warming"             # session allocated, not yet taking traffic
+    READY = "ready"                 # serving
+    DRAINING = "draining"           # no new admissions; finishing in-flight
+    FAILED = "failed"               # killed; in-flight requeued elsewhere
+    TERMINATED = "terminated"       # drained clean / cancelled while warming
+
+
+class Replica:
+    """One live replica of a tier: state machine + bounded queue session."""
+
+    def __init__(self, name: str, tier: str, engine: ServingEngine,
+                 *, queue_limit: int = 8):
+        self.name = name
+        self.tier = tier
+        self.engine = engine
+        self.queue_limit = queue_limit
+        self.state = ReplicaState.PROVISIONING
+        self.session: Optional[QueueSession] = None
+        self.born_t: float = 0.0
+        self.pumps = 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Replica({self.name}, {self.tier}, {self.state.value}, load={self.load})"
+
+    # -- lifecycle ----------------------------------------------------------
+    def warm(self) -> None:
+        assert self.state == ReplicaState.PROVISIONING, self.state
+        self.session = QueueSession(self.engine)
+        self.state = ReplicaState.WARMING
+
+    def activate(self, t: float = 0.0) -> None:
+        if self.state == ReplicaState.PROVISIONING:
+            self.warm()
+        assert self.state == ReplicaState.WARMING, self.state
+        self.state = ReplicaState.READY
+        self.born_t = t
+
+    def drain(self) -> None:
+        """Graceful scale-down: stop admissions, finish in-flight work."""
+        if self.state in (ReplicaState.PROVISIONING, ReplicaState.WARMING):
+            self.state = ReplicaState.TERMINATED
+            self.session = None
+            return
+        assert self.state in (ReplicaState.READY, ReplicaState.DRAINING), self.state
+        self.state = ReplicaState.DRAINING
+
+    def fail(self) -> List[int]:
+        """Kill mid-decode (spot reclaim / crash): the session dies with the
+        replica; every incomplete rid is returned for requeueing."""
+        rids = self.session.inflight_rids() if self.session is not None else []
+        self.state = ReplicaState.FAILED
+        self.session = None
+        return rids
+
+    # -- traffic ------------------------------------------------------------
+    @property
+    def accepting(self) -> bool:
+        return (self.state == ReplicaState.READY
+                and self.session is not None
+                and self.session.load < self.queue_limit)
+
+    @property
+    def load(self) -> int:
+        return self.session.load if self.session is not None else 0
+
+    @property
+    def live(self) -> bool:
+        return self.state in (ReplicaState.READY, ReplicaState.DRAINING)
+
+    @property
+    def billable(self) -> bool:
+        """Accruing cost: anything holding a node (warming included)."""
+        return self.state in (ReplicaState.WARMING, ReplicaState.READY,
+                              ReplicaState.DRAINING)
+
+    def submit(self, req: Request) -> bool:
+        if not self.accepting:
+            return False
+        self.session.submit(req.rid, req.prompt, req.max_new)
+        return True
+
+    def pump(self) -> Optional[PumpReport]:
+        """One admission+chunk cycle; DRAINING replicas that empty out
+        transition to TERMINATED and return their final report."""
+        if not self.live or self.session is None:
+            return None
+        if self.session.idle:
+            if self.state == ReplicaState.DRAINING:
+                self.state = ReplicaState.TERMINATED
+                self.session = None
+            return None
+        report = self.session.pump()
+        self.pumps += 1
+        if self.state == ReplicaState.DRAINING and self.session.idle:
+            self.state = ReplicaState.TERMINATED
+            self.session = None
+        return report

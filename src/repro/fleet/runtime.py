@@ -1,0 +1,572 @@
+"""The fleet tick loop: ModeController + Autoscaler + CapacityPool closed
+over LIVE ServingEngine replicas.
+
+This is the paper's control loop with the analytic middle removed.  Each
+tick (one unit of control-loop time):
+
+  1. workload arrivals enter the dispatcher backlog;
+  2. failure injections + capacity events kill replicas (in-flight
+     requests are requeued at the front of the backlog);
+  3. capacity pools mature/reclaim; replica objects are reconciled against
+     the pool (provision → warm → ready; graceful drain on scale-down,
+     fail+requeue on forced reclaim);
+  4. the controller evaluates the binary step against MEASURED signals —
+     the telemetry bus's EWMA of per-replica completion rate stands in for
+     Table 1's ``t_max`` column;
+  5. the dispatcher places the backlog on concrete replicas per the
+     controller weights (spill, hedging, bounded queues);
+  6. every live replica pumps one admission+chunk cycle of REAL jitted
+     decode; completions are recorded per request (TTFT/TPOT/retries);
+  7. per-tier autoscalers request replicas from their pools against the
+     measured per-replica throughput.
+
+Replicas of one tier share ONE ``ServingEngine`` (same params, same
+compiled functions, per-replica ``QueueSession`` state), so greedy decoding
+is token-exact across replicas and across retries — the failover drill
+asserts byte-identical outputs through a mid-decode replica kill.
+
+    PYTHONPATH=src python -m repro.fleet.runtime --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig
+from repro.core.capacity import CapacityEvent, CapacityPool, synthetic_outage
+from repro.core.controller import ControllerConfig, ModeController
+from repro.core.deployment import DUProfile
+from repro.core.metrics import MetricsLog, RequestLog, RequestRecord, TickRecord
+from repro.fleet.dispatcher import Dispatcher
+from repro.fleet.replica import Replica, ReplicaState
+from repro.fleet.telemetry import Ewma, TelemetryBus
+from repro.fleet.workload import Request
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+@dataclass
+class TierSpec:
+    """One heterogeneous tier: the (arch, hardware-ish, engine-config)
+    triplet a DU instantiates, plus its pool dynamics."""
+
+    name: str
+    arch: str = "qwen3-0.6b"
+    cost_per_hour: float = 1.0
+    nominal_t_max: float = 1.0        # req/s bootstrap until telemetry warms
+    latency_s: float = 1.0
+    max_len: int = 64
+    decode_batch: int = 2
+    decode_chunk: int = 4
+    queue_limit: int = 8
+    base_capacity: int = 4
+    provision_delay_s: float = 3.0
+    initial_replicas: int = 1
+    param_seed: int = 0               # SAME seed across tiers => token-exact
+                                      # cross-tier retries/spills
+
+    def profile(self) -> DUProfile:
+        return DUProfile(
+            name=self.name,
+            model=self.arch,
+            hardware=self.name,
+            framework="jax-fleet",
+            cost_per_hour=self.cost_per_hour,
+            t_max=self.nominal_t_max,
+            latency_s=self.latency_s,
+        )
+
+
+@dataclass
+class FailureEvent:
+    """Kill ``count`` ready replicas of ``tier`` at time ``t`` (a crash —
+    the pool keeps its ceiling; the autoscaler re-provisions)."""
+
+    t: float
+    tier: str
+    count: int = 1
+
+
+@dataclass
+class FleetConfig:
+    tick_s: float = 1.0
+    max_ticks: int = 5000
+    telemetry_alpha: float = 0.3
+    demand_alpha: float = 0.3
+    backlog_drain_ticks: float = 10.0  # backlog pressure horizon for demand
+    hedge_fraction: float = 0.0
+    max_retries: int = 16
+    warmup: bool = True               # pre-compile jits before the tick loop
+    seed: int = 0
+    controller: ControllerConfig = field(default_factory=ControllerConfig)
+    autoscaler: AutoscalerConfig = field(
+        default_factory=lambda: AutoscalerConfig(scale_down_stabilization_s=10.0)
+    )
+
+
+@dataclass
+class FleetReport:
+    outputs: Dict[int, np.ndarray]
+    requests: RequestLog
+    metrics: MetricsLog
+    mode_trace: List[Tuple[float, int]]   # (t, mode) at every change
+    telemetry: Dict[str, Dict[str, float]]
+    ticks: int
+    pump_wall_s: float                    # wall time inside replica pumps
+    useful_tokens: int
+    wasted_tokens: int
+
+    @property
+    def goodput_tokens_per_s(self) -> float:
+        """Measured delivered tokens per wall-second of decode work."""
+        return self.useful_tokens / self.pump_wall_s if self.pump_wall_s > 0 else 0.0
+
+    def mode_sequence(self) -> List[int]:
+        return [m for _, m in self.mode_trace]
+
+    def summary(self) -> Dict[str, float]:
+        s = self.requests.summary()
+        s.update(
+            ticks=float(self.ticks),
+            goodput_tokens_per_s_wall=self.goodput_tokens_per_s,
+            wasted_tokens=float(self.wasted_tokens),
+            mode_changes=float(max(0, len(self.mode_trace) - 1)),
+            total_cost_usd=self.metrics.total_cost(),
+        )
+        return s
+
+
+class FleetRuntime:
+    """Hosts the replicas and runs the closed control loop."""
+
+    def __init__(self, tiers: Sequence[TierSpec], workload: Sequence[Request],
+                 config: Optional[FleetConfig] = None,
+                 failures: Sequence[FailureEvent] = (),
+                 pool_events: Optional[Dict[str, List[CapacityEvent]]] = None):
+        self.tiers = list(tiers)
+        self.cfg = config or FleetConfig()
+        self.workload = sorted(workload, key=lambda r: r.arrival_t)
+        self.failures = sorted(failures, key=lambda f: f.t)
+        names = [t.name for t in self.tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+
+        self.pools: Dict[str, CapacityPool] = {}
+        for spec in self.tiers:
+            pool = CapacityPool(base_capacity=spec.base_capacity,
+                                provision_delay_s=spec.provision_delay_s)
+            pool.ready = min(spec.initial_replicas, spec.base_capacity)
+            if pool_events and spec.name in pool_events:
+                pool.events.extend(pool_events[spec.name])
+            self.pools[spec.name] = pool
+
+        self.controller = ModeController([t.profile() for t in self.tiers],
+                                         self.cfg.controller)
+        self.autoscalers: Dict[str, Autoscaler] = {
+            t.name: Autoscaler(0.8 * t.nominal_t_max, self.cfg.autoscaler)
+            for t in self.tiers
+        }
+        for spec in self.tiers:
+            self.autoscalers[spec.name].current = self.pools[spec.name].ready
+        self.telemetry = TelemetryBus(names, alpha=self.cfg.telemetry_alpha)
+        self.dispatcher = Dispatcher(names, max_retries=self.cfg.max_retries,
+                                     hedge_fraction=self.cfg.hedge_fraction)
+
+        self._engines: Dict[str, ServingEngine] = {}
+        self._model_cache: Dict[Tuple[str, int], Tuple[object, object]] = {}
+        self.replicas: Dict[str, List[Replica]] = {t.name: [] for t in self.tiers}
+        self._replica_counter = 0
+
+        self.t = 0.0
+        self.ticks = 0
+        self.outputs: Dict[int, np.ndarray] = {}
+        self.request_log = RequestLog()
+        self.metrics = MetricsLog(du_names=names)
+        self.mode_trace: List[Tuple[float, int]] = []
+        self._first_token_t: Dict[int, float] = {}
+        self._demand = Ewma(self.cfg.demand_alpha)
+        self._wl_idx = 0
+        self._pump_wall_s = 0.0
+        self._useful_tokens = 0
+        self._wasted_tokens = 0
+        self._warmed = False
+        self._nominal = np.array([t.nominal_t_max for t in self.tiers])
+
+    # -- engines / replicas --------------------------------------------------
+    def _engine_for(self, spec: TierSpec) -> ServingEngine:
+        if spec.name not in self._engines:
+            import jax
+
+            from repro.configs import get_config
+            from repro.models import Model
+
+            mkey = (spec.arch, spec.param_seed)
+            if mkey not in self._model_cache:
+                cfg = get_config(spec.arch).reduce()
+                model = Model(cfg)
+                params = model.init(jax.random.key(spec.param_seed))
+                self._model_cache[mkey] = (model, params)
+            model, params = self._model_cache[mkey]
+            self._engines[spec.name] = ServingEngine(
+                model, params,
+                EngineConfig(max_len=spec.max_len,
+                             decode_batch=spec.decode_batch,
+                             temperature=0.0,
+                             decode_chunk=spec.decode_chunk),
+            )
+        return self._engines[spec.name]
+
+    def _new_replica(self, spec: TierSpec) -> Replica:
+        self._replica_counter += 1
+        return Replica(f"{spec.name}/r{self._replica_counter}", spec.name,
+                       self._engine_for(spec), queue_limit=spec.queue_limit)
+
+    def _fail_replica(self, rep: Replica) -> None:
+        rids = rep.fail()
+        requeued, dropped = self.dispatcher.on_failure(rep, rids)
+        for req in requeued:
+            # tokens the dead replica emitted never reached the client:
+            # the retry's first token defines TTFT, not the lost one
+            self._first_token_t.pop(req.rid, None)
+        for req in dropped:
+            self.request_log.dropped.append(req.rid)
+            self._first_token_t.pop(req.rid, None)
+        self.telemetry.forget_replica(rep.name)
+
+    # -- pool<->replica reconciliation ---------------------------------------
+    def _reconcile(self, spec: TierSpec) -> None:
+        pool = self.pools[spec.name]
+        reps = self.replicas[spec.name]
+        reps[:] = [r for r in reps if r.state not in
+                   (ReplicaState.FAILED, ReplicaState.TERMINATED)]
+
+        # warming set mirrors the pool's provisioning pipeline
+        warming = [r for r in reps if r.state in
+                   (ReplicaState.PROVISIONING, ReplicaState.WARMING)]
+        while len(warming) < pool.inflight:
+            rep = self._new_replica(spec)
+            rep.warm()
+            warming.append(rep)
+            reps.append(rep)
+        while len(warming) > pool.inflight:
+            victim = warming.pop()        # newest request cancelled first
+            victim.drain()                # warming drain == terminate
+
+        # ready set mirrors pool.ready
+        ready = [r for r in reps if r.state == ReplicaState.READY]
+        while len(ready) < pool.ready:
+            if warming:
+                rep = warming.pop(0)      # oldest provision matures first
+            else:                         # bootstrap replicas (pool seeded)
+                rep = self._new_replica(spec)
+                reps.append(rep)
+            rep.activate(self.t)
+            ready.append(rep)
+        if len(ready) > pool.ready:
+            excess = len(ready) - pool.ready
+            forced = pool.capacity_at(self.t) < len(ready)
+            if forced:                    # reclaim: kill mid-decode, requeue
+                for rep in ready[-excess:]:
+                    self._fail_replica(rep)
+            else:                         # scale-down: graceful drain
+                for rep in sorted(ready, key=lambda r: r.load)[:excess]:
+                    rep.drain()
+        reps[:] = [r for r in reps if r.state not in
+                   (ReplicaState.FAILED, ReplicaState.TERMINATED)]
+
+    # -- one tick ------------------------------------------------------------
+    def tick(self) -> None:
+        t, cfg = self.t, self.cfg
+
+        # 1. arrivals
+        arrived: List[Request] = []
+        while (self._wl_idx < len(self.workload)
+               and self.workload[self._wl_idx].arrival_t <= t):
+            arrived.append(self.workload[self._wl_idx])
+            self._wl_idx += 1
+        self.dispatcher.submit(arrived)
+        arrival_rate = len(arrived) / cfg.tick_s
+        backlog_pressure = len(self.dispatcher.backlog) / (
+            cfg.backlog_drain_ticks * cfg.tick_s
+        )
+        demand = self._demand.update(arrival_rate) + backlog_pressure
+
+        # 2. failure injections (crashes: pool ceiling unchanged)
+        while self.failures and self.failures[0].t <= t:
+            ev = self.failures.pop(0)
+            victims = [r for r in self.replicas[ev.tier]
+                       if r.state == ReplicaState.READY][-ev.count:]
+            for rep in victims:
+                self._fail_replica(rep)
+                pool = self.pools[ev.tier]
+                pool.ready = max(0, pool.ready - 1)
+
+        # 3. capacity dynamics + reconcile
+        for spec in self.tiers:
+            self.pools[spec.name].tick(t)
+            self._reconcile(spec)
+            n_ready = sum(1 for r in self.replicas[spec.name]
+                          if r.state == ReplicaState.READY)
+            self.telemetry.record_ready(spec.name, n_ready)
+
+        # 4. controller against MEASURED signals
+        pool_cap = np.array([self.pools[s.name].capacity_at(t) for s in self.tiers])
+        requested = np.array([self.autoscalers[s.name].current for s in self.tiers],
+                             dtype=np.int64)
+        measured = self.telemetry.measured_t_max(self._nominal)
+        decision = self.controller.step(t, demand, requested, pool_cap,
+                                        measured_t_max=measured)
+        if not self.mode_trace or self.mode_trace[-1][1] != decision.mode:
+            self.mode_trace.append((t, decision.mode))
+
+        # 5. request-granularity dispatch
+        self.dispatcher.dispatch(decision.weights, self.replicas)
+
+        # 6. pump every live replica one admission+chunk cycle
+        completions_per_tier = {s.name: 0 for s in self.tiers}
+        latency_sum = {s.name: 0.0 for s in self.tiers}
+        occ_sum = {s.name: 0.0 for s in self.tiers}
+        occ_n = {s.name: 0 for s in self.tiers}
+        for spec in self.tiers:
+            for rep in list(self.replicas[spec.name]):
+                report = rep.pump()
+                if report is None:
+                    continue
+                self._pump_wall_s += report.wall_s
+                self._useful_tokens += report.useful_tokens
+                self._wasted_tokens += report.wasted_tokens
+                qd = rep.load
+                self.telemetry.record_pump(spec.name, rep.name, report, qd)
+                if rep.state == ReplicaState.READY:
+                    occ_sum[spec.name] += report.occupancy
+                    occ_n[spec.name] += 1
+                for rid in report.emitted:
+                    self._first_token_t.setdefault(rid, t + cfg.tick_s)
+                for rid, toks in report.completed.items():
+                    self._complete(rid, toks, rep, spec,
+                                   completions_per_tier, latency_sum)
+        self.telemetry.roll(cfg.tick_s)
+
+        # 7. autoscaling toward the weighted share of measured demand
+        for i, spec in enumerate(self.tiers):
+            a = self.autoscalers[spec.name]
+            a.target_metric_value = max(0.8 * float(measured[i]), 1e-6)
+            want = a.desired(t, float(decision.weights[i]) * demand)
+            self.pools[spec.name].request(t, want)
+
+        # 8. metrics
+        names = [s.name for s in self.tiers]
+        ready = np.array([sum(1 for r in self.replicas[n]
+                              if r.state == ReplicaState.READY) for n in names])
+        served = np.array([completions_per_tier[n] / cfg.tick_s for n in names])
+        lat = np.array([
+            latency_sum[n] / completions_per_tier[n]
+            if completions_per_tier[n] else 0.0 for n in names
+        ])
+        util = np.array([occ_sum[n] / occ_n[n] if occ_n[n] else 0.0
+                         for n in names])
+        billable = np.array([sum(1 for r in self.replicas[n] if r.billable)
+                             for n in names])
+        cost_rate = float(np.sum(
+            billable * np.array([s.cost_per_hour for s in self.tiers])
+        ) / 3600.0)
+        self.metrics.append(TickRecord(
+            t=t, demand_rps=demand, mode=int(decision.mode),
+            weights=decision.weights.copy(), ready=ready, served_rps=served,
+            dropped_rps=0.0, latency_s=lat, utilization=util,
+            cost_rate=cost_rate,
+        ))
+        self.t += cfg.tick_s
+        self.ticks += 1
+
+    def _complete(self, rid: int, toks: np.ndarray, rep: Replica,
+                  spec: TierSpec, completions_per_tier: Dict[str, int],
+                  latency_sum: Dict[str, float]) -> None:
+        entry = self.dispatcher.on_complete(rid, rep)
+        if entry is None:
+            return                        # hedge twin after the winner
+        req, source = entry
+        complete_t = self.t + self.cfg.tick_s
+        first_t = self._first_token_t.pop(rid, complete_t)
+        rec = RequestRecord(
+            rid=rid, arrival_t=req.arrival_t, first_token_t=first_t,
+            complete_t=complete_t, prompt_len=req.prompt_len,
+            tokens=int(toks.size), retries=req.retries,
+            tier=source.tier, replica=source.name, slo_class=req.slo_class,
+        )
+        self.request_log.append(rec)
+        self.outputs.setdefault(rid, toks)
+        self.telemetry.record_completion(source.tier, source.name,
+                                         rec.ttft_s, rec.tpot_s, rec.tokens)
+        completions_per_tier[spec.name] += 1
+        latency_sum[spec.name] += rec.latency_s
+
+    # -- drive to completion -------------------------------------------------
+    def warmup(self) -> None:
+        """Compile every tier's jitted functions (prefill per distinct
+        prompt length, chunk scan, slot placement) outside the measured
+        run, so pump wall times — and the goodput they imply — reflect
+        steady-state decode, not one-time jit cost."""
+        if self._warmed:
+            return
+        from repro.serving.engine import QueueSession
+
+        plens = sorted({r.prompt_len for r in self.workload}) or [8]
+        for spec in self.tiers:
+            eng = self._engine_for(spec)
+            sess = QueueSession(eng)
+            for i, plen in enumerate(plens):
+                sess.submit(i, np.zeros((1, plen), np.int64), 1)
+            while not sess.idle:
+                sess.pump()
+        self._warmed = True
+
+    def _busy(self) -> bool:
+        if self._wl_idx < len(self.workload) or not self.dispatcher.quiet:
+            return True
+        return any(r.load > 0 for reps in self.replicas.values() for r in reps)
+
+    def run(self) -> FleetReport:
+        """Run until the workload is drained (all requests completed or
+        dropped) or ``max_ticks`` elapses."""
+        if self.cfg.warmup:
+            self.warmup()
+        while self._busy() and self.ticks < self.cfg.max_ticks:
+            self.tick()
+        return FleetReport(
+            outputs=self.outputs,
+            requests=self.request_log,
+            metrics=self.metrics,
+            mode_trace=self.mode_trace,
+            telemetry=self.telemetry.snapshot(),
+            ticks=self.ticks,
+            pump_wall_s=self._pump_wall_s,
+            useful_tokens=self._useful_tokens,
+            wasted_tokens=self._wasted_tokens,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Demo fleet (example / smoke / benchmark share one construction)
+# ---------------------------------------------------------------------------
+
+
+def build_demo_fleet(
+    *,
+    arch: str = "qwen3-0.6b",
+    n_requests: int = 100,
+    rate: float = 3.0,
+    outage: Optional[Tuple[float, float]] = None,
+    hedge_fraction: float = 0.0,
+    seed: int = 0,
+) -> FleetRuntime:
+    """A heterogeneous 2-tier fleet over reduced-config engines.
+
+    ``cheap`` has low $/hr but small decode batches (low per-replica
+    throughput); ``premium`` costs more per hour but decodes twice the
+    slots.  ``outage=(start, end)`` pins the cheap pool to zero capacity —
+    the Fig.-7 drill over live replicas.
+    """
+    from repro.configs import get_config
+    from repro.core.simulator import steady
+    from repro.fleet.workload import poisson_trace
+
+    vocab = get_config(arch).reduce().vocab_size
+    duration = n_requests / rate
+    workload = poisson_trace(
+        steady(rate), duration * 1.5, vocab_size=vocab,
+        prompt_len=(8, 8), max_new=(4, 12), seed=seed, n_max=n_requests,
+    )
+    tiers = [
+        TierSpec(name="cheap", arch=arch, cost_per_hour=1.0,
+                 nominal_t_max=1.0, latency_s=2.0, decode_batch=2,
+                 decode_chunk=4, queue_limit=6, base_capacity=6,
+                 provision_delay_s=3.0, initial_replicas=2),
+        TierSpec(name="premium", arch=arch, cost_per_hour=4.0,
+                 nominal_t_max=2.0, latency_s=1.0, decode_batch=4,
+                 decode_chunk=4, queue_limit=8, base_capacity=4,
+                 provision_delay_s=3.0, initial_replicas=1),
+    ]
+    pool_events = None
+    if outage is not None:
+        pool_events = {"cheap": [synthetic_outage(outage[0], outage[1])]}
+    return FleetRuntime(
+        tiers, workload,
+        FleetConfig(
+            hedge_fraction=hedge_fraction, seed=seed,
+            # measured signals are noisier than analytic ones: damp the
+            # binary step so the edge-of-capacity regime doesn't flap
+            controller=ControllerConfig(hysteresis_margin=0.25, min_dwell_s=4.0),
+        ),
+        pool_events=pool_events,
+    )
+
+
+def build_saturated_fleet(
+    *,
+    arch: str = "qwen3-0.6b",
+    n_requests: int = 40,
+    n_replicas: int = 1,
+    decode_batch: int = 4,
+    seed: int = 0,
+) -> FleetRuntime:
+    """A single-tier fleet fed its whole workload as one burst at t=0 —
+    the saturating configuration for apples-to-apples goodput against a
+    bare ``ServingEngine.serve_queue`` at equal replica count."""
+    from repro.configs import get_config
+    from repro.fleet.workload import burst_of
+
+    vocab = get_config(arch).reduce().vocab_size
+    workload = burst_of(n_requests, vocab_size=vocab, prompt_len=8,
+                        max_new=(4, 12), seed=seed)
+    tier = TierSpec(name="flat", arch=arch, cost_per_hour=1.0,
+                    nominal_t_max=2.0, decode_batch=decode_batch,
+                    decode_chunk=4, queue_limit=2 * decode_batch,
+                    base_capacity=n_replicas, initial_replicas=n_replicas,
+                    provision_delay_s=1.0)
+    return FleetRuntime([tier], workload, FleetConfig(seed=seed))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config gate: ~100 requests, assert zero dropped")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=3.0)
+    ap.add_argument("--outage", default="",
+                    help="start:end control-loop seconds of cheap-tier outage")
+    args = ap.parse_args(argv)
+
+    outage = None
+    if args.outage:
+        s, e = (float(x) for x in args.outage.split(":"))
+        outage = (s, e)
+    rt = build_demo_fleet(arch=args.arch, n_requests=args.requests,
+                          rate=args.rate, outage=outage)
+    t0 = time.perf_counter()
+    report = rt.run()
+    wall = time.perf_counter() - t0
+    s = report.summary()
+    print("fleet summary:", {k: round(v, 3) for k, v in s.items()})
+    print(f"mode trace: {[(round(t, 1), m) for t, m in report.mode_trace]}")
+    tel = {k: {kk: round(vv, 3) for kk, vv in v.items()}
+           for k, v in report.telemetry.items()}
+    print(f"telemetry: {tel}")
+    print(f"wall: {wall:.1f}s for {report.ticks} ticks "
+          f"({report.goodput_tokens_per_s:.0f} goodput tok/s of decode wall)")
+    if args.smoke:
+        n_done = len(report.requests.records)
+        assert n_done == args.requests, (
+            f"smoke: {n_done}/{args.requests} requests completed")
+        assert not report.requests.dropped, (
+            f"smoke: {len(report.requests.dropped)} requests dropped")
+        print(f"fleet smoke OK: {n_done}/{args.requests} requests, 0 dropped")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,163 @@
+"""EWMA telemetry bus: the measured signals the control loop consumes.
+
+The analytic simulator feeds the controller Table-1 constants; the fleet
+runtime feeds it THIS — per-replica exponentially-weighted measurements of
+what the data plane actually did (tokens/s, queue depth, slot occupancy,
+per-request completion rate), rolled up per tier.  ``measured_t_max`` is
+the live stand-in for the paper's breaking-point throughput column: the
+observed per-replica request completion rate, de-rated by observed
+occupancy so an under-utilized tier is not mistaken for a slow one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class Ewma:
+    """Exponentially weighted moving average; ``value`` is None until the
+    first update (callers fall back to a nominal bootstrap estimate)."""
+
+    def __init__(self, alpha: float = 0.3):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self.value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        self.value = x if self.value is None else (
+            self.alpha * x + (1.0 - self.alpha) * self.value
+        )
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return self.value if self.value is not None else default
+
+
+@dataclass
+class ReplicaSignals:
+    """Per-replica EWMA channels (one bundle per live replica)."""
+
+    tokens_per_s: Ewma          # measured decode tokens/s (wall clock)
+    occupancy: Ewma             # decode-slot occupancy [0, 1]
+    queue_depth: Ewma           # requests waiting behind the slots
+    ttft_s: Ewma                # time-to-first-token (control-loop time)
+    tpot_s: Ewma                # time-per-output-token
+
+    @classmethod
+    def make(cls, alpha: float) -> "ReplicaSignals":
+        return cls(*(Ewma(alpha) for _ in range(5)))
+
+
+@dataclass
+class _TierWindow:
+    """Per-tick accumulation window for one tier (reset every roll)."""
+
+    completions: int = 0
+    busy_replicas: int = 0      # replicas with at least one active slot
+    ready_replicas: int = 0
+    useful_tokens: int = 0
+    wall_s: float = 0.0
+
+
+class TelemetryBus:
+    """Collects ``PumpReport``s + completions; serves tier-level EWMAs.
+
+    ``roll(tick_s)`` closes the current per-tick window and folds it into
+    the tier EWMAs — call once per control-loop tick, after pumping.
+    """
+
+    def __init__(self, tiers: List[str], alpha: float = 0.3):
+        self.tiers = list(tiers)
+        self.alpha = alpha
+        self.replica: Dict[str, ReplicaSignals] = {}
+        self._window: Dict[str, _TierWindow] = {t: _TierWindow() for t in tiers}
+        # per-tier EWMAs over tick windows
+        self.tier_rate: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}       # req/s/replica
+        self.tier_occupancy: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        self.tier_tokens_per_s: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        self.tier_ttft: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        self.tier_tpot: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+
+    # -- ingestion ----------------------------------------------------------
+    def signals_for(self, replica_name: str) -> ReplicaSignals:
+        if replica_name not in self.replica:
+            self.replica[replica_name] = ReplicaSignals.make(self.alpha)
+        return self.replica[replica_name]
+
+    def record_pump(self, tier: str, replica_name: str, report, queue_depth: int) -> None:
+        sig = self.signals_for(replica_name)
+        sig.occupancy.update(report.occupancy)
+        sig.queue_depth.update(queue_depth)
+        if report.wall_s > 0 and report.useful_tokens > 0:
+            sig.tokens_per_s.update(report.useful_tokens / report.wall_s)
+        win = self._window[tier]
+        win.completions += len(report.completed)
+        win.useful_tokens += report.useful_tokens
+        win.wall_s += report.wall_s
+        if report.occupancy > 0:
+            win.busy_replicas += 1
+
+    def record_ready(self, tier: str, n_ready: int) -> None:
+        self._window[tier].ready_replicas = n_ready
+
+    def record_completion(self, tier: str, replica_name: str,
+                          ttft_s: float, tpot_s: float, tokens: int) -> None:
+        sig = self.signals_for(replica_name)
+        sig.ttft_s.update(ttft_s)
+        self.tier_ttft[tier].update(ttft_s)
+        if tokens > 1:
+            sig.tpot_s.update(tpot_s)
+            self.tier_tpot[tier].update(tpot_s)
+
+    def forget_replica(self, replica_name: str) -> None:
+        self.replica.pop(replica_name, None)
+
+    # -- per-tick roll-up ---------------------------------------------------
+    def roll(self, tick_s: float) -> None:
+        for tier in self.tiers:
+            win = self._window[tier]
+            if win.busy_replicas > 0:
+                # completion rate per busy replica over control-loop time;
+                # only ticks where the tier actually worked update the EWMA
+                # (an idle tier's capacity estimate must not decay to zero)
+                rate = win.completions / tick_s / win.busy_replicas
+                self.tier_rate[tier].update(rate)
+                occ = win.busy_replicas / max(win.ready_replicas, 1)
+                self.tier_occupancy[tier].update(occ)
+            if win.wall_s > 0 and win.useful_tokens > 0:
+                self.tier_tokens_per_s[tier].update(win.useful_tokens / win.wall_s)
+            self._window[tier] = _TierWindow()
+
+    # -- the live t_max -----------------------------------------------------
+    def measured_t_max(self, nominal: np.ndarray) -> np.ndarray:
+        """Per-tier measured per-replica throughput (requests/s).
+
+        The observed completion rate is divided by observed occupancy
+        (floored at 0.25) to extrapolate the *capacity* of a partially
+        loaded tier; tiers with no measurements yet fall back to their
+        nominal profile value.
+        """
+        out = np.asarray(nominal, dtype=np.float64).copy()
+        for i, tier in enumerate(self.tiers):
+            rate = self.tier_rate[tier].value
+            if rate is None:
+                continue
+            occ = np.clip(self.tier_occupancy[tier].get(1.0), 0.25, 1.0)
+            out[i] = max(rate / occ, 1e-6)
+        return out
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {
+            tier: {
+                "rate_per_replica": self.tier_rate[tier].get(),
+                "occupancy": self.tier_occupancy[tier].get(),
+                "tokens_per_s": self.tier_tokens_per_s[tier].get(),
+                "ttft_s": self.tier_ttft[tier].get(),
+                "tpot_s": self.tier_tpot[tier].get(),
+            }
+            for tier in self.tiers
+        }

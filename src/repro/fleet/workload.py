@@ -1,0 +1,134 @@
+"""Arrival traces for the fleet runtime: the §5.1 workload taxonomy at
+request granularity.
+
+The analytic simulator samples a scalar RPS per tick; the fleet runtime
+needs actual *requests* — a prompt, an output budget, an SLO class, and an
+arrival timestamp.  Arrivals are an inhomogeneous Poisson process (thinning
+over any rate function, including the simulator's ``steady`` / ``diurnal_cycle``
+/ ``bursty`` traces), with prompt/output lengths drawn per request and a
+mixed SLO population (interactive vs batch).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """A latency service class (what the paper's 900 ms threshold becomes
+    at request granularity)."""
+
+    name: str
+    ttft_target_s: float
+    latency_target_s: float
+    weight: float = 1.0           # sampling weight in the mixed population
+
+
+INTERACTIVE = SLOClass("interactive", ttft_target_s=2.0,
+                       latency_target_s=15.0, weight=0.7)
+BATCH = SLOClass("batch", ttft_target_s=30.0,
+                 latency_target_s=120.0, weight=0.3)
+
+
+@dataclass
+class Request:
+    """One generation request flowing through the fleet."""
+
+    rid: int
+    arrival_t: float
+    prompt: np.ndarray            # (1, prompt_len) int tokens
+    max_new: int
+    slo_class: str = "interactive"
+    retries: int = 0              # incremented on every requeue after failure
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[1])
+
+    def retried(self) -> "Request":
+        return replace(self, retries=self.retries + 1)
+
+
+def poisson_arrival_times(
+    rate_fn: Callable[[float], float],
+    duration_s: float,
+    *,
+    seed: int = 0,
+    max_rate: Optional[float] = None,
+) -> np.ndarray:
+    """Inhomogeneous Poisson arrivals over [0, duration_s) by thinning."""
+    rng = np.random.default_rng(seed)
+    if max_rate is None:
+        grid = np.linspace(0.0, duration_s, 512, endpoint=False)
+        max_rate = max(float(rate_fn(float(t))) for t in grid) * 1.05
+    if max_rate <= 0:
+        return np.array([])
+    times: List[float] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / max_rate)
+        if t >= duration_s:
+            break
+        if rng.uniform() * max_rate <= float(rate_fn(t)):
+            times.append(t)
+    return np.asarray(times)
+
+
+def poisson_trace(
+    rate_fn: Callable[[float], float],
+    duration_s: float,
+    *,
+    vocab_size: int,
+    prompt_len: Tuple[int, int] = (8, 16),
+    max_new: Tuple[int, int] = (4, 16),
+    classes: Sequence[SLOClass] = (INTERACTIVE, BATCH),
+    seed: int = 0,
+    n_max: Optional[int] = None,
+) -> List[Request]:
+    """Sample a full request trace: Poisson arrivals + per-request shapes.
+
+    ``prompt_len``/``max_new`` are inclusive [lo, hi] ranges; SLO classes
+    are drawn by ``weight``.  Deterministic for a given seed.
+    """
+    times = poisson_arrival_times(rate_fn, duration_s, seed=seed)
+    if n_max is not None:
+        times = times[:n_max]
+    rng = np.random.default_rng(seed + 1)
+    weights = np.array([c.weight for c in classes], dtype=np.float64)
+    weights = weights / weights.sum()
+    reqs: List[Request] = []
+    for rid, t in enumerate(times):
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        new = int(rng.integers(max_new[0], max_new[1] + 1))
+        cls = classes[int(rng.choice(len(classes), p=weights))]
+        prompt = rng.integers(0, vocab_size, (1, plen), dtype=np.int64)
+        reqs.append(Request(rid=rid, arrival_t=float(t), prompt=prompt,
+                            max_new=new, slo_class=cls.name))
+    return reqs
+
+
+def burst_of(
+    n: int,
+    *,
+    vocab_size: int,
+    at_t: float = 0.0,
+    prompt_len: int = 8,
+    max_new: Tuple[int, int] = (4, 12),
+    seed: int = 0,
+    rid_base: int = 0,
+) -> List[Request]:
+    """A synchronized burst (all requests arrive at once) — the saturating
+    workload for goodput benchmarks and failover drills."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=rid_base + i,
+            arrival_t=at_t,
+            prompt=rng.integers(0, vocab_size, (1, prompt_len), dtype=np.int64),
+            max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
+        )
+        for i in range(n)
+    ]

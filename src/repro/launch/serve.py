@@ -15,18 +15,29 @@ import argparse
 import dataclasses
 import json
 import os
+from typing import Optional
 
 import numpy as np
 
 
-def roofline_dus(arch: str):
+def default_results_dir() -> str:
+    """Dry-run artifact root: ``--results-dir`` flag > ``REPRO_RESULTS_DIR``
+    env > the repo-checkout-relative default (which only exists for
+    in-tree runs — installed checkouts must override)."""
+    env = os.environ.get("REPRO_RESULTS_DIR")
+    if env:
+        return os.path.join(env, "dryrun")
+    return os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+    )
+
+
+def roofline_dus(arch: str, results_dir: Optional[str] = None):
     """Build DU profiles from dry-run roofline JSONs (beyond-paper path)."""
     from repro.configs import TIERS, get_config
     from repro.core.deployment import profile_from_roofline
 
-    results_dir = os.path.join(
-        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
-    )
+    results_dir = results_dir or default_results_dir()
     path = os.path.join(results_dir, f"{arch}__decode_32k__single.json")
     if not os.path.exists(path):
         return None
@@ -75,7 +86,33 @@ def main(argv=None):
     ap.add_argument("--continuous", action="store_true",
                     help="run the sample decode through DecodeSlots "
                          "continuous batching instead of a fixed batch")
+    ap.add_argument("--results-dir", default="",
+                    help="dry-run artifact root for --roofline DUs "
+                         "(default: $REPRO_RESULTS_DIR or the in-tree "
+                         "results/ directory)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run the control loop over LIVE ServingEngine "
+                         "replicas (fleet runtime) instead of the analytic "
+                         "simulator")
+    ap.add_argument("--requests", type=int, default=100,
+                    help="--fleet: number of requests in the trace")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        from repro.fleet.runtime import build_demo_fleet
+
+        outage = None
+        if args.outage:
+            s, e = (float(x) for x in args.outage.split(":"))
+            outage = (s, e)
+        rt = build_demo_fleet(arch=args.arch, n_requests=args.requests,
+                              rate=max(args.demand / 100.0, 1.0),
+                              outage=outage)
+        report = rt.run()
+        print("fleet summary:",
+              {k: round(v, 4) for k, v in report.summary().items()})
+        print("mode trace:", [(round(t, 1), m) for t, m in report.mode_trace])
+        return report
 
     from repro.configs.sd21 import paper_deployment_units
     from repro.core.capacity import CapacityPool, synthetic_outage
@@ -83,7 +120,9 @@ def main(argv=None):
 
     dus = None
     if not args.paper_dus:
-        dus = roofline_dus(args.arch)
+        rdir = (os.path.join(args.results_dir, "dryrun")
+                if args.results_dir else None)
+        dus = roofline_dus(args.arch, results_dir=rdir)
         if dus is None:
             print("no dry-run artifact for roofline DUs; falling back to --paper-dus")
     if dus is None:

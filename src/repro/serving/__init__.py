@@ -1,2 +1,9 @@
 """Serving layer: engine replicas + request traces."""
-from repro.serving.engine import DecodeSlots, EngineConfig, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    DecodeSlots,
+    EngineConfig,
+    EngineTelemetry,
+    PumpReport,
+    QueueSession,
+    ServingEngine,
+)

@@ -25,6 +25,12 @@ fused:
   of ``chunk`` steps between admission points.  Slots that finish mid-chunk
   produce discarded tokens until the chunk boundary — chunk-granularity
   iteration-level scheduling.
+* The loop body lives in ``QueueSession``: a *resumable* session object
+  (``submit`` requests any time, ``pump`` one admission+chunk cycle) so a
+  fleet runtime can interleave many replica sessions, observe per-pump
+  telemetry (``PumpReport``), and recover in-flight request ids when a
+  replica is killed mid-decode.  ``serve_queue`` is the drain-to-empty
+  wrapper over one session and is token-exact with the pre-refactor loop.
 * Sampling semantics (greedy / temperature with a carried split key) are
   bit-identical to the seed per-step loop, which the fast-path tests
   assert token-exactly.
@@ -35,8 +41,9 @@ the multi-pod dry-run lowers (launch.dryrun).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,11 +63,36 @@ class EngineConfig:
                                     # admission points (serve_queue)
 
 
+@dataclass
+class EngineTelemetry:
+    """Measured engine-side counters (aggregated over every session sharing
+    this engine's compiled functions).  ``tokens_per_s`` is the *measured*
+    decode rate the fleet telemetry bus feeds back to the controller — the
+    live replacement for the Table-1 ``t_max`` constants."""
+
+    prefills: int = 0
+    chunks: int = 0
+    decode_s: float = 0.0            # wall time inside chunk scans (+ sync)
+    useful_tokens: int = 0           # tokens delivered to some request
+    wasted_tokens: int = 0           # idle/finished-slot tokens in the chunk
+    completed_requests: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.useful_tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+    @property
+    def efficiency(self) -> float:
+        total = self.useful_tokens + self.wasted_tokens
+        return self.useful_tokens / total if total else 1.0
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, cfg: EngineConfig):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.telemetry = EngineTelemetry()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode, donate_argnums=(2,))
         self._gen = jax.jit(
@@ -199,6 +231,7 @@ class ServingEngine:
         requests: Sequence[Tuple[np.ndarray, int]],   # [(inputs (1,Sp), max_new)]
         *,
         slots: Optional["DecodeSlots"] = None,
+        on_complete: Optional[Callable[[int, np.ndarray], None]] = None,
     ) -> Dict[int, np.ndarray]:
         """Continuous batching: admit queued requests into free decode slots,
         decode the full slot batch in jitted scan chunks, refill as requests
@@ -208,58 +241,173 @@ class ServingEngine:
         dispatch and ONE device→host transfer per ``decode_chunk`` steps —
         dispatch/sync count is O(requests + total_steps / chunk), never
         O(total tokens).
+
+        ``on_complete(rid, tokens)`` fires the moment a request's last token
+        crosses a chunk boundary (the per-request completion hook the fleet
+        dispatcher uses for hedging/retirement).
         """
-        n_slots = self.cfg.decode_batch
-        slots = slots if slots is not None else DecodeSlots(n_slots)
-        chunk = max(1, self.cfg.decode_chunk)
-
-        cache = self.model.empty_cache(n_slots, self.cfg.max_len)
-        lens = jnp.zeros((n_slots,), jnp.int32)
-        tok = jnp.zeros((n_slots,), jnp.int32)
-        key = jax.random.key(self.cfg.seed)
-
-        queue: List[Tuple[int, np.ndarray, int]] = []
-        out: Dict[int, List[int]] = {}
+        session = QueueSession(self, slots=slots)
         for rid, (inp, max_new) in enumerate(requests):
-            inp = np.asarray(inp)
-            max_new = int(max_new)
-            out[rid] = []
-            if max_new <= 0:
-                continue                          # nothing to generate
-            if inp.shape[1] + max_new > self.cfg.max_len:
-                raise ValueError(
-                    f"request {rid}: prompt_len={inp.shape[1]} + "
-                    f"max_new={max_new} exceeds max_len={self.cfg.max_len}"
-                )
-            queue.append((rid, inp, max_new))
-        admissions = 0
+            session.submit(rid, inp, max_new)
+        while not session.idle:
+            report = session.pump()
+            if on_complete is not None:
+                for rid, toks in report.completed.items():
+                    on_complete(rid, toks)
+        return dict(session.results)
 
-        while queue or slots.occupancy > 0.0:
-            # admit while there is work and a free slot
-            for s in slots.free:
-                if not queue:
-                    break
-                rid, inp, max_new = queue.pop(0)
-                logits, pcache = self.prefill({"inputs": jnp.asarray(inp)})
-                cache = self._place(cache, pcache, int(s))
-                lens = lens.at[s].set(inp.shape[1])
-                akey = jax.random.fold_in(key, admissions)
-                admissions += 1
-                tok = tok.at[s].set(self._sample(logits, akey)[0])
-                slots.admit(int(s), rid, max_new)
 
-            # decode one chunk for the whole slot batch
-            cache, tok, lens, key, toks = self._chunk(
-                self.params, cache, tok, lens, key, chunk
+@dataclass
+class PumpReport:
+    """What one ``QueueSession.pump`` observed (the fleet telemetry unit)."""
+
+    admitted: List[int] = field(default_factory=list)     # rids prefilled
+    emitted: Dict[int, int] = field(default_factory=dict)  # rid -> tokens
+    completed: Dict[int, np.ndarray] = field(default_factory=dict)
+    chunk_steps: int = 0
+    useful_tokens: int = 0
+    wasted_tokens: int = 0
+    occupancy: float = 0.0            # slot occupancy entering the chunk
+    wall_s: float = 0.0               # pump wall time (prefills + chunk + sync)
+
+
+class QueueSession:
+    """Resumable continuous-batching session over one engine.
+
+    The loop body of ``serve_queue`` factored into an object: requests may
+    be ``submit``-ed at any time, each ``pump`` runs one admission pass plus
+    one jitted chunk scan, and per-pump effects come back as a
+    ``PumpReport``.  A fleet replica owns exactly one session; killing the
+    replica mid-decode means dropping the session and requeueing
+    ``inflight_rids()`` elsewhere (greedy sampling makes the retried output
+    token-exact, which the failover drill asserts).
+    """
+
+    def __init__(self, engine: ServingEngine, *, slots: Optional["DecodeSlots"] = None):
+        self.eng = engine
+        n_slots = engine.cfg.decode_batch
+        self.slots = slots if slots is not None else DecodeSlots(n_slots)
+        self.cache = engine.model.empty_cache(n_slots, engine.cfg.max_len)
+        self.lens = jnp.zeros((n_slots,), jnp.int32)
+        self.tok = jnp.zeros((n_slots,), jnp.int32)
+        self.key = jax.random.key(engine.cfg.seed)
+        self.queue: List[Tuple[int, np.ndarray, int]] = []
+        self.results: Dict[int, np.ndarray] = {}      # every completed rid
+        self._out: Dict[int, List[int]] = {}
+        self._admissions = 0
+        self._instant: List[int] = []                 # max_new<=0 completions
+
+    # -- request intake -------------------------------------------------------
+    def submit(self, rid: int, inp: np.ndarray, max_new: int) -> None:
+        if rid in self._out or rid in self.results:
+            raise ValueError(f"request id {rid} already in session")
+        inp = np.asarray(inp)
+        max_new = int(max_new)
+        if max_new <= 0:                              # nothing to generate
+            self.results[rid] = np.asarray([], np.int64)
+            self._instant.append(rid)
+            return
+        if inp.shape[1] + max_new > self.eng.cfg.max_len:
+            raise ValueError(
+                f"request {rid}: prompt_len={inp.shape[1]} + "
+                f"max_new={max_new} exceeds max_len={self.eng.cfg.max_len}"
             )
-            toks_np = np.asarray(toks)            # ONE transfer per chunk
-            for t in range(chunk):
-                active = np.nonzero(slots.request_id >= 0)[0]
-                for s in active:
-                    out[int(slots.request_id[s])].append(int(toks_np[t, s]))
-                slots.step()
+        self._out[rid] = []
+        self.queue.append((rid, inp, max_new))
 
-        return {rid: np.asarray(v, np.int64) for rid, v in out.items()}
+    def cancel(self, rid: int) -> bool:
+        """Abandon a request (hedge loser): drop it from the queue or free
+        its slot mid-decode.  Returns False if it already completed."""
+        if rid in self.results:
+            return False
+        before = len(self.queue)
+        self.queue = [q for q in self.queue if q[0] != rid]
+        hit = len(self.queue) < before
+        for s in np.nonzero(self.slots.request_id == rid)[0]:
+            self.slots.request_id[s] = -1
+            self.slots.remaining[s] = 0
+            hit = True
+        self._out.pop(rid, None)
+        return hit
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        """No work left AND no completion events still to report (instant
+        max_new<=0 completions surface through the next pump)."""
+        return (not self.queue and not self._instant
+                and self.slots.occupancy == 0.0)
+
+    @property
+    def load(self) -> int:
+        """Queued + actively decoding requests (bounded-queue admission)."""
+        return len(self.queue) + int(np.sum(self.slots.request_id >= 0))
+
+    def inflight_rids(self) -> List[int]:
+        """Incomplete rids, decode-slot occupants first (the requeue set
+        when this session's replica dies)."""
+        active = [int(r) for r in self.slots.request_id if r >= 0]
+        return active + [rid for rid, _, _ in self.queue]
+
+    # -- the loop body --------------------------------------------------------
+    def pump(self) -> PumpReport:
+        """One admission pass + one chunk scan; safe to call when idle."""
+        eng, slots = self.eng, self.slots
+        chunk = max(1, eng.cfg.decode_chunk)
+        report = PumpReport()
+        t0 = time.perf_counter()
+        for rid in self._instant:
+            report.completed[rid] = self.results[rid]
+        self._instant = []
+
+        # admit while there is work and a free slot
+        for s in slots.free:
+            if not self.queue:
+                break
+            rid, inp, max_new = self.queue.pop(0)
+            logits, pcache = eng.prefill({"inputs": jnp.asarray(inp)})
+            self.cache = eng._place(self.cache, pcache, int(s))
+            self.lens = self.lens.at[s].set(inp.shape[1])
+            akey = jax.random.fold_in(self.key, self._admissions)
+            self._admissions += 1
+            self.tok = self.tok.at[s].set(eng._sample(logits, akey)[0])
+            slots.admit(int(s), rid, max_new)
+            report.admitted.append(rid)
+            eng.telemetry.prefills += 1
+
+        report.occupancy = slots.occupancy
+        if report.occupancy == 0.0:                   # nothing to decode
+            report.wall_s = time.perf_counter() - t0
+            return report
+
+        # decode one chunk for the whole slot batch
+        self.cache, self.tok, self.lens, self.key, toks = eng._chunk(
+            eng.params, self.cache, self.tok, self.lens, self.key, chunk
+        )
+        toks_np = np.asarray(toks)                    # ONE transfer per chunk
+        n_slots = slots.n_slots
+        for t in range(chunk):
+            active = np.nonzero(slots.request_id >= 0)[0]
+            for s in active:
+                rid = int(slots.request_id[s])
+                self._out[rid].append(int(toks_np[t, s]))
+                report.emitted[rid] = report.emitted.get(rid, 0) + 1
+            report.useful_tokens += len(active)
+            report.wasted_tokens += n_slots - len(active)
+            for rid in slots.step():
+                tokens = np.asarray(self._out.pop(rid), np.int64)
+                self.results[rid] = tokens
+                report.completed[rid] = tokens
+        report.chunk_steps = chunk
+        report.wall_s = time.perf_counter() - t0
+
+        tel = eng.telemetry
+        tel.chunks += 1
+        tel.decode_s += report.wall_s
+        tel.useful_tokens += report.useful_tokens
+        tel.wasted_tokens += report.wasted_tokens
+        tel.completed_requests += len(report.completed)
+        return report
 
 
 class DecodeSlots:

@@ -1,0 +1,423 @@
+"""Fleet-runtime coverage: the control loop closed over live replicas.
+
+The headline drill (satellite of ISSUE 2): kill a ready replica mid-decode
+and assert every in-flight request is requeued and completes with
+token-exact output, and that the controller flips to capacity-optimized on
+the measured shortfall.  Plus unit coverage of the new pieces: the
+CapacityPool overshoot fix, QueueSession resumability, replica lifecycle,
+dispatcher spill, telemetry EWMAs, measured-signal controller steps, and
+request-granularity metrics.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import policy
+from repro.core.capacity import CapacityPool
+from repro.core.controller import ControllerConfig, ModeController
+from repro.core.deployment import DUProfile
+from repro.core.metrics import RequestLog, RequestRecord
+from repro.fleet.dispatcher import Dispatcher
+from repro.fleet.replica import Replica, ReplicaState
+from repro.fleet.runtime import build_demo_fleet, build_saturated_fleet
+from repro.fleet.telemetry import Ewma, TelemetryBus
+from repro.fleet.workload import Request, poisson_trace
+from repro.models import Model
+from repro.serving import EngineConfig, QueueSession, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engines():
+    """One (model, params) pair + the two demo-tier engines, compiled once
+    and shared by every fleet in this module (sessions are per-replica, so
+    sharing engines across runtimes is exactly the production layout)."""
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    cheap = ServingEngine(model, params, EngineConfig(
+        max_len=64, decode_batch=2, temperature=0.0, decode_chunk=4))
+    premium = ServingEngine(model, params, EngineConfig(
+        max_len=64, decode_batch=4, temperature=0.0, decode_chunk=4))
+    return cfg, model, params, {"cheap": cheap, "premium": premium}
+
+
+def _demo_fleet(engines, **kw):
+    rt = build_demo_fleet(**kw)
+    rt._engines.update(engines[3])    # reuse compiled jits across tests
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# satellite: CapacityPool overshoot regression
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_pool_trims_pending_overshoot():
+    """ready < target < ready + inflight used to fire NEITHER branch: all
+    pending matured and the pool overshot the target."""
+    p = CapacityPool(base_capacity=20, provision_delay_s=10.0)
+    p.request(0.0, 10)
+    assert p.inflight == 10
+    # new target 4 sits strictly between ready(0) and ready+inflight(10)
+    p.request(1.0, 4)
+    assert p.inflight == 4
+    assert p.tick(20.0) == 4          # pre-fix this matured to 10
+
+    # ready portion is kept, pending trimmed to the gap
+    p.request(21.0, 8)
+    assert p.tick(40.0) == 8
+    p.request(41.0, 12)               # 4 pending
+    p.request(42.0, 9)                # trim pending 4 -> 1
+    assert p.inflight == 1
+    assert p.tick(60.0) == 9
+
+    # trimming keeps the EARLIEST (soonest-ready) pending requests
+    p2 = CapacityPool(base_capacity=20, provision_delay_s=10.0)
+    p2.request(0.0, 3)                # ready at t=10
+    p2.request(5.0, 6)                # +3 more, ready at t=15
+    p2.request(6.0, 4)                # trim to 4 pending: 3 early + 1 late
+    assert p2.tick(10.0) == 3
+    assert p2.tick(15.0) == 4
+
+
+def test_capacity_pool_scale_down_still_immediate():
+    p = CapacityPool(base_capacity=20, provision_delay_s=10.0)
+    p.request(0.0, 6)
+    assert p.tick(10.0) == 6
+    p.request(11.0, 2)
+    assert p.ready == 2 and p.inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# QueueSession: the resumable serve_queue body
+# ---------------------------------------------------------------------------
+
+
+def test_queue_session_late_submissions_token_exact(engines):
+    """Requests submitted across pump boundaries decode the same tokens as
+    one batch through serve_queue (greedy => order-independent)."""
+    cfg, model, params, eng = engines
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 8)), n) for n in (5, 7, 4, 6)]
+
+    sess = QueueSession(eng["premium"])
+    sess.submit(0, *reqs[0])
+    sess.pump()                        # request 0 mid-flight
+    sess.submit(1, *reqs[1])
+    sess.submit(2, *reqs[2])
+    sess.pump()
+    sess.submit(3, *reqs[3])
+    while not sess.idle:
+        sess.pump()
+
+    ref = eng["premium"].serve_queue(reqs)
+    for rid in range(4):
+        np.testing.assert_array_equal(sess.results[rid], ref[rid])
+
+
+def test_queue_session_inflight_and_cancel(engines):
+    cfg, _, _, eng = engines
+    rng = np.random.default_rng(4)
+    sess = QueueSession(eng["cheap"])          # 2 slots
+    for rid in range(4):
+        sess.submit(rid, rng.integers(0, cfg.vocab_size, (1, 8)), 8)
+    sess.pump()
+    # 2 decoding + 2 queued, decoding slots listed first
+    inflight = sess.inflight_rids()
+    assert set(inflight) == {0, 1, 2, 3}
+    assert set(inflight[:2]) == {0, 1}
+    assert sess.load == 4
+    assert sess.cancel(2)                      # cancel a queued request
+    assert sess.cancel(0)                      # cancel an active slot
+    while not sess.idle:
+        sess.pump()
+    assert set(sess.results) == {1, 3}
+    assert not sess.cancel(1)                  # already completed
+
+    rep = sess.pump()                          # pumping when idle is a no-op
+    assert rep.chunk_steps == 0 and not rep.completed
+
+
+def test_serve_queue_on_complete_hook(engines):
+    cfg, _, _, eng = engines
+    rng = np.random.default_rng(5)
+    seen = {}
+    res = eng["cheap"].serve_queue(
+        [(rng.integers(0, cfg.vocab_size, (1, 8)), 4) for _ in range(3)],
+        on_complete=lambda rid, toks: seen.setdefault(rid, toks),
+    )
+    assert set(seen) == {0, 1, 2}
+    for rid in res:
+        np.testing.assert_array_equal(res[rid], seen[rid])
+
+
+def test_queue_session_instant_and_invalid_submissions(engines):
+    """max_new<=0 completes via the next pump (not silently swallowed);
+    a rejected oversized submit leaves the rid reusable."""
+    cfg, _, _, eng = engines
+    sess = QueueSession(eng["cheap"])
+    sess.submit(0, np.zeros((1, 8), np.int64), 0)
+    assert not sess.idle                       # completion still unreported
+    rep = sess.pump()
+    assert rep.completed[0].size == 0 and sess.idle
+
+    with pytest.raises(ValueError):
+        sess.submit(1, np.zeros((1, 8), np.int64), 1000)   # > max_len
+    sess.submit(1, np.zeros((1, 8), np.int64), 2)          # rid reusable
+    while not sess.idle:
+        sess.pump()
+    assert sess.results[1].size == 2
+
+    seen = {}
+    res = eng["cheap"].serve_queue(
+        [(np.zeros((1, 8), np.int64), 0)],
+        on_complete=lambda rid, toks: seen.setdefault(rid, toks),
+    )
+    assert res[0].size == 0 and 0 in seen
+
+
+# ---------------------------------------------------------------------------
+# replica lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _request(cfg, rid, *, plen=8, max_new=6, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid, arrival_t=0.0, max_new=max_new,
+                   prompt=rng.integers(0, cfg.vocab_size, (1, plen)))
+
+
+def test_replica_lifecycle_drain_and_fail(engines):
+    cfg, _, _, eng = engines
+    rep = Replica("t/r1", "t", eng["cheap"], queue_limit=3)
+    assert rep.state == ReplicaState.PROVISIONING and not rep.accepting
+    rep.warm()
+    assert rep.state == ReplicaState.WARMING and not rep.accepting
+    rep.activate(1.0)
+    assert rep.state == ReplicaState.READY
+
+    assert rep.submit(_request(cfg, 0)) and rep.submit(_request(cfg, 1))
+    assert rep.submit(_request(cfg, 2))
+    assert not rep.submit(_request(cfg, 3))    # bounded queue full
+    rep.drain()
+    assert rep.state == ReplicaState.DRAINING and not rep.accepting
+    while rep.state == ReplicaState.DRAINING:  # drains to completion
+        if rep.pump() is None:
+            break
+    assert rep.state == ReplicaState.TERMINATED
+
+    rep2 = Replica("t/r2", "t", eng["cheap"], queue_limit=3)
+    rep2.activate(0.0)
+    for rid in range(3):
+        assert rep2.submit(_request(cfg, rid))
+    rep2.pump()
+    rids = rep2.fail()
+    assert set(rids) == {0, 1, 2}
+    assert rep2.state == ReplicaState.FAILED and rep2.session is None
+
+    rep3 = Replica("t/r3", "t", eng["cheap"], queue_limit=3)
+    rep3.warm()
+    rep3.drain()                               # cancel while warming
+    assert rep3.state == ReplicaState.TERMINATED
+
+
+# ---------------------------------------------------------------------------
+# dispatcher: weighted placement, spill, failure requeue
+# ---------------------------------------------------------------------------
+
+
+def test_dispatcher_spill_and_backlog(engines):
+    cfg, _, _, eng = engines
+    a = Replica("a/r1", "a", eng["cheap"], queue_limit=2)
+    b = Replica("b/r1", "b", eng["cheap"], queue_limit=2)
+    a.activate(0.0)
+    b.activate(0.0)
+    d = Dispatcher(["a", "b"])
+    d.submit([_request(cfg, i) for i in range(6)])
+    placed = d.dispatch(np.array([1.0, 0.0]), {"a": [a], "b": [b]})
+    # tier a fills (2), overflow spills to b (2), the rest waits
+    assert placed == 4
+    assert a.load == 2 and b.load == 2
+    assert len(d.backlog) == 2 and not d.quiet
+
+    # failure requeues in-flight work at the FRONT of the backlog
+    rids = a.fail()
+    requeued, dropped = d.on_failure(a, rids)
+    assert {r.rid for r in requeued} == set(rids) and not dropped
+    assert all(r.retries == 1 for r in requeued)
+    assert [r.rid for r in list(d.backlog)[:2]] == rids
+
+
+def test_dispatcher_drops_after_max_retries(engines):
+    cfg, _, _, eng = engines
+    d = Dispatcher(["a"], max_retries=1)
+    rep = Replica("a/r1", "a", eng["cheap"], queue_limit=2)
+    rep.activate(0.0)
+    req = _request(cfg, 0)
+    for attempt in range(2):
+        d.submit([req] if attempt == 0 else [])
+        d.dispatch(np.array([1.0]), {"a": [rep]})
+        req_rids = rep.fail()
+        requeued, dropped = d.on_failure(rep, req_rids)
+        if attempt == 0:
+            assert requeued and not dropped
+            rep = Replica("a/r2", "a", eng["cheap"], queue_limit=2)
+            rep.activate(0.0)
+        else:
+            assert dropped and not requeued
+            assert dropped[0].retries == 2
+
+
+# ---------------------------------------------------------------------------
+# telemetry + measured-signal controller
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_and_measured_t_max():
+    e = Ewma(alpha=0.5)
+    assert e.value is None and e.get(7.0) == 7.0
+    assert e.update(4.0) == 4.0
+    assert e.update(8.0) == 6.0
+
+    bus = TelemetryBus(["a", "b"], alpha=1.0)
+    nominal = np.array([5.0, 3.0])
+    # no measurements yet: nominal passthrough
+    np.testing.assert_array_equal(bus.measured_t_max(nominal), nominal)
+
+    class FakeReport:
+        completed = {0: None, 1: None}
+        useful_tokens = 8
+        wasted_tokens = 0
+        occupancy = 1.0
+        wall_s = 0.01
+
+    bus.record_ready("a", 1)
+    bus.record_pump("a", "a/r1", FakeReport(), queue_depth=0)
+    bus.roll(tick_s=1.0)
+    m = bus.measured_t_max(nominal)
+    assert m[0] == pytest.approx(2.0)          # 2 completions / 1s / 1 replica
+    assert m[1] == 3.0                         # idle tier keeps nominal
+    # idle ticks must NOT decay the estimate
+    bus.roll(tick_s=1.0)
+    assert bus.measured_t_max(nominal)[0] == pytest.approx(2.0)
+
+
+def test_controller_accepts_measured_signals():
+    profiles = [
+        DUProfile("a", "m", "h", "f", cost_per_hour=1.0, t_max=100.0, latency_s=0.1),
+        DUProfile("b", "m", "h", "f", cost_per_hour=2.0, t_max=100.0, latency_s=0.1),
+    ]
+    ctrl = ModeController(profiles, ControllerConfig())
+    pool = np.array([2, 2])
+    req = np.array([1, 1])
+    # nominal says plenty of supply -> cost mode
+    d = ctrl.step(0.0, 150.0, req, pool)
+    assert d.mode == policy.COST_OPTIMIZED
+    # the data plane measures a fraction of nominal: same demand now exceeds
+    # what the pools can possibly serve -> capacity mode
+    d = ctrl.step(1.0, 150.0, req, pool, measured_t_max=np.array([10.0, 10.0]))
+    assert d.mode == policy.CAPACITY_OPTIMIZED
+    # recovery of measured throughput flips back
+    d = ctrl.step(2.0, 150.0, req, pool, measured_t_max=np.array([100.0, 100.0]))
+    assert d.mode == policy.COST_OPTIMIZED
+
+
+def test_request_log_metrics():
+    log = RequestLog()
+    log.append(RequestRecord(rid=0, arrival_t=0.0, first_token_t=1.0,
+                             complete_t=5.0, prompt_len=8, tokens=5,
+                             retries=1, tier="a", slo_class="interactive"))
+    log.append(RequestRecord(rid=1, arrival_t=2.0, first_token_t=2.5,
+                             complete_t=4.0, prompt_len=8, tokens=1,
+                             tier="b", slo_class="batch"))
+    assert log.records[0].ttft_s == 1.0
+    assert log.records[0].tpot_s == pytest.approx(1.0)
+    assert log.records[1].tpot_s == 0.0
+    assert log.goodput_tokens() == 6
+    assert log.goodput_tokens_per_s() == pytest.approx(6 / 5.0)
+    assert log.total_retries() == 1
+    assert log.ttft_percentile(50.0, slo_class="batch") == pytest.approx(0.5)
+    assert log.per_tier_counts() == {"a": 1, "b": 1}
+    s = log.summary()
+    assert s["requests_completed"] == 2.0 and s["requests_dropped"] == 0.0
+
+
+def test_workload_poisson_trace_determinism():
+    from repro.core.simulator import steady
+
+    a = poisson_trace(steady(4.0), 10.0, vocab_size=64, seed=7)
+    b = poisson_trace(steady(4.0), 10.0, vocab_size=64, seed=7)
+    assert len(a) == len(b) > 10
+    assert all(x.arrival_t == y.arrival_t and np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a, b))
+    assert all(x.arrival_t <= y.arrival_t for x, y in zip(a, a[1:]))
+    assert {r.slo_class for r in a} == {"interactive", "batch"}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fleet runs
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_completes_workload_token_exact(engines):
+    """No failures: every request completes and matches the bare engine."""
+    rt = _demo_fleet(engines, n_requests=16, rate=2.0)
+    requests = list(rt.workload)
+    report = rt.run()
+    assert len(report.requests.records) == 16
+    assert not report.requests.dropped
+    assert report.requests.total_retries() == 0
+
+    ref = engines[3]["premium"].serve_queue(
+        [(r.prompt, r.max_new) for r in requests])
+    for i, r in enumerate(requests):
+        np.testing.assert_array_equal(report.outputs[r.rid], ref[i])
+    # per-request ledger is coherent
+    for rec in report.requests.records:
+        assert rec.complete_t >= rec.first_token_t > rec.arrival_t
+        assert rec.tokens > 0 and rec.tier in ("cheap", "premium")
+
+
+def test_fleet_failover_drill(engines):
+    """THE drill: cheap-tier outage kills ready replicas mid-decode; every
+    in-flight request requeues and completes token-exact; the controller
+    flips to capacity-optimized on the measured shortfall and recovers."""
+    rt = _demo_fleet(engines, n_requests=40, rate=2.0, outage=(6.0, 16.0))
+    requests = list(rt.workload)
+    report = rt.run()
+
+    # zero lost requests, and the kill really interrupted in-flight work
+    assert len(report.requests.records) == 40
+    assert not report.requests.dropped
+    assert report.requests.total_retries() >= 1
+
+    # token-exact through the retries
+    ref = engines[3]["premium"].serve_queue(
+        [(r.prompt, r.max_new) for r in requests])
+    for i, r in enumerate(requests):
+        np.testing.assert_array_equal(report.outputs[r.rid], ref[i])
+
+    # controller: capacity-optimized through the outage, cost on recovery
+    modes = {r.t: r.mode for r in report.metrics.records}
+    outage_modes = [m for t, m in modes.items() if 8.0 <= t < 16.0]
+    assert np.mean(np.array(outage_modes) == policy.CAPACITY_OPTIMIZED) > 0.6
+    assert report.mode_sequence()[0] == policy.COST_OPTIMIZED
+    post = [m for t, m in modes.items() if t >= 20.0]
+    assert post and np.mean(np.array(post) == policy.COST_OPTIMIZED) > 0.5
+
+    # during the outage nothing was served from the dead tier
+    for rec in report.requests.records:
+        if 8.0 <= rec.complete_t <= 16.0:
+            assert rec.tier == "premium"
+
+
+def test_fleet_graceful_scale_down_drains(engines):
+    """A saturating burst scales up, then the trailing low-load phase
+    scales down via DRAINING (never FAILED) — nothing is lost."""
+    rt = build_saturated_fleet(n_requests=12, n_replicas=2, decode_batch=2)
+    rt._engines["flat"] = engines[3]["cheap"]
+    report = rt.run()
+    assert len(report.requests.records) == 12
+    assert not report.requests.dropped
+    assert report.requests.total_retries() == 0

@@ -12,4 +12,7 @@ python -m pytest -x -q
 echo "== kernel benchmarks (smoke) =="
 python -m benchmarks.run --only kernels
 
+echo "== fleet smoke (100 requests over live replicas, zero-drop gate) =="
+python -m repro.fleet.runtime --smoke
+
 echo "check.sh: OK"
