@@ -4,7 +4,6 @@ from __future__ import annotations
 import time
 from typing import Callable, List, Tuple
 
-import numpy as np
 
 Row = Tuple[str, float, str]   # (name, us_per_call, derived)
 

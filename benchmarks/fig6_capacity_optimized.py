@@ -15,9 +15,7 @@ import numpy as np
 from benchmarks.common import Row
 from repro.configs.sd21 import paper_deployment_units
 from repro.core.capacity import CapacityPool, synthetic_limit
-from repro.core.controller import ControllerConfig
 from repro.core.simulator import ClusterSimulator, SimConfig, steady
-from repro.core import policy
 
 
 def run() -> List[Row]:

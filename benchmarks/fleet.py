@@ -1,11 +1,14 @@
 """Fleet-runtime benchmarks: measured goodput of the closed control loop.
 
-Two rows:
+Three rows:
   * ``fleet/goodput_tokens_per_s`` — saturated single-replica fleet vs a
     bare ``ServingEngine.serve_queue`` over the same burst: the runtime's
     bookkeeping overhead expressed as a goodput ratio (acceptance: >= 0.5x);
   * ``fleet/failover_drill`` — the 2-tier outage drill: completion rate,
-    retries survived, and control-loop ticks to drain.
+    retries survived, and control-loop ticks to drain;
+  * ``fleet/prefix_hit_rate`` — the shared-prefix persona trace through a
+    paged fleet vs the identical fleet with reuse disabled: cache hit-rate
+    and the goodput ratio the prefill skipping buys (acceptance: >= 1.5x).
 """
 from __future__ import annotations
 
@@ -13,7 +16,6 @@ import time
 from typing import List
 
 import jax
-import numpy as np
 
 from benchmarks.common import Row
 
@@ -66,5 +68,28 @@ def run() -> List[Row]:
         f"retries={int(s['total_retries'])},"
         f"mode_changes={int(s['mode_changes'])},"
         f"ticks={report.ticks}",
+    ))
+
+    # -- paged-KV prefix reuse ---------------------------------------------
+    from repro.fleet.runtime import build_prefix_fleet
+
+    n_personas, per_persona = 2, 6
+    n_req = n_personas * per_persona
+    goodput, hit_rate, wall = {}, {}, {}
+    for reuse in (True, False):
+        rt = build_prefix_fleet(n_personas=n_personas,
+                                requests_per_persona=per_persona,
+                                max_new=(4, 8), decode_batch=4,
+                                prefix_reuse=reuse)
+        report = rt.run()
+        assert len(report.requests.records) == n_req, "prefix bench lost requests"
+        goodput[reuse] = report.goodput_tokens_per_s
+        hit_rate[reuse] = report.telemetry["paged"]["cache_hit_rate"]
+        wall[reuse] = report.pump_wall_s
+    rows.append((
+        "fleet/prefix_hit_rate",
+        wall[True] / n_req * 1e6,              # us of pump wall per request
+        f"hit_rate={hit_rate[True]:.2f},"
+        f"goodput_vs_no_reuse={goodput[True] / max(goodput[False], 1e-9):.2f}x",
     ))
     return rows

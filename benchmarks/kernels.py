@@ -69,6 +69,26 @@ def run() -> List[Row]:
     rows.append(("kernels/decode_splitk_4k", us_sk,
                  f"k_splits=4,speedup_vs_singlepass={us_dec/us_sk:.2f}x"))
 
+    # paged decode on the same 4k cache: KV scattered into 256-token pages
+    # and read back through block tables — the gather's cost relative to
+    # the contiguous layout is what this row tracks
+    from repro.kernels.decode_attention.ref import decode_attention_paged_ref
+
+    ps = 256
+    nb = 4096 // ps
+    kp = jnp.concatenate(
+        [jnp.zeros((1, ps, 4, 64), jnp.float32),        # trash page 0
+         kc.reshape(4 * nb, ps, 4, 64)], axis=0)
+    vp = jnp.concatenate(
+        [jnp.zeros((1, ps, 4, 64), jnp.float32),
+         vc.reshape(4 * nb, ps, 4, 64)], axis=0)
+    tbl = jnp.arange(1, 1 + 4 * nb, dtype=jnp.int32).reshape(4, nb)
+    f_pg = jax.jit(decode_attention_paged_ref)
+    us_pg = time_us(lambda: jax.block_until_ready(f_pg(qd, kp, vp, tbl, lens)),
+                    iters=10)
+    rows.append(("kernels/decode_paged_4k", us_pg,
+                 f"page_size={ps},vs_contiguous={us_dec/us_pg:.2f}x"))
+
     # fused scanned generation vs the seed per-step python loop
     # (B=8, steps=64, reduced qwen3-0.6b — the acceptance row: >=2x)
     from repro.configs import get_config

@@ -1,11 +1,18 @@
 """Benchmark harness: one module per paper table/figure + beyond-paper +
 kernel micro-benches.  Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,fig7,...]
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig7,...] \
+        [--json results.json]
+
+``--json`` additionally writes the rows as a JSON list (the input format
+of ``tools/bench_compare.py``, the CI regression gate).  A module that
+raises emits an ``ERROR/<module>`` row INTO the CSV stream (so a CI log
+is self-contained) and the run exits non-zero.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -25,12 +32,15 @@ MODULES = [
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this path as JSON")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     import importlib
 
     print("name,us_per_call,derived")
+    rows = []
     failed = []
     for key, modname in MODULES:
         if only and key not in only:
@@ -39,10 +49,25 @@ def main(argv=None) -> int:
             mod = importlib.import_module(modname)
             for name, us, derived in mod.run():
                 print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": round(us, 1),
+                             "derived": str(derived)})
             sys.stdout.flush()
-        except Exception:
+        except Exception as exc:
             traceback.print_exc()
+            # the failure must be visible in the CSV stream itself, not
+            # just stderr — CI logs often separate the two
+            # commas would break the 3-field CSV contract downstream
+            reason = (f"{type(exc).__name__}: {exc}".splitlines()[0][:200]
+                      .replace(",", ";"))
+            print(f"ERROR/{key},0.0,{reason}")
+            sys.stdout.flush()
+            rows.append({"name": f"ERROR/{key}", "us_per_call": 0.0,
+                         "derived": reason})
             failed.append(key)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         return 1

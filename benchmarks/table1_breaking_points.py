@@ -12,7 +12,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import Row, time_us
+from benchmarks.common import Row
 from repro.configs.sd21 import PAPER_COST_PER_INFERENCE, paper_deployment_units
 from repro.core.router import queue_latency
 

@@ -13,7 +13,7 @@ from repro.configs.sd21 import paper_deployment_units
 from repro.core import policy
 from repro.core.allocation import heuristic_allocation, optimal_integral
 from repro.core.capacity import CapacityPool
-from repro.core.controller import ControllerConfig, ModeController
+from repro.core.controller import ControllerConfig
 from repro.core.simulator import ClusterSimulator, SimConfig, diurnal_cycle
 
 dus = paper_deployment_units()

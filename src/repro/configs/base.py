@@ -7,8 +7,8 @@ so tests and the dry-run share one definition of each model family.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

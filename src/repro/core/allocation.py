@@ -15,7 +15,7 @@ cost gap between the paper's heuristic and this optimum.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from math import ceil
-from typing import List
 
 
 @dataclass

@@ -9,7 +9,7 @@ delay between *requesting* a replica and it becoming *ready*
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 
 @dataclass

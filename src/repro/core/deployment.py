@@ -14,7 +14,6 @@ Profiles come from two sources:
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Optional
 
 from repro.configs.base import HardwareTier, ModelConfig
 

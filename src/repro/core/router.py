@@ -12,7 +12,6 @@ effective latency of hedged requests is the min of the two pools.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 import numpy as np
 

@@ -15,11 +15,10 @@ DU profiles, and runs the same loop for roofline-derived LM-arch profiles.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core import policy
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, target_metric_from_profile
 from repro.core.capacity import CapacityPool
 from repro.core.controller import ControllerConfig, ModeController

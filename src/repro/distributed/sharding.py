@@ -13,7 +13,7 @@ sequence over the axes noted in DESIGN.md §5.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np

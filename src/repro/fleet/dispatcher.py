@@ -3,8 +3,17 @@
 The analytic router splits a scalar RPS by the controller's weights; here
 every individual request is placed on a concrete replica:
 
-  * tier choice follows the controller weights (largest-deficit rounding, so
-    realized traffic tracks the weights without randomness);
+  * prefix affinity first: a request whose prompt prefix is already cached
+    in some replica's paged KV goes to the replica holding the LONGEST
+    match (ties to the least-loaded) — a prefix hit skips prefill, which
+    beats any load-balance gain once the match is substantial.  Matches
+    shorter than ``min_affinity_tokens`` fall through to the weighted
+    path (a one-page opener must not override the controller), and
+    affinity placements still charge the tier's deficit so realized
+    traffic keeps tracking the weights.  Replicas without paging score 0,
+    so contiguous fleets fall straight through to the weighted path;
+  * otherwise tier choice follows the controller weights (largest-deficit
+    rounding, so realized traffic tracks the weights without randomness);
   * replica choice within a tier is least-loaded-first over replicas whose
     bounded queue has room;
   * a request whose weighted tier is full SPILLS to any tier with headroom
@@ -30,15 +39,19 @@ from repro.fleet.workload import Request
 
 class Dispatcher:
     def __init__(self, tiers: Sequence[str], *, max_retries: int = 16,
-                 hedge_fraction: float = 0.0):
+                 hedge_fraction: float = 0.0, prefix_affinity: bool = True,
+                 min_affinity_tokens: int = 16):
         self.tiers = list(tiers)
         self.max_retries = max_retries
         self.hedge_fraction = hedge_fraction
+        self.prefix_affinity = prefix_affinity
+        self.min_affinity_tokens = min_affinity_tokens
         self.backlog: Deque[Request] = deque()
         # rid -> (request, primary replica, optional hedge replica)
         self.inflight: Dict[int, Tuple[Request, Replica, Optional[Replica]]] = {}
         self.dropped: List[Request] = []
         self.dispatched_per_tier: Dict[str, int] = {t: 0 for t in tiers}
+        self.affinity_placements = 0      # requests routed by cached prefix
         self._deficit = np.zeros(len(tiers), dtype=np.float64)
         self._hedge_debt = 0.0
 
@@ -51,15 +64,23 @@ class Dispatcher:
         return not self.backlog and not self.inflight
 
     # -- placement ----------------------------------------------------------
+    @staticmethod
+    def _masked_weights(weights: np.ndarray, has_room: np.ndarray) -> np.ndarray:
+        """The one place the weighted policy masks/normalizes: weights of
+        full/dead tiers are zeroed; a zero sum means 'spill, charge no
+        deficit' for both the weighted pick and affinity accounting."""
+        w = np.where(has_room, np.maximum(weights, 0.0), 0.0)
+        s = w.sum()
+        return w / s if s > 0 else w
+
     def _pick_tier(self, weights: np.ndarray,
                    has_room: np.ndarray) -> Optional[int]:
         """Largest-deficit weighted choice among tiers with room."""
-        w = np.where(has_room, np.maximum(weights, 0.0), 0.0)
+        w = self._masked_weights(weights, has_room)
         if w.sum() <= 0:
             # weights point only at full/dead tiers: spill anywhere with room
             candidates = np.nonzero(has_room)[0]
             return int(candidates[0]) if len(candidates) else None
-        w = w / w.sum()
         self._deficit += w
         order = np.argsort(-self._deficit)
         for i in order:
@@ -69,11 +90,56 @@ class Dispatcher:
         return None
 
     @staticmethod
-    def _best_replica(replicas: List[Replica]) -> Optional[Replica]:
-        accepting = [r for r in replicas if r.accepting]
+    def _best_replica(replicas: List[Replica],
+                      req: Optional[Request] = None) -> Optional[Replica]:
+        """Least-loaded accepting replica; with ``req``, only replicas whose
+        engine/page budget can actually hold that request (an undersized
+        paged pool must read as 'no room', not blow up at submit)."""
+        accepting = [r for r in replicas
+                     if r.accepting and (req is None or r.fits(req))]
         if not accepting:
             return None
         return min(accepting, key=lambda r: r.load)
+
+    def _affinity_replica(
+        self, req: Request, replicas_by_tier: Dict[str, List[Replica]]
+    ) -> Optional[Tuple[Replica, int]]:
+        """(replica, tier_index) holding the longest cached prefix of
+        ``req``'s prompt, or None when nothing useful is cached anywhere."""
+        if not self.prefix_affinity:
+            return None
+        # contiguous fleets short-circuit before any prompt boxing: replicas
+        # without a paged session can never score above 0
+        if not any(rep.session is not None and rep.session.paged
+                   for reps in replicas_by_tier.values() for rep in reps):
+            return None
+        best: Optional[Tuple[Replica, int]] = None
+        best_key = (0, 0)                 # (match_len, -load): longest, then idlest
+        # Request.token_key() boxes the prompt once over its whole lifetime
+        # (backlogged requests are re-scored every tick)
+        toks = req.token_key()
+        for ti, tier in enumerate(self.tiers):
+            for rep in replicas_by_tier.get(tier, []):
+                if not rep.accepting or not rep.fits(req):
+                    continue
+                mlen = rep.prefix_match_len(toks)
+                if mlen < self.min_affinity_tokens:
+                    continue
+                key = (mlen, -rep.load)
+                if key > best_key:
+                    best, best_key = (rep, ti), key
+        return best
+
+    def _account_placement(self, ti: int, weights: np.ndarray,
+                           has_room: np.ndarray) -> None:
+        """Charge one placement against tier ``ti``'s deficit exactly as a
+        weighted pick of ``ti`` would (shared masking via _masked_weights;
+        the zero-weight spill case charges nothing), so affinity placements
+        keep realized traffic tracking the controller weights."""
+        w = self._masked_weights(weights, has_room)
+        if w.sum() > 0:
+            self._deficit += w
+            self._deficit[ti] -= 1.0
 
     def dispatch(self, weights: np.ndarray,
                  replicas_by_tier: Dict[str, List[Replica]]) -> int:
@@ -84,24 +150,55 @@ class Dispatcher:
         """
         weights = np.asarray(weights, dtype=np.float64)
         placed = 0
+        rotated: set = set()        # unfittable rids already cycled this call
         while self.backlog:
             req = self.backlog[0]
             has_room = np.array(
-                [self._best_replica(replicas_by_tier.get(t, [])) is not None
+                [self._best_replica(replicas_by_tier.get(t, []), req) is not None
                  for t in self.tiers]
             )
-            ti = self._pick_tier(weights, has_room)
-            if ti is None:
-                break                     # no capacity anywhere: retry next tick
+            affinity = self._affinity_replica(req, replicas_by_tier)
+            if affinity is not None:
+                rep, ti = affinity
+                self._account_placement(ti, weights, has_room)
+            else:
+                ti = self._pick_tier(weights, has_room)
+                if ti is None:
+                    # "no room" can mean two things.  Tiers full right now:
+                    # leave the head request in place and retry next tick.
+                    # Request structurally unfittable on every LIVE replica
+                    # (engine max_len / page budget too small): rotate it to
+                    # the back so it cannot head-of-line block the backlog,
+                    # and drop it after max_retries failed placements.
+                    live = [r for reps in replicas_by_tier.values()
+                            for r in reps if r.live]
+                    if live and not any(r.fits(req) for r in live):
+                        self.backlog.popleft()
+                        if req.rid in rotated:
+                            # one retry per tick: a fitting replica may be
+                            # warming — the budget must span ticks, not burn
+                            # out inside this call
+                            self.backlog.append(req)
+                            break
+                        rotated.add(req.rid)
+                        retried = req.retried()
+                        if retried.retries > self.max_retries:
+                            self.dropped.append(retried)
+                        else:
+                            self.backlog.append(retried)
+                        continue
+                    break                 # full everywhere: retry next tick
+                rep = self._best_replica(replicas_by_tier[self.tiers[ti]], req)
             self.backlog.popleft()
             tier = self.tiers[ti]
-            rep = self._best_replica(replicas_by_tier[tier])
             if rep is None or not rep.submit(req):
-                # _pick_tier guaranteed room; a refusal here is a logic bug
+                # room was guaranteed above; a refusal here is a logic bug
                 raise RuntimeError(f"tier {tier} refused request {req.rid}")
             hedge = self._maybe_hedge(req, ti, weights, replicas_by_tier)
             self.inflight[req.rid] = (req, rep, hedge)
             self.dispatched_per_tier[tier] += 1
+            if affinity is not None:
+                self.affinity_placements += 1
             placed += 1
         return placed
 
@@ -115,7 +212,7 @@ class Dispatcher:
         for ti, tier in enumerate(self.tiers):
             if ti == primary_ti:
                 continue
-            rep = self._best_replica(replicas_by_tier.get(tier, []))
+            rep = self._best_replica(replicas_by_tier.get(tier, []), req)
             if rep is not None and rep.submit(req):
                 self._hedge_debt -= 1.0
                 return rep

@@ -19,7 +19,6 @@ from __future__ import annotations
 import enum
 from typing import List, Optional
 
-import numpy as np
 
 from repro.fleet.workload import Request
 from repro.serving.engine import PumpReport, QueueSession, ServingEngine
@@ -92,6 +91,14 @@ class Replica:
     def load(self) -> int:
         return self.session.load if self.session is not None else 0
 
+    def prefix_match_len(self, prompt) -> int:
+        """Tokens of ``prompt`` ((1, Sp) array or token tuple) already cached
+        in this replica's paged KV — the dispatcher's prefix-affinity score
+        (0 when the replica is not serving or paging is off)."""
+        if self.session is None:
+            return 0
+        return self.session.prefix_match_len(prompt)
+
     @property
     def live(self) -> bool:
         return self.state in (ReplicaState.READY, ReplicaState.DRAINING)
@@ -102,8 +109,14 @@ class Replica:
         return self.state in (ReplicaState.WARMING, ReplicaState.READY,
                               ReplicaState.DRAINING)
 
+    def fits(self, req: Request) -> bool:
+        """Whether this replica's engine/page budget can EVER hold ``req``
+        (independent of current load)."""
+        return (self.session is not None
+                and self.session.fits(req.prompt_len, req.max_new))
+
     def submit(self, req: Request) -> bool:
-        if not self.accepting:
+        if not self.accepting or not self.fits(req):
             return False
         self.session.submit(req.rid, req.prompt, req.max_new)
         return True

@@ -67,6 +67,10 @@ class TierSpec:
     initial_replicas: int = 1
     param_seed: int = 0               # SAME seed across tiers => token-exact
                                       # cross-tier retries/spills
+    paged_kv: bool = False            # block-based KV + prefix reuse
+    page_size: int = 16
+    num_pages: int = 0                # 0 => engine auto-sizing
+    prefix_reuse: bool = True
 
     def profile(self) -> DUProfile:
         return DUProfile(
@@ -188,6 +192,7 @@ class FleetRuntime:
         self.mode_trace: List[Tuple[float, int]] = []
         self._first_token_t: Dict[int, float] = {}
         self._demand = Ewma(self.cfg.demand_alpha)
+        self._dispatcher_drops_seen = 0
         self._wl_idx = 0
         self._pump_wall_s = 0.0
         self._useful_tokens = 0
@@ -215,7 +220,11 @@ class FleetRuntime:
                 EngineConfig(max_len=spec.max_len,
                              decode_batch=spec.decode_batch,
                              temperature=0.0,
-                             decode_chunk=spec.decode_chunk),
+                             decode_chunk=spec.decode_chunk,
+                             paged_kv=spec.paged_kv,
+                             page_size=spec.page_size,
+                             num_pages=spec.num_pages,
+                             prefix_reuse=spec.prefix_reuse),
             )
         return self._engines[spec.name]
 
@@ -324,6 +333,15 @@ class FleetRuntime:
 
         # 5. request-granularity dispatch
         self.dispatcher.dispatch(decision.weights, self.replicas)
+        # requests the dispatcher dropped as unfittable (they fit no live
+        # replica's engine/page budget) must reach the request log too —
+        # replica-failure drops are already logged via _fail_replica
+        new_drops = self.dispatcher.dropped[self._dispatcher_drops_seen:]
+        self._dispatcher_drops_seen = len(self.dispatcher.dropped)
+        for req in new_drops:
+            if req.rid not in self.request_log.dropped:
+                self.request_log.dropped.append(req.rid)
+                self._first_token_t.pop(req.rid, None)
 
         # 6. pump every live replica one admission+chunk cycle
         completions_per_tier = {s.name: 0 for s in self.tiers}
@@ -417,11 +435,36 @@ class FleetRuntime:
         plens = sorted({r.prompt_len for r in self.workload}) or [8]
         for spec in self.tiers:
             eng = self._engine_for(spec)
+            vocab = eng.model.cfg.vocab_size
             sess = QueueSession(eng)
             for i, plen in enumerate(plens):
-                sess.submit(i, np.zeros((1, plen), np.int64), 1)
+                # a distinct first token per length keeps these prompts from
+                # prefix-hitting EACH OTHER on a paged engine — every length
+                # must compile the full-prefill shape here, not inside the
+                # first measured pump
+                p = np.zeros((1, plen), np.int64)
+                p[0, 0] = min(i, vocab - 1)
+                sess.submit(i, p, 1)
             while not sess.idle:
                 sess.pump()
+            if eng.paged and eng.cfg.prefix_reuse:
+                # compile the prefix-hit continuation prefill too: resubmit
+                # each prompt with the tail past the last whole page flipped,
+                # so it block-matches the prompt just cached above and
+                # prefills a workload-shaped suffix.
+                rid = len(plens)
+                ps = eng.cfg.page_size
+                for i, plen in enumerate(plens):
+                    m = (plen - 1) // ps * ps
+                    if m <= 0:
+                        continue
+                    p = np.zeros((1, plen), np.int64)
+                    p[0, 0] = min(i, vocab - 1)
+                    p[0, m:] = min(1, vocab - 1)
+                    sess.submit(rid, p, 1)
+                    rid += 1
+                while not sess.idle:
+                    sess.pump()
         self._warmed = True
 
     def _busy(self) -> bool:
@@ -461,6 +504,7 @@ def build_demo_fleet(
     rate: float = 3.0,
     outage: Optional[Tuple[float, float]] = None,
     hedge_fraction: float = 0.0,
+    paged: bool = False,
     seed: int = 0,
 ) -> FleetRuntime:
     """A heterogeneous 2-tier fleet over reduced-config engines.
@@ -484,11 +528,13 @@ def build_demo_fleet(
         TierSpec(name="cheap", arch=arch, cost_per_hour=1.0,
                  nominal_t_max=1.0, latency_s=2.0, decode_batch=2,
                  decode_chunk=4, queue_limit=6, base_capacity=6,
-                 provision_delay_s=3.0, initial_replicas=2),
+                 provision_delay_s=3.0, initial_replicas=2,
+                 paged_kv=paged, page_size=8),
         TierSpec(name="premium", arch=arch, cost_per_hour=4.0,
                  nominal_t_max=2.0, latency_s=1.0, decode_batch=4,
                  decode_chunk=4, queue_limit=8, base_capacity=4,
-                 provision_delay_s=3.0, initial_replicas=1),
+                 provision_delay_s=3.0, initial_replicas=1,
+                 paged_kv=paged, page_size=8),
     ]
     pool_events = None
     if outage is not None:
@@ -530,6 +576,50 @@ def build_saturated_fleet(
     return FleetRuntime([tier], workload, FleetConfig(seed=seed))
 
 
+def build_prefix_fleet(
+    *,
+    arch: str = "qwen3-0.6b",
+    n_personas: int = 3,
+    requests_per_persona: int = 8,
+    prefix_len: int = 768,
+    suffix_len: int = 6,
+    max_new: Tuple[int, int] = (4, 8),
+    n_replicas: int = 1,
+    decode_batch: int = 4,
+    page_size: int = 64,
+    prefix_reuse: bool = True,
+    seed: int = 0,
+) -> FleetRuntime:
+    """A paged single-tier fleet fed the shared-prefix persona workload —
+    the configuration where prefix reuse is measurable end-to-end: long
+    persona prompts dominate admission cost, so skipping their prefill on
+    a cache hit shows up directly in goodput.  ``prefix_reuse=False`` runs
+    the identical paged fleet with the cache disabled (the control)."""
+    from repro.configs import get_config
+    from repro.fleet.workload import shared_prefix_trace
+
+    vocab = get_config(arch).reduce().vocab_size
+    workload = shared_prefix_trace(
+        n_personas, requests_per_persona, vocab_size=vocab,
+        prefix_len=prefix_len, suffix_len=suffix_len, max_new=max_new,
+        seed=seed,
+    )
+    need = prefix_len + suffix_len + max_new[1]
+    max_len = -(-need // page_size) * page_size        # whole pages
+    # explicit 2x pool: the benchmark measures reuse, so persona prompts
+    # must survive in cache alongside a fully-occupied live set
+    num_pages = 1 + 2 * decode_batch * (max_len // page_size)
+    tier = TierSpec(name="paged", arch=arch, cost_per_hour=1.0,
+                    nominal_t_max=2.0, max_len=max_len,
+                    decode_batch=decode_batch, decode_chunk=4,
+                    queue_limit=2 * decode_batch,
+                    base_capacity=n_replicas, initial_replicas=n_replicas,
+                    provision_delay_s=1.0, paged_kv=True,
+                    page_size=page_size, num_pages=num_pages,
+                    prefix_reuse=prefix_reuse)
+    return FleetRuntime([tier], workload, FleetConfig(seed=seed))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -539,6 +629,8 @@ def main(argv=None) -> int:
     ap.add_argument("--rate", type=float, default=3.0)
     ap.add_argument("--outage", default="",
                     help="start:end control-loop seconds of cheap-tier outage")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve with the paged KV cache (prefix reuse on)")
     args = ap.parse_args(argv)
 
     outage = None
@@ -546,7 +638,7 @@ def main(argv=None) -> int:
         s, e = (float(x) for x in args.outage.split(":"))
         outage = (s, e)
     rt = build_demo_fleet(arch=args.arch, n_requests=args.requests,
-                          rate=args.rate, outage=outage)
+                          rate=args.rate, outage=outage, paged=args.paged)
     t0 = time.perf_counter()
     report = rt.run()
     wall = time.perf_counter() - t0

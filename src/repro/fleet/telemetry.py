@@ -10,7 +10,7 @@ occupancy so an under-utilized tier is not mistaken for a slow one.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -61,6 +61,10 @@ class _TierWindow:
     ready_replicas: int = 0
     useful_tokens: int = 0
     wall_s: float = 0.0
+    prefix_hits: int = 0        # paged-KV admissions served from cache
+    prefix_misses: int = 0
+    reused_tokens: int = 0
+    prefilled_tokens: int = 0
 
 
 class TelemetryBus:
@@ -81,6 +85,10 @@ class TelemetryBus:
         self.tier_tokens_per_s: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_ttft: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_tpot: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        # paged-KV prefix cache effectiveness (stays at 0 for contiguous tiers)
+        self.tier_cache_hit_rate: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        self.tier_token_reuse: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        self.tier_page_occupancy: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
 
     # -- ingestion ----------------------------------------------------------
     def signals_for(self, replica_name: str) -> ReplicaSignals:
@@ -100,6 +108,14 @@ class TelemetryBus:
         win.wall_s += report.wall_s
         if report.occupancy > 0:
             win.busy_replicas += 1
+        # paged-KV channels (getattr: contiguous reports may predate them)
+        win.prefix_hits += getattr(report, "prefix_hits", 0)
+        win.prefix_misses += getattr(report, "prefix_misses", 0)
+        win.reused_tokens += getattr(report, "reused_tokens", 0)
+        win.prefilled_tokens += getattr(report, "prefilled_tokens", 0)
+        # unconditional: a drained pool must decay the EWMA back toward 0
+        # (contiguous tiers just keep it pinned at 0)
+        self.tier_page_occupancy[tier].update(getattr(report, "page_occupancy", 0.0))
 
     def record_ready(self, tier: str, n_ready: int) -> None:
         self._window[tier].ready_replicas = n_ready
@@ -130,6 +146,12 @@ class TelemetryBus:
                 self.tier_occupancy[tier].update(occ)
             if win.wall_s > 0 and win.useful_tokens > 0:
                 self.tier_tokens_per_s[tier].update(win.useful_tokens / win.wall_s)
+            admissions = win.prefix_hits + win.prefix_misses
+            if admissions > 0:
+                self.tier_cache_hit_rate[tier].update(win.prefix_hits / admissions)
+            prompt_tokens = win.reused_tokens + win.prefilled_tokens
+            if prompt_tokens > 0:
+                self.tier_token_reuse[tier].update(win.reused_tokens / prompt_tokens)
             self._window[tier] = _TierWindow()
 
     # -- the live t_max -----------------------------------------------------
@@ -158,6 +180,9 @@ class TelemetryBus:
                 "tokens_per_s": self.tier_tokens_per_s[tier].get(),
                 "ttft_s": self.tier_ttft[tier].get(),
                 "tpot_s": self.tier_tpot[tier].get(),
+                "cache_hit_rate": self.tier_cache_hit_rate[tier].get(),
+                "token_reuse_rate": self.tier_token_reuse[tier].get(),
+                "page_occupancy": self.tier_page_occupancy[tier].get(),
             }
             for tier in self.tiers
         }

@@ -43,10 +43,18 @@ class Request:
     max_new: int
     slo_class: str = "interactive"
     retries: int = 0              # incremented on every requeue after failure
+    # lazy int-tuple form of the prompt (the prefix-cache key shape);
+    # carried through retried() copies so a backlogged request boxes once
+    _token_key: Optional[tuple] = field(default=None, repr=False, compare=False)
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[1])
+
+    def token_key(self) -> tuple:
+        if self._token_key is None:
+            self._token_key = tuple(int(t) for t in self.prompt[0])
+        return self._token_key
 
     def retried(self) -> "Request":
         return replace(self, retries=self.retries + 1)
@@ -107,6 +115,45 @@ def poisson_trace(
         prompt = rng.integers(0, vocab_size, (1, plen), dtype=np.int64)
         reqs.append(Request(rid=rid, arrival_t=float(t), prompt=prompt,
                             max_new=new, slo_class=cls.name))
+    return reqs
+
+
+def shared_prefix_trace(
+    n_personas: int,
+    requests_per_persona: int,
+    *,
+    vocab_size: int,
+    prefix_len: int = 48,
+    suffix_len: int = 4,
+    max_new: Tuple[int, int] = (4, 12),
+    spacing_s: float = 0.0,
+    seed: int = 0,
+) -> List[Request]:
+    """N personas × M requests, every request = persona system prompt +
+    a short unique user suffix — the workload where paged-KV prefix reuse
+    pays: all but the first request per persona should hit the prefix
+    cache and skip prefilling ``prefix_len`` tokens.
+
+    Prompt lengths are FIXED (prefix_len + suffix_len) so the engine
+    compiles one prefill and one suffix-scan shape.  Personas interleave
+    round-robin (the adversarial order for a single replica's cache);
+    ``spacing_s`` spreads arrivals, 0 means one saturating burst.
+    """
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab_size, (prefix_len,), dtype=np.int64)
+                for _ in range(n_personas)]
+    reqs: List[Request] = []
+    rid = 0
+    for _ in range(requests_per_persona):
+        for i in range(n_personas):
+            suffix = rng.integers(0, vocab_size, (suffix_len,), dtype=np.int64)
+            prompt = np.concatenate([prefixes[i], suffix])[None, :]
+            reqs.append(Request(
+                rid=rid, arrival_t=rid * spacing_s, prompt=prompt,
+                max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
+                slo_class="interactive",
+            ))
+            rid += 1
     return reqs
 
 

@@ -21,6 +21,16 @@ Two variants:
   small B·Hkv then parallelize across B·Hkv·K grid cells — the exact
   flash-decoding decomposition (Dao et al.), and the layout the scheduler's
   t_max measurement rewards for decode_32k/long_500k cells.
+
+Paged variants (``decode_attention_paged`` / ``decode_attention_paged_
+splitk``): KV lives in a shared page pool (P, page_size, Hkv, D) and each
+sequence names its pages in a (B, n_blocks) block table.  The tables (and
+per-sequence lengths) ride in as *scalar-prefetch* operands
+(``pltpu.PrefetchScalarGridSpec``) so the BlockSpec index_map can resolve
+``tables[b, j]`` before the tile DMA issues — the KV gather happens inside
+the grid, not as a materialized (B, S, Hkv, D) copy in HBM.  One grid step
+streams one physical page; the online-softmax state and the split-K
+combine are shared with the contiguous kernels.
 """
 from __future__ import annotations
 
@@ -247,6 +257,245 @@ def decode_attention_splitk(
         ],
         interpret=interpret,
     )(lengths, qg, k_cache, v_cache)
+
+    out = pl.pallas_call(
+        _splitk_combine_kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, k_splits, G), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, k_splits, G), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, k_splits, G, D), lambda b, h: (b, h, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(m_p, l_p, acc_p)
+    return out.reshape(B, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# paged flash decoding (block-table KV gather inside the grid)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(
+    tbl_ref, len_ref,             # scalar-prefetch: (B,nb) tables, (B,) lens
+    q_ref, k_ref, v_ref, o_ref,   # (1,1,G,D), (1,ps,1,D), (1,ps,1,D), (1,1,G,D)
+    m_ref, l_ref, acc_ref,        # scratch (G,), (G,), (G,D)
+    *,
+    ps: int, nb: int, scale: float,
+):
+    """Single-stage paged kernel.  Grid (B, Hkv, nb): the innermost dim
+    walks the sequence's block table; the index_map has already DMA'd page
+    ``tbl_ref[b, j]`` into the (ps, D) KV tile, so the body is the same
+    online softmax as the contiguous kernel with j*ps as the tile origin."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * ps < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (ps, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                           # (G, ps)
+        pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def decode_attention_paged(
+    q: jax.Array,              # (B, Hq, D)
+    k_pages: jax.Array,        # (P, page_size, Hkv, D) shared pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_blocks) int32
+    lengths: jax.Array,        # (B,) int32
+    *,
+    softmax_scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+
+    P, ps, Hkv, D = k_pages.shape
+    B, nb = block_tables.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Hkv, G, D)
+    from repro.kernels.flash_attention.kernel import pltpu_vmem
+
+    kernel = functools.partial(_paged_decode_kernel, ps=ps, nb=nb, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu_vmem((G,), jnp.float32),
+            pltpu_vmem((G,), jnp.float32),
+            pltpu_vmem((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)
+
+
+def _paged_splitk_partial_kernel(
+    tbl_ref, len_ref,             # scalar-prefetch
+    q_ref, k_ref, v_ref,          # (1,1,G,D), (1,ps,1,D), (1,ps,1,D)
+    m_out, l_out, acc_out,        # (1,1,1,G), (1,1,1,G), (1,1,1,G,D)
+    m_ref, l_ref, acc_ref,        # scratch
+    *,
+    ps: int, nbc: int, scale: float,
+):
+    """Stage 1 of paged split-K: grid (B, Hkv, K, nb/K); each chunk walks
+    its share of the block table and emits an unnormalized partial state
+    (identical contract to the contiguous split-K partial kernel)."""
+    b = pl.program_id(0)
+    kc = pl.program_id(2)
+    j = pl.program_id(3)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tile_start = (kc * nbc + j) * ps
+
+    @pl.when(tile_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        pos = tile_start + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(j == nbc - 1)
+    def _finalize():
+        m_out[0, 0, 0] = m_ref[...]
+        l_out[0, 0, 0] = l_ref[...]
+        acc_out[0, 0, 0] = acc_ref[...]
+
+
+def decode_attention_paged_splitk(
+    q: jax.Array,              # (B, Hq, D)
+    k_pages: jax.Array,        # (P, page_size, Hkv, D)
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_blocks) int32
+    lengths: jax.Array,        # (B,) int32
+    *,
+    k_splits: int = 4,
+    softmax_scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Two-stage paged flash decoding: the block-table axis is cut into
+    ``k_splits`` chunks (grid-parallel partial states), then merged with
+    the SAME combine kernel as the contiguous split-K path."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    P, ps, Hkv, D = k_pages.shape
+    B, nb = block_tables.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    assert nb % k_splits == 0, (nb, k_splits)
+    nbc = nb // k_splits                     # pages per split chunk
+
+    qg = q.reshape(B, Hkv, G, D)
+    from repro.kernels.flash_attention.kernel import pltpu_vmem
+
+    partial_kernel = functools.partial(
+        _paged_splitk_partial_kernel, ps=ps, nbc=nbc, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, k_splits, nbc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, kc, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, kc, j, tbl, lens: (tbl[b, kc * nbc + j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, kc, j, tbl, lens: (tbl[b, kc * nbc + j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, h, kc, j, tbl, lens: (b, h, kc, 0)),
+            pl.BlockSpec((1, 1, 1, G),
+                         lambda b, h, kc, j, tbl, lens: (b, h, kc, 0)),
+            pl.BlockSpec((1, 1, 1, G, D),
+                         lambda b, h, kc, j, tbl, lens: (b, h, kc, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu_vmem((G,), jnp.float32),
+            pltpu_vmem((G,), jnp.float32),
+            pltpu_vmem((G, D), jnp.float32),
+        ],
+    )
+    m_p, l_p, acc_p = pl.pallas_call(
+        partial_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, k_splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, k_splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, k_splits, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
 
     out = pl.pallas_call(
         _splitk_combine_kernel,

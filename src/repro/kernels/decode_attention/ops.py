@@ -4,6 +4,12 @@
 caches: grid is already wide enough at B·Hkv) and the two-stage split-K
 kernel (long caches: B·Hkv·K grid cells walk KV chunks concurrently).
 ``k_splits=0`` picks the split automatically from the cache length.
+
+With ``page_table`` the KV operands are a shared page pool
+(P, page_size, Hkv, D) read through (B, n_blocks) block tables, and the
+same short/long split applies over the *logical* cache length
+n_blocks·page_size — the paged split-K kernel keeps the flash-decoding
+grid parallelism while gathering pages inside the grid.
 """
 from __future__ import annotations
 
@@ -12,6 +18,8 @@ from functools import partial
 import jax
 
 from repro.kernels.decode_attention.kernel import (
+    decode_attention_paged,
+    decode_attention_paged_splitk,
     decode_attention_pallas,
     decode_attention_splitk,
 )
@@ -35,9 +43,39 @@ def auto_k_splits(S: int, block_k: int = 512) -> int:
     return 1
 
 
+def auto_paged_k_splits(n_blocks: int, page_size: int) -> int:
+    """Largest split ≤ SPLITK_MAX that divides the block table evenly and
+    covers ≥ SPLITK_MIN_S logical tokens."""
+    if n_blocks * page_size < SPLITK_MIN_S:
+        return 1
+    for k in range(min(SPLITK_MAX, n_blocks), 1, -1):
+        if n_blocks % k == 0:
+            return k
+    return 1
+
+
 @partial(jax.jit, static_argnames=("block_k", "k_splits"))
-def decode_attention(q, k_cache, v_cache, lengths, *, block_k=512, k_splits=0):
-    """One-token GQA attention vs (B,S,Hkv,D) cache with per-seq lengths."""
+def decode_attention(q, k_cache, v_cache, lengths, *, page_table=None,
+                     block_k=512, k_splits=0):
+    """One-token GQA attention with per-seq lengths.
+
+    Contiguous: ``k_cache`` is (B, S, Hkv, D).  Paged (``page_table`` is a
+    (B, n_blocks) int32 array): ``k_cache`` is the (P, page_size, Hkv, D)
+    pool and tiles are gathered through the table inside the kernel grid.
+    """
+    if page_table is not None:
+        nb = page_table.shape[1]
+        ps = k_cache.shape[1]
+        if k_splits == 0:
+            k_splits = auto_paged_k_splits(nb, ps)
+        if k_splits > 1:
+            return decode_attention_paged_splitk(
+                q, k_cache, v_cache, page_table, lengths,
+                k_splits=k_splits, interpret=_interpret(),
+            )
+        return decode_attention_paged(
+            q, k_cache, v_cache, page_table, lengths, interpret=_interpret()
+        )
     S = k_cache.shape[1]
     if k_splits == 0:
         k_splits = auto_k_splits(S, block_k)

@@ -5,6 +5,12 @@ splitk_ref`` expresses the same math in the two-stage split-K decomposition
 (per-chunk partial (m, l, acc) + log-sum-exp combine) so the Pallas split-K
 kernel has a shape-faithful oracle and the benchmark can measure what the
 decomposition itself buys on a given backend.
+
+``decode_attention_paged_ref`` is the block-table oracle: KV lives in a
+shared page pool (P, page_size, Hkv, D) and each sequence reads its pages
+through a (B, n_blocks) table.  ``gather_pages`` is the layout adapter —
+after the gather the math is exactly the contiguous reference, which is
+what makes paged decoding token-exact with the striped cache.
 """
 from __future__ import annotations
 
@@ -77,3 +83,29 @@ def decode_attention_splitk_ref(
     out = jnp.sum(acc * alpha[..., None], axis=1)
     out = out / jnp.maximum(l_star, 1e-30)[..., None]
     return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(P, ps, Hkv, D) pool + (B, nb) tables -> contiguous (B, nb*ps, Hkv, D).
+
+    Logical position ``t`` of sequence ``b`` lives at row ``t % ps`` of page
+    ``block_tables[b, t // ps]``; the gather restores logical order, so any
+    contiguous-cache attention applies unchanged afterwards.
+    """
+    B, nb = block_tables.shape
+    _, ps, Hkv, D = pages.shape
+    return pages[block_tables].reshape(B, nb * ps, Hkv, D)
+
+
+def decode_attention_paged_ref(
+    q: jax.Array,              # (B, Hq, D)
+    k_pages: jax.Array,        # (P, page_size, Hkv, D) shared pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_blocks) int32 page ids
+    lengths: jax.Array,        # (B,) int32 valid prefix
+    *,
+    softmax_scale=None,
+) -> jax.Array:
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(q, k, v, lengths, softmax_scale=softmax_scale)

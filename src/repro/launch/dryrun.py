@@ -21,9 +21,8 @@ import sys
 import time
 import traceback
 
-import jax
 
-from repro.configs import SHAPES_BY_NAME, get_config, grid_cells, shape_grid
+from repro.configs import SHAPES_BY_NAME, get_config, grid_cells
 from repro.launch import inputs as inputs_lib
 from repro.launch import roofline as roofline_lib
 from repro.launch.mesh import make_production_mesh

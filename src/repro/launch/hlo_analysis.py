@@ -19,7 +19,6 @@ per-device; replica groups are not needed for the per-chip byte model.
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -10,11 +10,10 @@ them.  ``build_step`` pairs them with the right jitted function:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.distributed import sharding

@@ -17,9 +17,8 @@ are what the hillclimb optimizes).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
-import numpy as np
 
 from repro.configs.base import HardwareTier, InputShape, ModelConfig, TPU_V5E
 

@@ -12,7 +12,6 @@ while the simulator supplies demand, capacity events, and autoscaling.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 from typing import Optional

@@ -11,11 +11,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
 
 import jax
-import numpy as np
 
 
 def main(argv=None):

@@ -6,9 +6,17 @@ Cache layouts
 * sliding-window (mixtral): ring buffer of shape (B, W, Hkv, Dh) — bounds
   long_500k cache memory to the window (keys stored with absolute RoPE, so
   relative phases stay correct as the ring wraps).
+* paged: a shared (P, page_size, Hkv, Dh) page pool read/written through a
+  (B, n_blocks) ``page_table`` — logical position ``t`` of slot ``b`` lives
+  at row ``t % page_size`` of page ``page_table[b, t // page_size]``.
+  Requests sharing a prompt prefix point at the SAME physical pages
+  (serving.paged_kv owns the refcount/copy-on-write bookkeeping); the
+  decode step only ever writes position ``cache_len[b]``, which the
+  allocator guarantees is an exclusively owned page.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -216,6 +224,7 @@ def attention_decode(
     cache_len: jax.Array,               # scalar int32 OR (B,) per-slot lengths
     cfg: ModelConfig,
     wqkv: Optional[jax.Array] = None,   # precomputed fuse_qkv_weights(p)
+    page_table: Optional[jax.Array] = None,   # (B, n_blocks) int32 page ids
 ) -> Tuple[jax.Array, KVCache]:
     """One decode step: append to cache (ring for SWA), attend, project.
 
@@ -225,7 +234,17 @@ def attention_decode(
     dynamic_update_slice).  With ``cfg.use_pallas`` the attention runs the
     flash-decoding kernel (length-skipped tiles, split-K for long caches)
     instead of the dense einsum over the full ``max_len`` cache.
+
+    With ``page_table`` the cache is the shared page pool (P, ps, Hkv, Dh):
+    the new token's KV scatters to its table-resolved (page, row) and
+    attention reads through the table — the Pallas paged kernel gathers
+    pages inside its grid; the lax fallback gathers then reuses the dense
+    reference.  Paged mode requires ragged (B,) ``cache_len`` and full
+    (non-sliding-window) attention.
     """
+    if page_table is not None:
+        return _attention_decode_paged(p, x, cache, cache_len, cfg,
+                                       wqkv=wqkv, page_table=page_table)
     B = x.shape[0]
     cache_len = jnp.asarray(cache_len, jnp.int32)
     ragged = cache_len.ndim == 1
@@ -266,7 +285,109 @@ def attention_decode(
     return out, KVCache(k=k_c, v=v_c)
 
 
+def _attention_decode_paged(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, 1, d)
+    cache: KVCache,                     # pool: (P, ps, Hkv, Dh)
+    cache_len: jax.Array,               # (B,) per-slot lengths
+    cfg: ModelConfig,
+    *,
+    wqkv: Optional[jax.Array],
+    page_table: jax.Array,              # (B, n_blocks) int32
+) -> Tuple[jax.Array, KVCache]:
+    if cfg.sliding_window > 0:
+        raise ValueError("paged KV does not support sliding-window attention")
+    B = x.shape[0]
+    ps = cache.k.shape[1]
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim != 1:
+        raise ValueError("paged decode requires (B,) per-slot cache_len")
+    positions = cache_len[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, fused=True, wqkv=wqkv)
+
+    # scatter the new token's KV to its (page, row).  Idle/finished slots
+    # resolve to the trash page; colliding trash writes are harmless.
+    page = jnp.take_along_axis(
+        page_table, (cache_len // ps)[:, None], axis=1
+    )[:, 0]
+    row = cache_len % ps
+    k_c = cache.k.at[page, row].set(k_new[:, 0])
+    v_c = cache.v.at[page, row].set(v_new[:, 0])
+    eff_len = cache_len + 1
+
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention.ops import decode_attention as kdecode
+
+        out = kdecode(q[:, 0], k_c, v_c, eff_len, page_table=page_table)
+    else:
+        from repro.kernels.decode_attention.ref import gather_pages
+
+        out = layers.decode_attention(
+            q[:, 0], gather_pages(k_c, page_table), gather_pages(v_c, page_table),
+            eff_len, window=0,
+        )
+    out = jnp.einsum("bq,qd->bd", out.reshape(B, cfg.q_dim), p["wo"])[:, None, :]
+    return out, KVCache(k=k_c, v=v_c)
+
+
+def attention_prefill_paged(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (1, T, d) — the prompt suffix
+    cfg: ModelConfig,
+    pool: KVCache,                      # (P, ps, Hkv, Dh) shared page pool
+    page_row: jax.Array,                # (nb,) int32: ONE slot's block table
+    start: jax.Array,                   # scalar int32: tokens already cached
+) -> Tuple[jax.Array, KVCache]:
+    """Continuation prefill: extend a paged cache by T tokens in ONE step.
+
+    The prefix-hit admission path: positions [0, start) are already in the
+    pool (reused pages), so only the suffix runs through the model — its KV
+    scatters into the slot's pages and each suffix query attends causally
+    to everything at or before it (cached prefix + earlier suffix).  This
+    is prefill-shaped compute (one dispatch, (T, S) attention), not T
+    decode steps.
+    """
+    if cfg.sliding_window > 0:
+        raise ValueError("paged KV does not support sliding-window attention")
+    B, T, _ = x.shape
+    assert B == 1, "continuation prefill is per-slot (B=1)"
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    G = Hq // Hkv
+    ps = pool.k.shape[1]
+    pos = start + jnp.arange(T, dtype=jnp.int32)        # (T,) absolute
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[None, :])
+    pages = page_row[pos // ps]
+    rows = pos % ps
+    k_c = pool.k.at[pages, rows].set(k_new[0].astype(pool.k.dtype))
+    v_c = pool.v.at[pages, rows].set(v_new[0].astype(pool.v.dtype))
+
+    from repro.kernels.decode_attention.ref import gather_pages
+
+    kg = gather_pages(k_c, page_row[None])[0]           # (S_max, Hkv, Dh)
+    vg = gather_pages(v_c, page_row[None])[0]
+    qg = q[0].reshape(T, Hkv, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("thgd,shd->hgts", qg, kg,
+                   preferred_element_type=jnp.float32) * scale
+    keypos = jnp.arange(kg.shape[0])
+    mask = keypos[None, :] <= pos[:, None]              # causal continuation
+    s = jnp.where(mask[None, None], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgts,shd->thgd", pr.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("tq,qd->td", out.reshape(T, cfg.q_dim), p["wo"])[None]
+    return out, KVCache(k=k_c, v=v_c)
+
+
 def empty_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
     S_cache = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
     shape = (batch, S_cache, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def empty_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                    dtype) -> KVCache:
+    """The shared paged-KV pool for one layer: (P, page_size, Hkv, Dh)."""
+    shape = (num_pages, page_size, cfg.n_kv_heads, cfg.resolved_head_dim)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))

@@ -13,8 +13,7 @@ Conventions
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

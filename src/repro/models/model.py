@@ -19,10 +19,9 @@ from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.models import attention, layers, mamba2, rwkv6, transformer, zamba2
+from repro.models import attention, rwkv6, transformer, zamba2
 
 MOE_AUX_WEIGHT = 0.01
 
@@ -100,7 +99,8 @@ class Model:
         logits = transformer.logits_from_hidden(params, x[:, -1:], cfg, self.mesh)[:, 0]
         return logits, cache
 
-    def decode(self, params, tokens, cache, cache_len, fused=None):
+    def decode(self, params, tokens, cache, cache_len, fused=None,
+               page_table=None):
         """tokens: (B,1) i32; cache_len: scalar i32 (tokens already cached)
         or (B,) per-slot lengths (continuous batching).
 
@@ -108,19 +108,27 @@ class Model:
         pass it when calling decode inside a token-generation scan so the
         fused projection matrices are built once per dispatch, not per step.
 
+        ``page_table`` ((B, n_blocks) int32) switches the KV cache to the
+        paged layout (``empty_page_pool``): each slot reads/writes the
+        shared page pool through its table row (transformer families only).
+
         Returns (logits (B,V), new_cache)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.family == "rwkv":
+            if page_table is not None:
+                raise ValueError("paged KV is not supported for rwkv caches")
             x, new_cache = rwkv6.run_rwkv_decode(params, x, cache, cfg)
         elif cfg.family == "hybrid":
+            if page_table is not None:
+                raise ValueError("paged KV is not supported for hybrid caches")
             x, new_cache = zamba2.run_zamba2_decode(
                 params, x, cache, cache_len, cfg, self.mesh
             )
         else:
             x, nk, nv = transformer.run_layers_decode(
                 params, x, cache.k, cache.v, cache_len, cfg, self.mesh,
-                fused=fused,
+                fused=fused, page_table=page_table,
             )
             new_cache = DecoderKVCache(k=nk, v=nv)
         logits = transformer.logits_from_hidden(params, x, cfg, self.mesh)[:, 0]
@@ -155,3 +163,47 @@ class Model:
 
     def cache_specs(self, batch: int, max_len: int):
         return jax.eval_shape(lambda: self.empty_cache(batch, max_len))
+
+    def prefill_paged(self, params, tokens, pool, page_row, start):
+        """Continuation prefill into a paged cache: run the (1, T) prompt
+        suffix ``tokens`` through every layer in one dispatch, scattering
+        its KV into the pages named by ``page_row`` at positions
+        [start, start+T).  Returns (last-position logits (1, V), new_pool).
+
+        The prefix-hit admission path: cached pages cover [0, start), so
+        only the un-cached suffix pays model compute."""
+        cfg = self.cfg
+        if not self.supports_paged_kv:
+            raise ValueError(f"{cfg.name}: paged prefill unsupported")
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x, nk, nv = transformer.run_layers_prefill_paged(
+            params, x, pool.k, pool.v, page_row, start, cfg, self.mesh
+        )
+        logits = transformer.logits_from_hidden(
+            params, x[:, -1:], cfg, self.mesh
+        )[:, 0]
+        return logits, DecoderKVCache(k=nk, v=nv)
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        """Paged KV needs the (L, ..., S, Hkv, Dh) DecoderKVCache layout and
+        full (non-ring) attention; SSM/RWKV state caches have no pages to
+        share and the SWA ring already bounds its own memory."""
+        cfg = self.cfg
+        return (cfg.supports_decode
+                and cfg.family not in ("rwkv", "hybrid")
+                and cfg.sliding_window == 0)
+
+    def empty_page_pool(self, num_pages: int, page_size: int):
+        """Shared paged-KV pool: DecoderKVCache of (L, P, ps, Hkv, Dh)."""
+        cfg = self.cfg
+        if not self.supports_paged_kv:
+            raise ValueError(f"{cfg.name}: family {cfg.family!r} (sliding_window="
+                             f"{cfg.sliding_window}) cannot use paged KV")
+        dtype = jnp.dtype(cfg.dtype)
+        lc = attention.empty_page_pool(cfg, num_pages, page_size, dtype)
+        L = cfg.n_layers
+        return DecoderKVCache(
+            k=jnp.zeros((L, *lc.k.shape), dtype),
+            v=jnp.zeros((L, *lc.v.shape), dtype),
+        )

@@ -9,7 +9,7 @@ DESIGN.md §5 so llama3-405b train_4k fits a 16 GB v5e chip.
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +126,23 @@ def full_activation(x: jax.Array, mesh) -> jax.Array:
     )
 
 
+def mlp_block(lp, h, cfg: ModelConfig, mesh):
+    """Post-attention feed-forward dispatch (MoE / gelu / swiglu) shared by
+    the sequence and paged-continuation layer bodies.  Returns (m, aux).
+    The decode body keeps its own variant: it consumes the pre-fused
+    [w_gate|w_up] matrix instead of the separate weights."""
+    if cfg.is_moe:
+        return moe.moe_block(lp["moe"], h, cfg, mesh)
+    if cfg.mlp_type == "gelu":
+        hu = jnp.einsum("...d,df->...f", h, lp["mlp"]["w_up"])
+        hu = jax.nn.gelu(hu.astype(jnp.float32)).astype(h.dtype)
+        m = jnp.einsum("...f,fd->...d", hu, lp["mlp"]["w_down"])
+    else:
+        m = layers.swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                          lp["mlp"]["w_down"])
+    return m, jnp.zeros((), jnp.float32)
+
+
 def _layer_seq(lp, x, cfg: ModelConfig, mesh, return_cache: bool):
     """One transformer layer on (B,S,d). Returns (x, (cache_k, cache_v), aux).
 
@@ -146,16 +163,7 @@ def _layer_seq(lp, x, cfg: ModelConfig, mesh, return_cache: bool):
     h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
     if sp:
         h = full_activation(h, mesh)
-    if cfg.is_moe:
-        m, aux = moe.moe_block(lp["moe"], h, cfg, mesh)
-    else:
-        if cfg.mlp_type == "gelu":
-            hu = jnp.einsum("...d,df->...f", h, lp["mlp"]["w_up"])
-            hu = jax.nn.gelu(hu.astype(jnp.float32)).astype(h.dtype)
-            m = jnp.einsum("...f,fd->...d", hu, lp["mlp"]["w_down"])
-        else:
-            m = layers.swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
-        aux = jnp.zeros((), jnp.float32)
+    m, aux = mlp_block(lp, h, cfg, mesh)
     x = x + (seq_shard(m, mesh) if sp else m)
     if return_cache:
         return x, (cache.k, cache.v), aux
@@ -226,12 +234,13 @@ def fused_decode_weights(params: Dict, cfg: ModelConfig):
 def run_layers_decode(
     params: Dict,
     x: jax.Array,                # (B, 1, d)
-    cache_k: jax.Array,          # (L, B, Sc, Hkv, Dh)
+    cache_k: jax.Array,          # (L, B, Sc, Hkv, Dh) or paged (L, P, ps, Hkv, Dh)
     cache_v: jax.Array,
     cache_len: jax.Array,        # scalar int32 or (B,)
     cfg: ModelConfig,
     mesh=None,
     fused: Optional[Dict] = None,   # fused_decode_weights(params, cfg)
+    page_table: Optional[jax.Array] = None,  # (B, n_blocks) => paged cache
 ):
     if fused is None:
         fused = fused_decode_weights(params, cfg)
@@ -246,7 +255,7 @@ def run_layers_decode(
         h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
         a, new_cache = attention.attention_decode(
             lp["attn"], h, attention.KVCache(k=ck, v=cv), cache_len, cfg,
-            wqkv=wqkv_l,
+            wqkv=wqkv_l, page_table=page_table,
         )
         x = x + a
         h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -265,6 +274,39 @@ def run_layers_decode(
     # overhead is material on CPU/small models; 4 keeps HLO size bounded
     x, (new_k, new_v) = lax.scan(
         body, x, (params["layers"], cache_k, cache_v, *xs_w),
+        unroll=min(4, cfg.n_layers),
+    )
+    return x, new_k, new_v
+
+
+def run_layers_prefill_paged(
+    params: Dict,
+    x: jax.Array,                # (1, T, d) — prompt suffix embeddings
+    pool_k: jax.Array,           # (L, P, ps, Hkv, Dh)
+    pool_v: jax.Array,
+    page_row: jax.Array,         # (nb,) int32: the slot's block table
+    start: jax.Array,            # scalar int32: cached-prefix length
+    cfg: ModelConfig,
+    mesh=None,
+):
+    """Continuation prefill through the scanned layer stack: every layer
+    extends the paged cache by the suffix and attends over prefix+suffix.
+    Returns (x, new_pool_k, new_pool_v)."""
+
+    def body(x, inputs):
+        lp, pk, pv = inputs
+        h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, new_cache = attention.attention_prefill_paged(
+            lp["attn"], h, cfg, attention.KVCache(k=pk, v=pv), page_row, start
+        )
+        x = x + a
+        h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m, _ = mlp_block(lp, h, cfg, mesh)
+        x = x + m
+        return x, (new_cache.k, new_cache.v)
+
+    x, (new_k, new_v) = lax.scan(
+        body, x, (params["layers"], pool_k, pool_v),
         unroll=min(4, cfg.n_layers),
     )
     return x, new_k, new_v

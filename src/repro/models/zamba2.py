@@ -11,7 +11,7 @@ history).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,3 +7,9 @@ from repro.serving.engine import (  # noqa: F401
     QueueSession,
     ServingEngine,
 )
+from repro.serving.paged_kv import (  # noqa: F401
+    TRASH_PAGE,
+    BlockAllocator,
+    PrefixStats,
+    PromptEntry,
+)

@@ -35,12 +35,35 @@ fused:
   bit-identical to the seed per-step loop, which the fast-path tests
   assert token-exactly.
 
+Paged KV cache (``EngineConfig.paged_kv``)
+------------------------------------------
+With paging the per-slot contiguous cache stripes are replaced by a shared
+page pool (L, P, page_size, Hkv, Dh) plus per-slot block tables, managed by
+``serving.paged_kv.BlockAllocator``:
+
+* admission allocates ``ceil((prompt+max_new)/page_size)`` pages instead of
+  a ``max_len`` stripe, so KV memory tracks *actual* request lengths and
+  page capacity (not slot count) bounds concurrency;
+* requests sharing a prompt prefix share physical pages.  An identical
+  prompt (full-prompt cache hit) skips prefill entirely — the cached final
+  logits reproduce the first sampled token bit-exactly; a block-aligned
+  prefix hit reuses the cached pages and teacher-forces only the suffix
+  through the paged decode path (one scan dispatch);
+* pages a finished request leaves behind stay cached (LRU) until
+  allocation pressure evicts them; copy-on-write keeps a shared page
+  exclusive before any slot writes into it.
+
+The paged chunk scan is the same jitted loop with ``page_table`` threaded
+through ``model.decode``; greedy outputs are token-exact with the
+contiguous path, which the paged tests assert end-to-end.
+
 The jitted scan donates the KV cache, so the compiled step updates the
 decode buffer in place; ``serve_prefill``/``serve_decode`` remain the units
 the multi-pod dry-run lowers (launch.dryrun).
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -51,6 +74,7 @@ import numpy as np
 from jax import lax
 
 from repro.models.model import Model
+from repro.serving.paged_kv import TRASH_PAGE, BlockAllocator
 
 
 @dataclass
@@ -61,6 +85,14 @@ class EngineConfig:
     seed: int = 0
     decode_chunk: int = 8           # scan steps between continuous-batching
                                     # admission points (serve_queue)
+    # -- paged KV cache (serve_queue / QueueSession only) --------------------
+    paged_kv: bool = False          # block-based KV with prefix reuse
+    page_size: int = 16             # tokens per KV page
+    num_pages: int = 0              # 0 => auto-size from decode_batch/max_len
+    page_headroom: float = 1.5      # auto-size multiplier over the worst-case
+                                    # live set: the slack is what lets finished
+                                    # prompts stay cached for prefix reuse
+    prefix_reuse: bool = True       # cross-request prompt-prefix sharing
 
 
 @dataclass
@@ -76,6 +108,11 @@ class EngineTelemetry:
     useful_tokens: int = 0           # tokens delivered to some request
     wasted_tokens: int = 0           # idle/finished-slot tokens in the chunk
     completed_requests: int = 0
+    # paged-KV prefix cache effectiveness (zero when paging is off)
+    prefix_hits: int = 0             # full-prompt + block-aligned hits
+    prefix_misses: int = 0
+    reused_tokens: int = 0           # prompt tokens served from cached pages
+    prefilled_tokens: int = 0        # prompt tokens run through the model
 
     @property
     def tokens_per_s(self) -> float:
@@ -85,6 +122,11 @@ class EngineTelemetry:
     def efficiency(self) -> float:
         total = self.useful_tokens + self.wasted_tokens
         return self.useful_tokens / total if total else 1.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / total if total else 0.0
 
 
 class ServingEngine:
@@ -102,6 +144,30 @@ class ServingEngine:
             self._chunk_scan, static_argnums=(5,), donate_argnums=(1,)
         )
         self._place = jax.jit(self._place_slot, donate_argnums=(0,))
+        # -- paged-KV resolution (sessions consult these) --------------------
+        if cfg.paged_kv and not model.supports_paged_kv:
+            raise ValueError(
+                f"paged_kv=True but {model.cfg.name} (family {model.cfg.family!r}, "
+                f"sliding_window={model.cfg.sliding_window}) has no pageable KV "
+                "cache — drop the flag or pick a full-attention transformer arch"
+            )
+        self.paged = bool(cfg.paged_kv)
+        ps = max(1, cfg.page_size)
+        self.max_blocks = -(-cfg.max_len // ps)
+        # auto pool: every slot can hold a max_len request, times
+        # ``page_headroom`` so finished prompts can stay cached instead of
+        # evicting immediately (page 0 is the reserved trash page).  Note
+        # pages track ACTUAL request lengths, so real usage of the live
+        # set is usually well under the worst-case decode_batch*max_blocks.
+        self.num_pages = cfg.num_pages or (
+            1 + math.ceil(cfg.page_headroom * cfg.decode_batch * self.max_blocks)
+        )
+        self._chunk_paged = jax.jit(
+            self._chunk_scan_paged, static_argnums=(6,), donate_argnums=(1,)
+        )
+        self._prefill_paged = jax.jit(model.prefill_paged, donate_argnums=(2,))
+        self._place_pages = jax.jit(self._place_pages_fn, donate_argnums=(0,))
+        self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
 
     # -- single-shot steps ----------------------------------------------------
     def prefill(self, batch: Dict[str, Any]):
@@ -210,6 +276,59 @@ class ServingEngine:
         )
         return cache, tok, lens, key, toks        # toks: (steps, B)
 
+    # -- paged-KV jitted bodies ----------------------------------------------
+    def _chunk_scan_paged(self, params, pool, tables, tok, lens, key, steps: int):
+        """The ragged chunk scan over the shared page pool: identical loop,
+        with every decode reading/writing KV through the block tables."""
+        max_row = jnp.int32(self.cfg.max_len - 1)
+        greedy = self.cfg.temperature <= 0.0
+        fused = self.model.fused_decode_weights(params)
+
+        def step(carry, _):
+            tok, pool, lens, key = carry
+            logits, pool = self.model.decode(
+                params, tok[:, None], pool, lens, fused=fused,
+                page_table=tables,
+            )
+            if not greedy:
+                key, sub = jax.random.split(key)
+                nxt = self._sample(logits, sub)
+            else:
+                nxt = self._sample(logits, key)
+            return (nxt, pool, jnp.minimum(lens + 1, max_row), key), tok
+
+        (tok, pool, lens, key), toks = lax.scan(
+            step, (tok, pool, lens, key), None, length=steps,
+            unroll=min(4, steps),
+        )
+        return pool, tok, lens, key, toks         # toks: (steps, B)
+
+    def _place_pages_fn(self, pool, pcache, pages):
+        """Scatter a B=1 prefill cache into ``pages`` of the page pool.
+
+        The prefill leaf (L, 1, Sp, H, D) is padded to whole pages and
+        written with one advanced-index scatter per leaf; ``pages`` is a
+        (ceil(Sp/ps),) int32 array so the same compiled function serves any
+        page assignment at a given prompt length.
+        """
+        ps = self.cfg.page_size
+
+        def place(buf, c):
+            L, _, Sp = c.shape[:3]
+            nb = pages.shape[0]
+            pad = nb * ps - Sp
+            if pad:
+                c = jnp.pad(c, [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (c.ndim - 3))
+            c = c.reshape(L, nb, ps, *c.shape[3:]).astype(buf.dtype)
+            return buf.at[:, pages].set(c)
+
+        return jax.tree.map(place, pool, pcache)
+
+    def _copy_page_fn(self, pool, src, dst):
+        """Device copy-on-write: duplicate page ``src`` into ``dst`` across
+        every layer leaf (used before a slot writes into a shared page)."""
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
+
     def _place_slot(self, cache, pcache, slot):
         """Write a B=1 prefill cache into slot ``slot`` of the decode buffer.
 
@@ -269,6 +388,13 @@ class PumpReport:
     wasted_tokens: int = 0
     occupancy: float = 0.0            # slot occupancy entering the chunk
     wall_s: float = 0.0               # pump wall time (prefills + chunk + sync)
+    # paged-KV prefix cache activity this pump (zero when paging is off)
+    prefix_hits: int = 0              # admissions served from cached pages
+    prefix_misses: int = 0            # admissions that ran a full prefill
+    reused_tokens: int = 0            # prompt tokens skipped via the cache
+    prefilled_tokens: int = 0         # prompt tokens run through the model
+    page_occupancy: float = 0.0       # live fraction of the page pool
+    cached_pages: int = 0             # reusable (refcount-0) pages held
 
 
 class QueueSession:
@@ -287,7 +413,22 @@ class QueueSession:
         self.eng = engine
         n_slots = engine.cfg.decode_batch
         self.slots = slots if slots is not None else DecodeSlots(n_slots)
-        self.cache = engine.model.empty_cache(n_slots, engine.cfg.max_len)
+        self.paged = engine.paged
+        if self.paged:
+            self.cache = engine.model.empty_page_pool(
+                engine.num_pages, engine.cfg.page_size
+            )
+            self.allocator = BlockAllocator(
+                engine.num_pages, engine.cfg.page_size,
+                enable_reuse=engine.cfg.prefix_reuse,
+            )
+            self.tables = np.full((n_slots, engine.max_blocks), TRASH_PAGE,
+                                  dtype=np.int32)
+            self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+            self._slot_of: Dict[int, int] = {}        # rid -> decoding slot
+        else:
+            self.allocator = None
+            self.cache = engine.model.empty_cache(n_slots, engine.cfg.max_len)
         self.lens = jnp.zeros((n_slots,), jnp.int32)
         self.tok = jnp.zeros((n_slots,), jnp.int32)
         self.key = jax.random.key(engine.cfg.seed)
@@ -312,6 +453,13 @@ class QueueSession:
                 f"request {rid}: prompt_len={inp.shape[1]} + "
                 f"max_new={max_new} exceeds max_len={self.eng.cfg.max_len}"
             )
+        if self.paged:
+            need = self.allocator.blocks_for(inp.shape[1] + max_new)
+            if need > self.allocator.usable:
+                raise ValueError(
+                    f"request {rid}: needs {need} KV pages but the pool only "
+                    f"has {self.allocator.usable}"
+                )
         self._out[rid] = []
         self.queue.append((rid, inp, max_new))
 
@@ -327,8 +475,169 @@ class QueueSession:
             self.slots.request_id[s] = -1
             self.slots.remaining[s] = 0
             hit = True
+        if self.paged:
+            self._release_rid(rid)
         self._out.pop(rid, None)
         return hit
+
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        """Whether a request of this shape can EVER be admitted here — the
+        same bounds ``submit`` enforces with ValueError, as a predicate so
+        dispatchers can route around an undersized replica instead of
+        crashing on it."""
+        if prompt_len + max_new > self.eng.cfg.max_len:
+            return False
+        if self.paged:
+            return self.allocator.blocks_for(prompt_len + max_new) <= self.allocator.usable
+        return True
+
+    # -- paged-KV bookkeeping -------------------------------------------------
+    def prefix_match_len(self, prompt) -> int:
+        """Reusable-prefix length of ``prompt`` ((1, Sp) array or pre-built
+        token tuple) against this session's cache — the dispatcher's
+        prefix-affinity score."""
+        if not self.paged:
+            return 0
+        toks = prompt if type(prompt) is tuple else np.asarray(prompt)[0]
+        return self.allocator.match_len(toks)
+
+    def _set_table(self, s: int, pages: List[int]) -> None:
+        self.tables[s, :] = TRASH_PAGE
+        self.tables[s, :len(pages)] = pages
+
+    def _release_rid(self, rid: int) -> None:
+        """Free a request's pages (completion, cancel): deref every page it
+        held — private gen pages free immediately, published prompt pages
+        park in the LRU for future prefix hits — and trash the table row."""
+        s = self._slot_of.pop(rid, None)
+        if s is None:
+            return
+        for p in self._slot_pages[s]:
+            self.allocator.deref(p)
+        self._slot_pages[s] = []
+        self.tables[s, :] = TRASH_PAGE
+
+    def _extend_alloc(self, pages: List[int], total_blocks: int,
+                      reserve: int = 0) -> bool:
+        """Grow ``pages`` to ``total_blocks`` with fresh pages; all-or-
+        nothing.  The up-front capacity check matters: alloc() under
+        pressure evicts cached pages (destroying their prefix-cache
+        entries permanently), so a grab that cannot fully succeed must
+        fail BEFORE evicting anything.  ``reserve`` holds back capacity
+        the caller still needs (e.g. an upcoming COW page)."""
+        al = self.allocator
+        need = total_blocks - len(pages) + reserve
+        if need > al.free_pages + al.cached_pages:
+            return False
+        added: List[int] = []
+        while len(pages) + len(added) < total_blocks:
+            p = al.alloc()
+            if p is None:                 # can't happen given the pre-check,
+                for q in added:           # but stay all-or-nothing regardless
+                    al.deref(q)
+                return False
+            added.append(p)
+        pages.extend(added)
+        return True
+
+    def _admit_paged(self, s: int, rid: int, inp: np.ndarray, max_new: int) -> bool:
+        """Paged admission: reuse cached prefix pages where possible, then
+        allocate the remainder of the request's block budget.
+
+        Cache-effectiveness counters live in ``self.allocator.stats`` only;
+        ``pump`` derives its per-report fields as deltas of those totals.
+
+        Returns False (with ALL page state rolled back) when the pool
+        cannot satisfy the request right now — the caller requeues it and
+        retries after running decodes release pages.
+        """
+        eng, al = self.eng, self.allocator
+        ps = al.page_size
+        tokens = [int(t) for t in np.asarray(inp)[0]]
+        plen = len(tokens)
+        total_blocks = al.blocks_for(plen + max_new)
+        akey = jax.random.fold_in(self.key, self._admissions)
+
+        entry = al.lookup_prompt(tokens)
+        if entry is not None:
+            # full-prompt hit: zero prefill.  The cached last-position
+            # logits reproduce the first sampled token bit-exactly.
+            pages = [int(p) for p in entry.pages]
+            for p in pages:
+                al.ref(p)
+            # the partial boundary block takes this request's first gen
+            # write; if another reader still holds it, reserve the COW page
+            # up front so a doomed admission never evicts cache entries
+            bi = plen // ps
+            cow_needed = bool(plen % ps) and al.refcount[pages[bi]] > 1
+            ok = self._extend_alloc(pages, total_blocks,
+                                    reserve=1 if cow_needed else 0)
+            if ok and cow_needed:
+                fresh = al.cow(pages[bi])
+                if fresh is None:
+                    ok = False
+                else:
+                    self.cache = eng._copy_page(
+                        self.cache, jnp.int32(pages[bi]), jnp.int32(fresh)
+                    )
+                    pages[bi] = fresh
+            if not ok:
+                for p in pages:
+                    al.deref(p)
+                return False
+            self._set_table(s, pages)
+            tok0 = eng._sample(jnp.asarray(entry.logits)[None], akey)[0]
+            self.lens = self.lens.at[s].set(plen)
+            al.stats.full_hits += 1
+            al.stats.reused_tokens += plen
+        else:
+            m, shared = al.match_prefix(tokens)
+            pages = [int(p) for p in shared]
+            for p in pages:
+                al.ref(p)
+            if not self._extend_alloc(pages, total_blocks):
+                for p in pages:
+                    al.deref(p)
+                return False
+            if m > 0:
+                # block-aligned prefix hit: the first m tokens never touch
+                # the model — one continuation-prefill dispatch extends the
+                # cached pages by the suffix and yields first-token logits.
+                self._set_table(s, pages)
+                suffix = jnp.asarray([tokens[m:]], jnp.int32)
+                logits, self.cache = eng._prefill_paged(
+                    eng.params, suffix, self.cache,
+                    jnp.asarray(self.tables[s], jnp.int32), jnp.int32(m),
+                )
+                tok0 = eng._sample(logits, akey)[0]
+                self.lens = self.lens.at[s].set(plen)
+                # publish the completed prompt too: an identical repeat then
+                # takes the zero-prefill full-hit path instead of re-running
+                # this suffix prefill every time
+                al.publish(tokens, pages[:al.blocks_for(plen)],
+                           np.asarray(logits[0]))
+                al.stats.prefix_hits += 1
+                al.stats.reused_tokens += m
+                al.stats.prefilled_tokens += plen - m
+                eng.telemetry.prefills += 1    # suffix prefill IS a dispatch
+            else:
+                self._set_table(s, pages)
+                logits, pcache = eng.prefill({"inputs": jnp.asarray(inp)})
+                nb_p = al.blocks_for(plen)
+                self.cache = eng._place_pages(
+                    self.cache, pcache, jnp.asarray(pages[:nb_p], jnp.int32)
+                )
+                al.publish(tokens, pages[:nb_p], np.asarray(logits[0]))
+                tok0 = eng._sample(logits, akey)[0]
+                self.lens = self.lens.at[s].set(plen)
+                al.stats.misses += 1
+                al.stats.prefilled_tokens += plen
+                eng.telemetry.prefills += 1
+        self._admissions += 1
+        self.tok = self.tok.at[s].set(tok0)
+        self._slot_pages[s] = pages
+        self._slot_of[rid] = s
+        return True
 
     # -- introspection --------------------------------------------------------
     @property
@@ -361,29 +670,54 @@ class QueueSession:
         self._instant = []
 
         # admit while there is work and a free slot
+        if self.paged:
+            st = self.allocator.stats
+            stats0 = (st.full_hits + st.prefix_hits, st.misses,
+                      st.reused_tokens, st.prefilled_tokens)
         for s in slots.free:
             if not self.queue:
                 break
             rid, inp, max_new = self.queue.pop(0)
-            logits, pcache = eng.prefill({"inputs": jnp.asarray(inp)})
-            self.cache = eng._place(self.cache, pcache, int(s))
-            self.lens = self.lens.at[s].set(inp.shape[1])
-            akey = jax.random.fold_in(self.key, self._admissions)
-            self._admissions += 1
-            self.tok = self.tok.at[s].set(eng._sample(logits, akey)[0])
+            if self.paged:
+                if not self._admit_paged(int(s), rid, inp, max_new):
+                    # page pressure: put it back and retry after decodes
+                    # release pages (completions free at chunk boundaries)
+                    self.queue.insert(0, (rid, inp, max_new))
+                    break
+            else:
+                logits, pcache = eng.prefill({"inputs": jnp.asarray(inp)})
+                self.cache = eng._place(self.cache, pcache, int(s))
+                self.lens = self.lens.at[s].set(inp.shape[1])
+                akey = jax.random.fold_in(self.key, self._admissions)
+                self._admissions += 1
+                self.tok = self.tok.at[s].set(eng._sample(logits, akey)[0])
+                eng.telemetry.prefills += 1
             slots.admit(int(s), rid, max_new)
             report.admitted.append(rid)
-            eng.telemetry.prefills += 1
 
         report.occupancy = slots.occupancy
+        if self.paged:
+            st = self.allocator.stats
+            report.prefix_hits = st.full_hits + st.prefix_hits - stats0[0]
+            report.prefix_misses = st.misses - stats0[1]
+            report.reused_tokens = st.reused_tokens - stats0[2]
+            report.prefilled_tokens = st.prefilled_tokens - stats0[3]
+            report.page_occupancy = self.allocator.occupancy
+            report.cached_pages = self.allocator.cached_pages
         if report.occupancy == 0.0:                   # nothing to decode
             report.wall_s = time.perf_counter() - t0
             return report
 
         # decode one chunk for the whole slot batch
-        self.cache, self.tok, self.lens, self.key, toks = eng._chunk(
-            eng.params, self.cache, self.tok, self.lens, self.key, chunk
-        )
+        if self.paged:
+            self.cache, self.tok, self.lens, self.key, toks = eng._chunk_paged(
+                eng.params, self.cache, jnp.asarray(self.tables),
+                self.tok, self.lens, self.key, chunk
+            )
+        else:
+            self.cache, self.tok, self.lens, self.key, toks = eng._chunk(
+                eng.params, self.cache, self.tok, self.lens, self.key, chunk
+            )
         toks_np = np.asarray(toks)                    # ONE transfer per chunk
         n_slots = slots.n_slots
         for t in range(chunk):
@@ -398,6 +732,14 @@ class QueueSession:
                 tokens = np.asarray(self._out.pop(rid), np.int64)
                 self.results[rid] = tokens
                 report.completed[rid] = tokens
+                if self.paged:
+                    self._release_rid(rid)
+        if self.paged:
+            # re-sample AFTER completions released their pages, so a
+            # draining session reports decaying occupancy, not the
+            # admission-time peak
+            report.page_occupancy = self.allocator.occupancy
+            report.cached_pages = self.allocator.cached_pages
         report.chunk_steps = chunk
         report.wall_s = time.perf_counter() - t0
 
@@ -407,6 +749,10 @@ class QueueSession:
         tel.useful_tokens += report.useful_tokens
         tel.wasted_tokens += report.wasted_tokens
         tel.completed_requests += len(report.completed)
+        tel.prefix_hits += report.prefix_hits
+        tel.prefix_misses += report.prefix_misses
+        tel.reused_tokens += report.reused_tokens
+        tel.prefilled_tokens += report.prefilled_tokens
         return report
 
 

@@ -11,7 +11,7 @@ each microbatch's backward is √L-rematerialized by the model stack.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -360,6 +360,7 @@ def test_workload_poisson_trace_determinism():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_fleet_completes_workload_token_exact(engines):
     """No failures: every request completes and matches the bare engine."""
     rt = _demo_fleet(engines, n_requests=16, rate=2.0)
@@ -379,6 +380,7 @@ def test_fleet_completes_workload_token_exact(engines):
         assert rec.tokens > 0 and rec.tier in ("cheap", "premium")
 
 
+@pytest.mark.slow
 def test_fleet_failover_drill(engines):
     """THE drill: cheap-tier outage kills ready replicas mid-decode; every
     in-flight request requeues and completes token-exact; the controller
@@ -412,6 +414,7 @@ def test_fleet_failover_drill(engines):
             assert rec.tier == "premium"
 
 
+@pytest.mark.slow
 def test_fleet_graceful_scale_down_drains(engines):
     """A saturating burst scales up, then the trailing low-load phase
     scales down via DRAINING (never FAILED) — nothing is lost."""

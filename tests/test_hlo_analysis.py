@@ -2,7 +2,6 @@
 including nested scans and remat (this is what the roofline table rests on)."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax import lax
 
 from repro.launch.hlo_analysis import analyze_text

@@ -9,7 +9,7 @@ from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.capacity import CapacityPool, synthetic_limit, synthetic_outage
 from repro.core.controller import ControllerConfig, ModeController
 from repro.core.router import queue_latency, route
-from repro.core.simulator import ClusterSimulator, SimConfig, bursty, diurnal_cycle, steady
+from repro.core.simulator import ClusterSimulator, SimConfig, bursty, steady
 
 
 def _pools(n=5, cap=20, delay=10.0):

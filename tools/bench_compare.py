@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare a fresh ``benchmarks/run.py --json``
+dump against the committed baseline and fail on slowdowns.
+
+    python tools/bench_compare.py BENCH_baseline.json /tmp/bench.json
+    python tools/bench_compare.py --tolerance 1.0 baseline.json new.json
+    python tools/bench_compare.py --update BENCH_baseline.json /tmp/bench.json
+
+Rules:
+  * a row regresses when new us_per_call > baseline * (1 + tolerance);
+  * only rows present in BOTH files are compared (new benchmarks don't
+    fail the gate; they show up as "new" so the baseline gets refreshed);
+  * any ``ERROR/*`` row in the new results fails immediately;
+  * ``--update`` rewrites the baseline from the new results instead of
+    comparing (run it on the reference machine after intentional perf
+    changes, and commit the diff).
+
+Default tolerance is 0.20 (the >20%% gate); CI runners with noisy
+neighbours should pass a wider ``--tolerance`` (see .github/workflows).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional slowdown (0.20 = +20%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the new results")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        bad = [n for n in load(args.new) if n.startswith("ERROR/")]
+        if bad:
+            print(f"bench_compare: refusing --update, new results contain {bad}")
+            return 1
+        shutil.copyfile(args.new, args.baseline)
+        print(f"bench_compare: baseline {args.baseline} refreshed from {args.new}")
+        return 0
+
+    base = load(args.baseline)
+    new = load(args.new)
+
+    errors = [n for n in new if n.startswith("ERROR/")]
+    for name in errors:
+        print(f"FAIL {name}: benchmark module raised")
+
+    regressed = []
+    for name in sorted(base):
+        if name not in new:
+            print(f"WARN {name}: missing from new results")
+            continue
+        b, n = base[name], new[name]
+        if b <= 0:
+            continue
+        ratio = n / b
+        status = "ok"
+        if n > b * (1.0 + args.tolerance):
+            status = "REGRESSED"
+            regressed.append(name)
+        print(f"{status:>9}  {name}: {b:.1f}us -> {n:.1f}us ({ratio:.2f}x)")
+    for name in sorted(set(new) - set(base)):
+        if not name.startswith("ERROR/"):
+            print(f"      new  {name}: {new[name]:.1f}us (not gated; refresh baseline)")
+
+    if errors or regressed:
+        print(f"bench_compare: FAIL ({len(errors)} errors, "
+              f"{len(regressed)} regressions > {args.tolerance:.0%})")
+        return 1
+    print(f"bench_compare: OK ({len(base)} rows within {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

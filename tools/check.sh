@@ -1,18 +1,31 @@
 #!/usr/bin/env bash
-# Smoke gate: tier-1 tests + kernel micro-benches.
-# Usage: tools/check.sh   (from the repo root or anywhere)
+# Smoke gate: lint + tier-1 tests + kernel micro-benches + bench-regression
+# gate + fleet smoke.  Usage: tools/check.sh   (from the repo root or anywhere)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+if command -v ruff >/dev/null 2>&1; then
+  echo "== ruff lint =="
+  ruff check src tests benchmarks tools
+else
+  echo "== ruff lint: skipped (ruff not installed locally; CI enforces it) =="
+fi
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
-echo "== kernel benchmarks (smoke) =="
-python -m benchmarks.run --only kernels
+echo "== kernel benchmarks (smoke + regression gate vs BENCH_baseline.json) =="
+BENCH_JSON="$(mktemp -t bench_new.XXXXXX.json)"
+trap 'rm -f "$BENCH_JSON"' EXIT
+python -m benchmarks.run --only kernels --json "$BENCH_JSON"
+# the committed baseline comes from the reference box; on other hardware
+# widen the gate with e.g. BENCH_TOLERANCE=1.0 tools/check.sh
+python tools/bench_compare.py --tolerance "${BENCH_TOLERANCE:-0.20}" \
+  BENCH_baseline.json "$BENCH_JSON"
 
-echo "== fleet smoke (100 requests over live replicas, zero-drop gate) =="
-python -m repro.fleet.runtime --smoke
+echo "== fleet smoke (100 requests over live paged replicas, zero-drop gate) =="
+python -m repro.fleet.runtime --smoke --paged
 
 echo "check.sh: OK"
