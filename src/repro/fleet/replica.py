@@ -99,6 +99,13 @@ class Replica:
             return 0
         return self.session.prefix_match_len(prompt)
 
+    def set_chunk_budget(self, budget: int) -> None:
+        """Retune the mixed-step token budget (the TTFT/TPOT knob) on the
+        live session — no recompilation, traces key on the pow-2 chunk
+        bucket.  No-op while the replica holds no session."""
+        if self.session is not None:
+            self.session.token_budget = max(1, int(budget))
+
     @property
     def live(self) -> bool:
         return self.state in (ReplicaState.READY, ReplicaState.DRAINING)

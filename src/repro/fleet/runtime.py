@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import policy
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.capacity import CapacityEvent, CapacityPool, synthetic_outage
 from repro.core.controller import ControllerConfig, ModeController
@@ -71,6 +72,12 @@ class TierSpec:
     page_size: int = 16
     num_pages: int = 0                # 0 => engine auto-sizing
     prefix_reuse: bool = True
+    mixed_step: bool = True           # fused prefill+decode engine steps
+    prefill_chunk: int = 64           # mixed-step token budget, cost mode
+    capacity_prefill_chunk: int = 0   # budget in capacity mode (0 => 4x the
+                                      # cost-mode budget): admission-heavy
+                                      # load trades TPOT for TTFT when the
+                                      # controller is buying throughput
 
     def profile(self) -> DUProfile:
         return DUProfile(
@@ -221,6 +228,8 @@ class FleetRuntime:
                              decode_batch=spec.decode_batch,
                              temperature=0.0,
                              decode_chunk=spec.decode_chunk,
+                             mixed_step=spec.mixed_step,
+                             prefill_chunk=spec.prefill_chunk,
                              paged_kv=spec.paged_kv,
                              page_size=spec.page_size,
                              num_pages=spec.num_pages,
@@ -330,6 +339,19 @@ class FleetRuntime:
                                         measured_t_max=measured)
         if not self.mode_trace or self.mode_trace[-1][1] != decision.mode:
             self.mode_trace.append((t, decision.mode))
+
+        # 4b. mode drives the mixed-step chunk budget: capacity mode buys
+        # admission throughput (whole prompts per step => TTFT down, TPOT
+        # up); cost mode keeps prefill trickling around steady decode.
+        # Live retune — the budget only picks the pow-2 trace bucket.
+        for spec in self.tiers:
+            if not spec.mixed_step:
+                continue
+            budget = (spec.capacity_prefill_chunk or 4 * spec.prefill_chunk
+                      if decision.mode == policy.CAPACITY_OPTIMIZED
+                      else spec.prefill_chunk)
+            for rep in self.replicas[spec.name]:
+                rep.set_chunk_budget(budget)
 
         # 5. request-granularity dispatch
         self.dispatcher.dispatch(decision.weights, self.replicas)
@@ -465,6 +487,14 @@ class FleetRuntime:
                     rid += 1
                 while not sess.idle:
                     sess.pump()
+            if eng.mixed:
+                # enumerate the whole mixed-step trace grid (one Q quantum
+                # per budget x every pow-2 attention-window bucket) so NO
+                # measured pump ever compiles — coverage by construction,
+                # not by hoping a warmup workload hits the same shapes
+                budgets = [spec.prefill_chunk,
+                           spec.capacity_prefill_chunk or 4 * spec.prefill_chunk]
+                eng.warm_mixed_traces(budgets)
         self._warmed = True
 
     def _busy(self) -> bool:
@@ -557,22 +587,31 @@ def build_saturated_fleet(
     n_requests: int = 40,
     n_replicas: int = 1,
     decode_batch: int = 4,
+    prompt_len: int = 8,
+    max_new: Tuple[int, int] = (4, 12),
+    max_len: int = 64,
+    mixed_step: bool = True,
+    prefill_chunk: int = 64,
     seed: int = 0,
 ) -> FleetRuntime:
     """A single-tier fleet fed its whole workload as one burst at t=0 —
     the saturating configuration for apples-to-apples goodput against a
-    bare ``ServingEngine.serve_queue`` at equal replica count."""
+    bare ``ServingEngine.serve_queue`` at equal replica count, and (with
+    long prompts + ``mixed_step`` toggled) the A/B for the mixed-batch
+    engine's TTFT/goodput acceptance row."""
     from repro.configs import get_config
     from repro.fleet.workload import burst_of
 
     vocab = get_config(arch).reduce().vocab_size
-    workload = burst_of(n_requests, vocab_size=vocab, prompt_len=8,
-                        max_new=(4, 12), seed=seed)
+    workload = burst_of(n_requests, vocab_size=vocab, prompt_len=prompt_len,
+                        max_new=max_new, seed=seed)
     tier = TierSpec(name="flat", arch=arch, cost_per_hour=1.0,
-                    nominal_t_max=2.0, decode_batch=decode_batch,
+                    nominal_t_max=2.0, max_len=max_len,
+                    decode_batch=decode_batch,
                     decode_chunk=4, queue_limit=2 * decode_batch,
                     base_capacity=n_replicas, initial_replicas=n_replicas,
-                    provision_delay_s=1.0)
+                    provision_delay_s=1.0, mixed_step=mixed_step,
+                    prefill_chunk=prefill_chunk)
     return FleetRuntime([tier], workload, FleetConfig(seed=seed))
 
 

@@ -10,10 +10,15 @@ occupancy so an under-utilized tier is not mistaken for a slow one.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
+
+# per-tier rolling TTFT window: enough samples for a stable p99 without
+# letting ancient completions mask a fresh latency regression
+TTFT_WINDOW = 512
 
 
 class Ewma:
@@ -85,6 +90,12 @@ class TelemetryBus:
         self.tier_tokens_per_s: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_ttft: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_tpot: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        # rolling raw TTFT samples: EWMAs hide the tail, and the tail is
+        # what the chunk-budget knob trades against TPOT — the controller
+        # reads p99 from here (head-of-line prefill blocking lives there)
+        self._ttft_window: Dict[str, Deque[float]] = {
+            t: deque(maxlen=TTFT_WINDOW) for t in tiers
+        }
         # paged-KV prefix cache effectiveness (stays at 0 for contiguous tiers)
         self.tier_cache_hit_rate: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_token_reuse: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
@@ -125,9 +136,18 @@ class TelemetryBus:
         sig = self.signals_for(replica_name)
         sig.ttft_s.update(ttft_s)
         self.tier_ttft[tier].update(ttft_s)
+        self._ttft_window[tier].append(float(ttft_s))
         if tokens > 1:
             sig.tpot_s.update(tpot_s)
             self.tier_tpot[tier].update(tpot_s)
+
+    def ttft_p99(self, tier: str) -> float:
+        """p99 TTFT over the tier's rolling completion window (0 until the
+        first completion)."""
+        win = self._ttft_window[tier]
+        if not win:
+            return 0.0
+        return float(np.percentile(np.asarray(win), 99.0))
 
     def forget_replica(self, replica_name: str) -> None:
         self.replica.pop(replica_name, None)
@@ -179,6 +199,7 @@ class TelemetryBus:
                 "occupancy": self.tier_occupancy[tier].get(),
                 "tokens_per_s": self.tier_tokens_per_s[tier].get(),
                 "ttft_s": self.tier_ttft[tier].get(),
+                "ttft_p99_s": self.ttft_p99(tier),
                 "tpot_s": self.tier_tpot[tier].get(),
                 "cache_hit_rate": self.tier_cache_hit_rate[tier].get(),
                 "token_reuse_rate": self.tier_token_reuse[tier].get(),

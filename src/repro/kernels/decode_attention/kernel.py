@@ -22,6 +22,17 @@ Two variants:
   flash-decoding decomposition (Dao et al.), and the layout the scheduler's
   t_max measurement rewards for decode_32k/long_500k cells.
 
+Mixed-batch chunked prefill (``mixed_attention_pallas`` / ``mixed_
+attention_paged``): the q operand generalizes from one token to a q-chunk
+(B, Q, Hq, D) — each sequence processes Q new tokens whose absolute
+positions are ``cache_lens[b] + i``.  The chunk rides the SAME grid as
+flash decoding: q is regrouped to (B, Hkv, Q·G, D) so the MXU sees a
+(Q·G, D)×(D, bk) matmul per KV tile, and the only change to the online
+softmax is a *per-row* causal limit (row r = query ``r // G`` may see keys
+``<= cache_lens[b] + r // G``) instead of one scalar length.  Q = 1
+degenerates to the decode kernel exactly, which is why one kernel family
+serves decode steps, prefill chunks, and the fused mixture of both.
+
 Paged variants (``decode_attention_paged`` / ``decode_attention_paged_
 splitk``): KV lives in a shared page pool (P, page_size, Hkv, D) and each
 sequence names its pages in a (B, n_blocks) block table.  The tables (and
@@ -510,3 +521,221 @@ def decode_attention_paged_splitk(
         interpret=interpret,
     )(m_p, l_p, acc_p)
     return out.reshape(B, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# mixed-batch chunked prefill (q-chunk flash decoding)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_kernel(
+    len_ref,                      # (1,) int32 cached length for this b
+    q_ref, k_ref, v_ref, o_ref,   # (1,1,QG,D), (1,bk,1,D), (1,bk,1,D), (1,1,QG,D)
+    m_ref, l_ref, acc_ref,        # scratch (QG,), (QG,), (QG,D)
+    *,
+    bk: int, nk: int, G: int, Q: int, scale: float,
+):
+    """The decode kernel with a per-row causal limit: row r is query
+    ``r // G`` of the chunk, allowed keys ``< cache_len + r//G + 1``."""
+    kj = pl.program_id(2)
+    clen = len_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the widest row sees clen + Q keys; tiles wholly past that are skipped
+    @pl.when(kj * bk < clen + Q)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (QG, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                           # (QG, bk)
+        pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        row_q = jax.lax.broadcasted_iota(jnp.int32, (G * Q, 1), 0) // G
+        s = jnp.where(pos < clen + row_q + 1, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def _regroup_q_chunk(q: jax.Array, Hkv: int) -> jax.Array:
+    """(B, Q, Hq, D) -> (B, Hkv, Q·G, D): KV-head-major rows so one grid
+    cell serves the whole head-group of every chunk query.  Row r of a
+    (b, h) cell is query ``r // G``, group member ``r % G``."""
+    B, Q, Hq, D = q.shape
+    G = Hq // Hkv
+    return (q.reshape(B, Q, Hkv, G, D)
+             .transpose(0, 2, 1, 3, 4)
+             .reshape(B, Hkv, Q * G, D))
+
+
+def _ungroup_q_chunk(out: jax.Array, Q: int, Hq: int) -> jax.Array:
+    B, Hkv, QG, D = out.shape
+    G = QG // Q
+    return (out.reshape(B, Hkv, Q, G, D)
+               .transpose(0, 2, 1, 3, 4)
+               .reshape(B, Q, Hq, D))
+
+
+def mixed_attention_pallas(
+    q: jax.Array,          # (B, Q, Hq, D) — Q new tokens per sequence
+    k_cache: jax.Array,    # (B, S, Hkv, D), chunk KV already written
+    v_cache: jax.Array,
+    cache_lens: jax.Array, # (B,) int32 tokens cached BEFORE the chunk
+    *,
+    block_k: int = 512,
+    softmax_scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hkv, D = k_cache.shape
+    Q, Hq = q.shape[1], q.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+
+    qg = _regroup_q_chunk(q, Hkv)
+    kernel = functools.partial(_mixed_kernel, bk=bk, nk=nk, G=G, Q=Q,
+                               scale=scale)
+    from repro.kernels.flash_attention.kernel import pltpu_vmem
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, kj: (b,)),
+            pl.BlockSpec((1, 1, Q * G, D), lambda b, h, kj: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, kj: (b, kj, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, kj: (b, kj, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q * G, D), lambda b, h, kj: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Q * G, D), q.dtype),
+        scratch_shapes=[
+            pltpu_vmem((Q * G,), jnp.float32),
+            pltpu_vmem((Q * G,), jnp.float32),
+            pltpu_vmem((Q * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_lens.astype(jnp.int32), qg, k_cache, v_cache)
+    return _ungroup_q_chunk(out, Q, Hq)
+
+
+def _mixed_paged_kernel(
+    tbl_ref, len_ref,             # scalar-prefetch: (B,nb) tables, (B,) lens
+    q_ref, k_ref, v_ref, o_ref,   # (1,1,QG,D), (1,ps,1,D), (1,ps,1,D), (1,1,QG,D)
+    m_ref, l_ref, acc_ref,        # scratch (QG,), (QG,), (QG,D)
+    *,
+    ps: int, nb: int, G: int, Q: int, scale: float,
+):
+    """Paged q-chunk kernel: grid (B, Hkv, nb) walking the block table with
+    the per-row causal limit of ``_mixed_kernel``."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    clen = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * ps < clen + Q)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (QG, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (ps, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                           # (QG, ps)
+        pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        row_q = jax.lax.broadcasted_iota(jnp.int32, (G * Q, 1), 0) // G
+        s = jnp.where(pos < clen + row_q + 1, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, :, 0, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def mixed_attention_paged(
+    q: jax.Array,              # (B, Q, Hq, D)
+    k_pages: jax.Array,        # (P, page_size, Hkv, D) shared pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_blocks) int32
+    cache_lens: jax.Array,     # (B,) int32 tokens cached BEFORE the chunk
+    *,
+    softmax_scale=None,
+    interpret: bool = False,
+) -> jax.Array:
+    from jax.experimental.pallas import tpu as pltpu
+
+    P, ps, Hkv, D = k_pages.shape
+    B, nb = block_tables.shape
+    Q, Hq = q.shape[1], q.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    qg = _regroup_q_chunk(q, Hkv)                           # (B, Hkv, QG, D)
+    from repro.kernels.flash_attention.kernel import pltpu_vmem
+
+    kernel = functools.partial(_mixed_paged_kernel, ps=ps, nb=nb, G=G, Q=Q,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q * G, D),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q * G, D),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu_vmem((Q * G,), jnp.float32),
+            pltpu_vmem((Q * G,), jnp.float32),
+            pltpu_vmem((Q * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Q * G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), cache_lens.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return _ungroup_q_chunk(out, Q, Hq)

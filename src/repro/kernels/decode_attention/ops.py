@@ -22,11 +22,17 @@ from repro.kernels.decode_attention.kernel import (
     decode_attention_paged_splitk,
     decode_attention_pallas,
     decode_attention_splitk,
+    mixed_attention_paged,
+    mixed_attention_pallas,
 )
 
 # caches at/above this length get the split-K treatment by default
 SPLITK_MIN_S = 2048
 SPLITK_MAX = 8
+# each split chunk should stream at least this many tokens: thinner chunks
+# spend their grid cells on softmax-state bookkeeping instead of KV reads
+# (the paged 4k bench regressed to 0.88x vs contiguous before this floor)
+SPLITK_MIN_CHUNK = 256
 
 
 def _interpret() -> bool:
@@ -44,12 +50,14 @@ def auto_k_splits(S: int, block_k: int = 512) -> int:
 
 
 def auto_paged_k_splits(n_blocks: int, page_size: int) -> int:
-    """Largest split ≤ SPLITK_MAX that divides the block table evenly and
-    covers ≥ SPLITK_MIN_S logical tokens."""
+    """Largest split ≤ SPLITK_MAX that divides the block table evenly,
+    covers ≥ SPLITK_MIN_S logical tokens, and keeps every chunk streaming
+    ≥ SPLITK_MIN_CHUNK tokens (page-block sizing: a chunk is a whole
+    number of pages, so small pages need more of them per chunk)."""
     if n_blocks * page_size < SPLITK_MIN_S:
         return 1
     for k in range(min(SPLITK_MAX, n_blocks), 1, -1):
-        if n_blocks % k == 0:
+        if n_blocks % k == 0 and (n_blocks // k) * page_size >= SPLITK_MIN_CHUNK:
             return k
     return 1
 
@@ -86,4 +94,28 @@ def decode_attention(q, k_cache, v_cache, lengths, *, page_table=None,
         )
     return decode_attention_pallas(
         q, k_cache, v_cache, lengths, block_k=block_k, interpret=_interpret()
+    )
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def mixed_attention(q, k_cache, v_cache, cache_lens, *, page_table=None,
+                    block_k=512):
+    """Q-chunk GQA attention for the mixed (prefill+decode) engine step.
+
+    ``q`` is (B, Q, Hq, D): query i of sequence b sits at absolute position
+    ``cache_lens[b] + i`` and attends keys at or before it — the chunk's
+    own KV must already be scattered into the cache/pool.  Contiguous:
+    ``k_cache`` is (B, S, Hkv, D); paged (``page_table`` a (B, n_blocks)
+    int32 array): ``k_cache`` is the (P, page_size, Hkv, D) pool and tiles
+    gather through the table inside the kernel grid.  Q = 1 is exactly
+    flash decoding with ``lengths = cache_lens + 1``.
+    """
+    if page_table is not None:
+        return mixed_attention_paged(
+            q, k_cache, v_cache, page_table, cache_lens,
+            interpret=_interpret(),
+        )
+    return mixed_attention_pallas(
+        q, k_cache, v_cache, cache_lens, block_k=block_k,
+        interpret=_interpret(),
     )

@@ -11,6 +11,17 @@ shared page pool (P, page_size, Hkv, D) and each sequence reads its pages
 through a (B, n_blocks) table.  ``gather_pages`` is the layout adapter —
 after the gather the math is exactly the contiguous reference, which is
 what makes paged decoding token-exact with the striped cache.
+``decode_attention_paged_splitk_ref`` composes the gather with the split-K
+decomposition — the host-path expression of what ``ops.decode_attention``
+dispatches for long paged caches (the ``kernels/decode_paged_4k`` bench
+row times this at the ops-auto split).
+
+``mixed_attention_ref`` is the chunked-prefill oracle: each sequence
+carries Q new tokens at absolute positions ``cache_len + i`` and query i
+attends causally to every cache position ``<= cache_len + i`` — the
+q-chunk generalization of ``decode_attention_ref`` (Q=1 reduces to it
+exactly).  Rows past a sequence's real suffix produce garbage the engine
+discards; the kernel contract masks *keys* per query, never queries.
 """
 from __future__ import annotations
 
@@ -85,6 +96,35 @@ def decode_attention_splitk_ref(
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
+def mixed_attention_ref(
+    q: jax.Array,          # (B, Q, Hq, D) — Q new tokens per sequence
+    k_cache: jax.Array,    # (B, S, Hkv, D)
+    v_cache: jax.Array,
+    cache_lens: jax.Array, # (B,) int32 tokens already cached BEFORE this chunk
+    *,
+    softmax_scale=None,
+) -> jax.Array:
+    """Chunked-prefill attention: query i of sequence b sits at absolute
+    position ``cache_lens[b] + i`` and attends keys at positions
+    ``<= cache_lens[b] + i`` (cached prefix + the chunk's earlier writes,
+    which the caller has already scattered into the cache)."""
+    B, S, Hkv, D = k_cache.shape
+    Q, Hq = q.shape[1], q.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Q, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    keypos = jnp.arange(S)
+    qpos = cache_lens[:, None] + jnp.arange(Q)[None, :]          # (B, Q)
+    valid = keypos[None, None, :] <= qpos[:, :, None]            # (B, Q, S)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Q, Hq, D).astype(q.dtype)
+
+
 def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
     """(P, ps, Hkv, D) pool + (B, nb) tables -> contiguous (B, nb*ps, Hkv, D).
 
@@ -109,3 +149,36 @@ def decode_attention_paged_ref(
     k = gather_pages(k_pages, block_tables)
     v = gather_pages(v_pages, block_tables)
     return decode_attention_ref(q, k, v, lengths, softmax_scale=softmax_scale)
+
+
+def decode_attention_paged_splitk_ref(
+    q: jax.Array,              # (B, Hq, D)
+    k_pages: jax.Array,        # (P, page_size, Hkv, D) shared pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_blocks) int32 page ids
+    lengths: jax.Array,        # (B,) int32 valid prefix
+    *,
+    k_splits: int = 4,
+    softmax_scale=None,
+) -> jax.Array:
+    """Paged split-K oracle: the table gather composed with the two-stage
+    split-K softmax — the host expression of the paged dispatch path at a
+    given split (``ops.auto_paged_k_splits`` picks it from the table)."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return decode_attention_splitk_ref(q, k, v, lengths, k_splits=k_splits,
+                                       softmax_scale=softmax_scale)
+
+
+def mixed_attention_paged_ref(
+    q: jax.Array,              # (B, Q, Hq, D)
+    k_pages: jax.Array,        # (P, page_size, Hkv, D) shared pool
+    v_pages: jax.Array,
+    block_tables: jax.Array,   # (B, n_blocks) int32 page ids
+    cache_lens: jax.Array,     # (B,) int32 cached tokens before the chunk
+    *,
+    softmax_scale=None,
+) -> jax.Array:
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return mixed_attention_ref(q, k, v, cache_lens, softmax_scale=softmax_scale)

@@ -330,6 +330,110 @@ def _attention_decode_paged(
     return out, KVCache(k=k_c, v=v_c)
 
 
+def attention_mixed(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                       # (B, Q, d) — Q new tokens per slot
+    cache: KVCache,                     # striped (B, S, Hkv, Dh) or pool (P, ps, Hkv, Dh)
+    cache_lens: jax.Array,              # (B,) tokens already cached per slot
+    new_lens: jax.Array,                # (B,) REAL new tokens (<= Q) per slot
+    cfg: ModelConfig,
+    *,
+    wqkv: Optional[jax.Array] = None,   # precomputed fuse_qkv_weights(p)
+    page_table: Optional[jax.Array] = None,   # (B, n_blocks) => paged pool
+    attn_window: Optional[int] = None,  # static: keys [0, attn_window) suffice
+) -> Tuple[jax.Array, KVCache]:
+    """One mixed-batch step: every slot advances by its own ragged suffix.
+
+    The engine's fused prefill+decode dispatch: slot b carries
+    ``(cache_lens[b], new_lens[b])`` — a decode slot has new_len 1, a
+    prefill chunk has new_len up to Q, an idle/waiting slot 0.  All Q
+    positions project/attend (padding rows compute discarded garbage, which
+    is what lets ONE trace per pow-of-2 Q bucket serve every chunk shape);
+    only rows ``i < new_lens[b]`` write KV — padding writes are suppressed
+    (contiguous: the write is a positional select, so only in-range rows
+    land; paged: redirected to the trash page), so garbage never lands
+    where real KV will live before it is overwritten.  Query i attends
+    causally to every position ``<= cache_lens[b] + i`` (cached prefix +
+    the chunk's earlier tokens).
+
+    ``attn_window`` is the engine's static bound on ``max(cache_lens +
+    new_lens)`` this step: attention reads only the first ``attn_window``
+    cache positions (the lax path's stand-in for the Pallas kernels'
+    length-based tile skipping — without it every chunk pays O(S_max)
+    score work on backends running the reference path).  Correctness does
+    not depend on it: the causal mask already excludes everything past the
+    content frontier.
+
+    Requires full attention (no sliding window) and ragged (B,) lengths —
+    the same contract as the paged decode path.
+    """
+    if cfg.sliding_window > 0:
+        raise ValueError("mixed-batch steps do not support sliding-window attention")
+    B, Q, _ = x.shape
+    cache_lens = jnp.asarray(cache_lens, jnp.int32)
+    new_lens = jnp.asarray(new_lens, jnp.int32)
+    if cache_lens.ndim != 1:
+        raise ValueError("mixed-batch steps require (B,) per-slot cache_lens")
+    positions = cache_lens[:, None] + jnp.arange(Q, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, fused=True, wqkv=wqkv)
+    valid = jnp.arange(Q, dtype=jnp.int32)[None, :] < new_lens[:, None]
+
+    if page_table is not None:
+        ps = cache.k.shape[1]
+        nb = page_table.shape[1]
+        block = jnp.clip(positions // ps, 0, nb - 1)
+        page = jnp.take_along_axis(page_table, block, axis=1)
+        page = jnp.where(valid, page, 0)                 # padding -> trash page
+        row = positions % ps
+        k_c = cache.k.at[page, row].set(k_new.astype(cache.k.dtype))
+        v_c = cache.v.at[page, row].set(v_new.astype(cache.v.dtype))
+    else:
+        # positional select instead of scatter: for every cache position,
+        # either the chunk row that lands there or the existing entry.
+        # Measurably cheaper than a scatter on CPU backends, and padding
+        # rows (offset >= new_len) are suppressed by construction.
+        S = cache.k.shape[1]
+        off = jnp.arange(S, dtype=jnp.int32)[None, :] - cache_lens[:, None]
+        wmask = (off >= 0) & (off < new_lens[:, None])   # (B, S)
+        idx = jnp.clip(off, 0, Q - 1)[:, :, None, None]
+
+        def write(c, n):
+            g = jnp.take_along_axis(
+                n.astype(c.dtype),
+                jnp.broadcast_to(idx, (B, S, *c.shape[2:])), axis=1,
+            )
+            return jnp.where(wmask[:, :, None, None], g, c)
+
+        k_c = write(cache.k, k_new)
+        v_c = write(cache.v, v_new)
+
+    if page_table is not None and attn_window is not None:
+        ps = cache.k.shape[1]
+        read_table = page_table[:, : -(-attn_window // ps)]
+    else:
+        read_table = page_table
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention.ops import mixed_attention
+
+        k_r = k_c if page_table is not None or attn_window is None else k_c[:, :attn_window]
+        v_r = v_c if page_table is not None or attn_window is None else v_c[:, :attn_window]
+        out = mixed_attention(q, k_r, v_r, cache_lens, page_table=read_table)
+    else:
+        from repro.kernels.decode_attention.ref import (
+            mixed_attention_paged_ref,
+            mixed_attention_ref,
+        )
+
+        if page_table is not None:
+            out = mixed_attention_paged_ref(q, k_c, v_c, read_table, cache_lens)
+        else:
+            k_r = k_c if attn_window is None else k_c[:, :attn_window]
+            v_r = v_c if attn_window is None else v_c[:, :attn_window]
+            out = mixed_attention_ref(q, k_r, v_r, cache_lens)
+    out = jnp.einsum("bqk,kd->bqd", out.reshape(B, Q, cfg.q_dim), p["wo"])
+    return out, KVCache(k=k_c, v=v_c)
+
+
 def attention_prefill_paged(
     p: Dict[str, jax.Array],
     x: jax.Array,                       # (1, T, d) — the prompt suffix

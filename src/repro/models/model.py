@@ -134,6 +134,48 @@ class Model:
         logits = transformer.logits_from_hidden(params, x, cfg, self.mesh)[:, 0]
         return logits, new_cache
 
+    def step_mixed(self, params, tokens, cache, cache_lens, new_lens,
+                   fused=None, page_table=None, attn_window=None):
+        """One mixed-batch engine step: each slot advances by its own
+        ragged suffix ``tokens[b, :new_lens[b]]`` starting at cache
+        position ``cache_lens[b]`` — decode steps (new_len 1) and prefill
+        chunks (new_len up to Q) fused into ONE dispatch.
+
+        ``tokens``: (B, Q) i32 (padding columns ignored); ``cache_lens``/
+        ``new_lens``: (B,) i32.  Returns (last-valid-position logits (B, V),
+        new_cache): logits are taken at column ``max(new_lens - 1, 0)`` —
+        a decode slot's next-token logits, a finishing prompt's first-token
+        logits (rows with new_len 0 return garbage the engine discards).
+
+        Transformer families with full attention only (the paged-KV
+        constraint): SSM/RWKV decode state cannot replay multi-token
+        suffixes in one step."""
+        cfg = self.cfg
+        if not self.supports_mixed_step:
+            raise ValueError(f"{cfg.name}: mixed-batch step unsupported "
+                             f"(family {cfg.family!r}, sliding_window="
+                             f"{cfg.sliding_window})")
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x, nk, nv = transformer.run_layers_mixed(
+            params, x, cache.k, cache.v, cache_lens, new_lens, cfg, self.mesh,
+            fused=fused, page_table=page_table, attn_window=attn_window,
+        )
+        last = jnp.maximum(jnp.asarray(new_lens, jnp.int32) - 1, 0)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = transformer.logits_from_hidden(params, x_last, cfg, self.mesh)[:, 0]
+        return logits, DecoderKVCache(k=nk, v=nv)
+
+    @property
+    def supports_mixed_step(self) -> bool:
+        """Mixed-batch chunked prefill shares the paged-KV structural
+        contract: a (L, ..., S, Hkv, Dh) KV cache whose positions can be
+        written out of lockstep, and full (non-ring) attention."""
+        cfg = self.cfg
+        return (cfg.supports_decode
+                and cfg.family not in ("rwkv", "hybrid")
+                and cfg.sliding_window == 0
+                and cfg.input_mode == "tokens")
+
     def fused_decode_weights(self, params):
         """Precomputed decode projection fusions for the scanned hot path
         (transformer families only; None-able pass-through otherwise)."""

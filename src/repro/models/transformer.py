@@ -279,6 +279,58 @@ def run_layers_decode(
     return x, new_k, new_v
 
 
+def run_layers_mixed(
+    params: Dict,
+    x: jax.Array,                # (B, Q, d) — ragged new-token suffixes
+    cache_k: jax.Array,          # (L, B, Sc, Hkv, Dh) or paged (L, P, ps, Hkv, Dh)
+    cache_v: jax.Array,
+    cache_lens: jax.Array,       # (B,) tokens already cached per slot
+    new_lens: jax.Array,         # (B,) real new tokens (<= Q) per slot
+    cfg: ModelConfig,
+    mesh=None,
+    fused: Optional[Dict] = None,   # fused_decode_weights(params, cfg)
+    page_table: Optional[jax.Array] = None,  # (B, n_blocks) => paged cache
+    attn_window: Optional[int] = None,       # static content bound (see attention_mixed)
+):
+    """The mixed-batch (chunked prefill + decode) step through the scanned
+    layer stack — ``run_layers_decode`` generalized from one token to a
+    ragged q-chunk per slot.  Returns (x, new_k, new_v)."""
+    if fused is None:
+        fused = fused_decode_weights(params, cfg)
+    xs_w = (
+        fused["wqkv"],
+        fused["w_gu"] if fused["w_gu"] is not None
+        else jnp.zeros((cfg.n_layers, 1), cache_k.dtype),
+    )
+
+    def body(x, inputs):
+        lp, ck, cv, wqkv_l, wgu_l = inputs
+        h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, new_cache = attention.attention_mixed(
+            lp["attn"], h, attention.KVCache(k=ck, v=cv), cache_lens,
+            new_lens, cfg, wqkv=wqkv_l, page_table=page_table,
+            attn_window=attn_window,
+        )
+        x = x + a
+        h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = moe.moe_block(lp["moe"], h, cfg, mesh)
+        elif cfg.mlp_type == "gelu":
+            hu = jnp.einsum("...d,df->...f", h, lp["mlp"]["w_up"])
+            hu = jax.nn.gelu(hu.astype(jnp.float32)).astype(h.dtype)
+            m = jnp.einsum("...f,fd->...d", hu, lp["mlp"]["w_down"])
+        else:
+            m = layers.swiglu_fused(h, wgu_l, lp["mlp"]["w_down"])
+        x = x + m
+        return x, (new_cache.k, new_cache.v)
+
+    x, (new_k, new_v) = lax.scan(
+        body, x, (params["layers"], cache_k, cache_v, *xs_w),
+        unroll=min(4, cfg.n_layers),
+    )
+    return x, new_k, new_v
+
+
 def run_layers_prefill_paged(
     params: Dict,
     x: jax.Array,                # (1, T, d) — prompt suffix embeddings

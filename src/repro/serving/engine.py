@@ -20,11 +20,19 @@ fused:
   ``np.asarray(tok)`` per token: O(steps) host↔device round trips.
 * ``serve_queue`` is the continuous-batching variant driven by
   ``DecodeSlots``: fixed decode slots with *per-slot* cache lengths (the
-  (B,) ragged form of ``model.decode``), admission by per-request prefill
-  written into the slot's cache stripe, and decoding in jitted scan chunks
+  (B,) ragged form of ``model.decode``), and decoding in jitted scan chunks
   of ``chunk`` steps between admission points.  Slots that finish mid-chunk
   produce discarded tokens until the chunk boundary — chunk-granularity
   iteration-level scheduling.
+* Admission is a MIXED BATCH by default (``EngineConfig.mixed_step``):
+  prompts split into fixed-quantum chunks that run in the SAME jitted
+  dispatch as the ongoing decode steps (``model.step_mixed`` — each slot
+  carries (cache_len, new_len); see docs/serving.md).  Prefill never
+  preempts decode and admission adds zero per-request dispatches; the
+  per-step token budget is the live TTFT/TPOT knob.  ``mixed_step=False``
+  keeps the legacy loop (one B=1 prefill dispatch per admission) as the
+  reference control — the mixed engine is token-exact with it, greedy,
+  on both cache layouts.
 * The loop body lives in ``QueueSession``: a *resumable* session object
   (``submit`` requests any time, ``pump`` one admission+chunk cycle) so a
   fleet runtime can interleave many replica sessions, observe per-pump
@@ -85,6 +93,14 @@ class EngineConfig:
     seed: int = 0
     decode_chunk: int = 8           # scan steps between continuous-batching
                                     # admission points (serve_queue)
+    # -- mixed-batch chunked prefill (serve_queue / QueueSession only) -------
+    mixed_step: bool = True         # fuse prefill chunks into the decode
+                                    # dispatch (False = PR-3 legacy admission:
+                                    # one B=1 prefill dispatch per request)
+    prefill_chunk: int = 64         # token budget per mixed step: decode
+                                    # slots take 1 token each, prefill chunks
+                                    # pack the remainder (the TTFT/TPOT knob;
+                                    # sessions can retune it live)
     # -- paged KV cache (serve_queue / QueueSession only) --------------------
     paged_kv: bool = False          # block-based KV with prefix reuse
     page_size: int = 16             # tokens per KV page
@@ -102,7 +118,11 @@ class EngineTelemetry:
     decode rate the fleet telemetry bus feeds back to the controller — the
     live replacement for the Table-1 ``t_max`` constants."""
 
-    prefills: int = 0
+    prefills: int = 0                # PROMPTS prefilled to completion (one per
+                                     # admitted request that touched the model,
+                                     # however many chunks it took)
+    prefill_chunks: int = 0          # prompt chunks dispatched (mixed mode)
+    mixed_steps: int = 0             # fused prefill+decode dispatches
     chunks: int = 0
     decode_s: float = 0.0            # wall time inside chunk scans (+ sync)
     useful_tokens: int = 0           # tokens delivered to some request
@@ -141,9 +161,21 @@ class ServingEngine:
             self._gen_scan, static_argnums=(5,), donate_argnums=(2,)
         )
         self._chunk = jax.jit(
-            self._chunk_scan, static_argnums=(5,), donate_argnums=(1,)
+            self._chunk_scan, static_argnums=(6,), donate_argnums=(1,)
         )
         self._place = jax.jit(self._place_slot, donate_argnums=(0,))
+        # -- mixed-batch chunked prefill -------------------------------------
+        # one trace per power-of-2 q-chunk width Q (tokens.shape[1]); the
+        # counter ticks once per trace, which the compile-count regression
+        # test pins (jit only re-runs this python body on a cache miss)
+        self.mixed = bool(cfg.mixed_step) and model.supports_mixed_step
+        self.mixed_traces = 0
+        self._mixed = jax.jit(
+            self._mixed_step_fn, static_argnums=(7,), donate_argnums=(1,)
+        )
+        self._mixed_paged = jax.jit(
+            self._mixed_step_paged_fn, static_argnums=(8,), donate_argnums=(1,)
+        )
         # -- paged-KV resolution (sessions consult these) --------------------
         if cfg.paged_kv and not model.supports_paged_kv:
             raise ValueError(
@@ -163,7 +195,7 @@ class ServingEngine:
             1 + math.ceil(cfg.page_headroom * cfg.decode_batch * self.max_blocks)
         )
         self._chunk_paged = jax.jit(
-            self._chunk_scan_paged, static_argnums=(6,), donate_argnums=(1,)
+            self._chunk_scan_paged, static_argnums=(7,), donate_argnums=(1,)
         )
         self._prefill_paged = jax.jit(model.prefill_paged, donate_argnums=(2,))
         self._place_pages = jax.jit(self._place_pages_fn, donate_argnums=(0,))
@@ -250,10 +282,12 @@ class ServingEngine:
         return jax.tree.map(place, buf, pcache)
 
     # -- continuous batching (DecodeSlots-driven) ----------------------------
-    def _chunk_scan(self, params, cache, tok, lens, key, steps: int):
-        """Ragged decode chunk: every slot advances ``steps`` tokens with its
-        own cache length; empty/finished slots decode discarded garbage
-        (their writes clamp to the last cache row)."""
+    def _chunk_scan(self, params, cache, tok, lens, active, key, steps: int):
+        """Ragged decode chunk: every ``active`` slot advances ``steps``
+        tokens with its own cache length; empty/finished/mid-prefill slots
+        decode discarded garbage and their cache length stays frozen (the
+        garbage KV lands at a position real writes overwrite before any
+        attention unmasks it)."""
         max_row = jnp.int32(self.cfg.max_len - 1)
         greedy = self.cfg.temperature <= 0.0
         fused = self.model.fused_decode_weights(params)
@@ -268,7 +302,8 @@ class ServingEngine:
                 nxt = self._sample(logits, sub)
             else:
                 nxt = self._sample(logits, key)
-            return (nxt, cache, jnp.minimum(lens + 1, max_row), key), tok
+            lens = jnp.where(active, jnp.minimum(lens + 1, max_row), lens)
+            return (nxt, cache, lens, key), tok
 
         (tok, cache, lens, key), toks = lax.scan(
             step, (tok, cache, lens, key), None, length=steps,
@@ -277,7 +312,8 @@ class ServingEngine:
         return cache, tok, lens, key, toks        # toks: (steps, B)
 
     # -- paged-KV jitted bodies ----------------------------------------------
-    def _chunk_scan_paged(self, params, pool, tables, tok, lens, key, steps: int):
+    def _chunk_scan_paged(self, params, pool, tables, tok, lens, active, key,
+                          steps: int):
         """The ragged chunk scan over the shared page pool: identical loop,
         with every decode reading/writing KV through the block tables."""
         max_row = jnp.int32(self.cfg.max_len - 1)
@@ -295,13 +331,101 @@ class ServingEngine:
                 nxt = self._sample(logits, sub)
             else:
                 nxt = self._sample(logits, key)
-            return (nxt, pool, jnp.minimum(lens + 1, max_row), key), tok
+            lens = jnp.where(active, jnp.minimum(lens + 1, max_row), lens)
+            return (nxt, pool, lens, key), tok
 
         (tok, pool, lens, key), toks = lax.scan(
             step, (tok, pool, lens, key), None, length=steps,
             unroll=min(4, steps),
         )
         return pool, tok, lens, key, toks         # toks: (steps, B)
+
+    # -- mixed-batch (chunked prefill + decode) jitted bodies -----------------
+    def _mixed_tokens(self, chunks, tok, is_decode):
+        """Column 0 of a decode row is its carried token; prefill rows keep
+        their host-built chunk tokens."""
+        Q = chunks.shape[1]
+        col0 = jnp.arange(Q, dtype=jnp.int32)[None, :] == 0
+        return jnp.where(is_decode[:, None] & col0, tok[:, None], chunks)
+
+    def _mixed_step_fn(self, params, cache, chunks, tok, lens, new_lens,
+                       is_decode, attn_window: int):
+        """ONE dispatch advancing every slot by its ragged suffix: decode
+        slots by their carried token, prefill slots by a prompt chunk.
+        ``attn_window`` (static, pow-2-bucketed by the caller) bounds the
+        cache span attention reads — the content frontier, so score work
+        tracks actual lengths instead of max_len.  Returns
+        (last-valid-position logits (B, V), cache, advanced lens)."""
+        self.mixed_traces += 1
+        fused = self.model.fused_decode_weights(params)
+        tokens = self._mixed_tokens(chunks, tok, is_decode)
+        logits, cache = self.model.step_mixed(
+            params, tokens, cache, lens, new_lens, fused=fused,
+            attn_window=attn_window,
+        )
+        return logits, cache, lens + new_lens
+
+    def _mixed_step_paged_fn(self, params, pool, tables, chunks, tok, lens,
+                             new_lens, is_decode, attn_window: int):
+        self.mixed_traces += 1
+        fused = self.model.fused_decode_weights(params)
+        tokens = self._mixed_tokens(chunks, tok, is_decode)
+        logits, pool = self.model.step_mixed(
+            params, tokens, pool, lens, new_lens, fused=fused,
+            page_table=tables, attn_window=attn_window,
+        )
+        return logits, pool, lens + new_lens
+
+    def chunk_quantum(self, token_budget: int) -> int:
+        """The FIXED q-chunk width a budget implies: pow2(budget / slots).
+        Every mixed step uses exactly this Q (tail chunks ride the same
+        grid with masked columns), so the trace space is ONE Q bucket per
+        budget times the attention-window buckets — fully enumerable by
+        ``warm_mixed_traces`` instead of emerging from workload dynamics."""
+        per_slot = max(1, int(token_budget) // max(1, self.cfg.decode_batch))
+        q = 1 << (per_slot - 1).bit_length()
+        return min(q, 1 << (self.cfg.max_len - 1).bit_length())
+
+    def warm_mixed_traces(self, budgets: Sequence[int]) -> int:
+        """Pre-compile the mixed-step trace grid for the given token
+        budgets: for each budget's Q quantum, every pow-2 attention-window
+        bucket up to max_len (the buckets a session can ever request).
+        Keeps jit compiles out of measured pumps; returns traces compiled."""
+        if not self.mixed:
+            return 0
+        n = self.cfg.decode_batch
+        before = self.mixed_traces
+        qs = sorted({self.chunk_quantum(b) for b in budgets})
+        for Q in qs:
+            chunks = jnp.zeros((n, Q), jnp.int32)
+            tok = jnp.zeros((n,), jnp.int32)
+            lens = jnp.zeros((n,), jnp.int32)
+            new_lens = jnp.ones((n,), jnp.int32)
+            isd = jnp.zeros((n,), bool)
+            aw = Q
+            while True:
+                aw_b = min(aw, self.cfg.max_len)
+                if self.paged:
+                    pool = self.model.empty_page_pool(
+                        self.num_pages, self.cfg.page_size
+                    )
+                    tables = jnp.full((n, self.max_blocks), TRASH_PAGE,
+                                      jnp.int32)
+                    out = self._mixed_paged(
+                        self.params, pool, tables, chunks, tok, lens,
+                        new_lens, isd, aw_b,
+                    )
+                else:
+                    cache = self.model.empty_cache(n, self.cfg.max_len)
+                    out = self._mixed(
+                        self.params, cache, chunks, tok, lens, new_lens,
+                        isd, aw_b,
+                    )
+                jax.block_until_ready(out[0])
+                if aw_b >= self.cfg.max_len:
+                    break
+                aw *= 2
+        return self.mixed_traces - before
 
     def _place_pages_fn(self, pool, pcache, pages):
         """Scatter a B=1 prefill cache into ``pages`` of the page pool.
@@ -380,10 +504,12 @@ class ServingEngine:
 class PumpReport:
     """What one ``QueueSession.pump`` observed (the fleet telemetry unit)."""
 
-    admitted: List[int] = field(default_factory=list)     # rids prefilled
+    admitted: List[int] = field(default_factory=list)     # rids entering a slot
     emitted: Dict[int, int] = field(default_factory=dict)  # rid -> tokens
     completed: Dict[int, np.ndarray] = field(default_factory=dict)
     chunk_steps: int = 0
+    prefill_chunks: int = 0           # prompt chunks dispatched (mixed mode)
+    mixed_steps: int = 0              # fused prefill+decode dispatches
     useful_tokens: int = 0
     wasted_tokens: int = 0
     occupancy: float = 0.0            # slot occupancy entering the chunk
@@ -437,6 +563,20 @@ class QueueSession:
         self._out: Dict[int, List[int]] = {}
         self._admissions = 0
         self._instant: List[int] = []                 # max_new<=0 completions
+        # -- mixed-batch chunked prefill ------------------------------------
+        self.mixed = engine.mixed
+        # the live TTFT/TPOT knob: new tokens per mixed step (decode slots
+        # count 1 each; prefill chunks pack the remainder).  Mutable so the
+        # fleet controller can retune it tick-by-tick without recompiling —
+        # jit traces key on the pow-2 chunk bucket, not the budget.
+        self.token_budget = max(1, engine.cfg.prefill_chunk)
+        # slot -> in-progress prompt ingestion (admitted, not yet decoding)
+        self._prefilling: Dict[int, Dict[str, Any]] = {}
+        # host mirror of per-slot cache lengths: every advance is host-
+        # deterministic (admission sets, mixed steps add new_lens, chunk
+        # scans add their step count), so the attention-window bucket is
+        # computed without a device sync
+        self._lens_host = np.zeros((n_slots,), np.int64)
 
     # -- request intake -------------------------------------------------------
     def submit(self, rid: int, inp: np.ndarray, max_new: int) -> None:
@@ -475,6 +615,10 @@ class QueueSession:
             self.slots.request_id[s] = -1
             self.slots.remaining[s] = 0
             hit = True
+        for s, st in list(self._prefilling.items()):
+            if st["rid"] == rid:              # abandoned mid-prompt-ingest
+                del self._prefilling[s]
+                hit = True
         if self.paged:
             self._release_rid(rid)
         self._out.pop(rid, None)
@@ -644,23 +788,39 @@ class QueueSession:
     def idle(self) -> bool:
         """No work left AND no completion events still to report (instant
         max_new<=0 completions surface through the next pump)."""
-        return (not self.queue and not self._instant
+        return (not self.queue and not self._instant and not self._prefilling
                 and self.slots.occupancy == 0.0)
 
     @property
     def load(self) -> int:
-        """Queued + actively decoding requests (bounded-queue admission)."""
-        return len(self.queue) + int(np.sum(self.slots.request_id >= 0))
+        """Queued + ingesting + actively decoding requests."""
+        return (len(self.queue) + len(self._prefilling)
+                + int(np.sum(self.slots.request_id >= 0)))
 
     def inflight_rids(self) -> List[int]:
-        """Incomplete rids, decode-slot occupants first (the requeue set
-        when this session's replica dies)."""
+        """Incomplete rids, slot occupants first (the requeue set when this
+        session's replica dies): decoding, then mid-prefill, then queued."""
         active = [int(r) for r in self.slots.request_id if r >= 0]
+        active += [st["rid"] for _, st in sorted(self._prefilling.items())]
         return active + [rid for rid, _, _ in self.queue]
 
     # -- the loop body --------------------------------------------------------
     def pump(self) -> PumpReport:
-        """One admission pass + one chunk scan; safe to call when idle."""
+        """One engine cycle; safe to call when idle.
+
+        Mixed mode (default): one token-budget admission+scheduling pass,
+        fused prefill+decode dispatches until the admitted prompts are
+        ingested (decode advances in every one), then one decode chunk
+        scan — prefill never preempts decode and admission adds zero
+        per-request dispatches.  Legacy mode (``mixed_step=False``): the
+        PR-3 loop — one B=1 prefill dispatch per admission, then the
+        chunk scan."""
+        if self.mixed:
+            return self._pump_mixed()
+        return self._pump_legacy()
+
+    def _pump_legacy(self) -> PumpReport:
+        """One admission pass + one chunk scan (per-request prefill)."""
         eng, slots = self.eng, self.slots
         chunk = max(1, eng.cfg.decode_chunk)
         report = PumpReport()
@@ -709,14 +869,16 @@ class QueueSession:
             return report
 
         # decode one chunk for the whole slot batch
+        active = jnp.asarray(slots.request_id >= 0)
         if self.paged:
             self.cache, self.tok, self.lens, self.key, toks = eng._chunk_paged(
                 eng.params, self.cache, jnp.asarray(self.tables),
-                self.tok, self.lens, self.key, chunk
+                self.tok, self.lens, active, self.key, chunk
             )
         else:
             self.cache, self.tok, self.lens, self.key, toks = eng._chunk(
-                eng.params, self.cache, self.tok, self.lens, self.key, chunk
+                eng.params, self.cache, self.tok, self.lens, active,
+                self.key, chunk
             )
         toks_np = np.asarray(toks)                    # ONE transfer per chunk
         n_slots = slots.n_slots
@@ -745,6 +907,370 @@ class QueueSession:
 
         tel = eng.telemetry
         tel.chunks += 1
+        tel.decode_s += report.wall_s
+        tel.useful_tokens += report.useful_tokens
+        tel.wasted_tokens += report.wasted_tokens
+        tel.completed_requests += len(report.completed)
+        tel.prefix_hits += report.prefix_hits
+        tel.prefix_misses += report.prefix_misses
+        tel.reused_tokens += report.reused_tokens
+        tel.prefilled_tokens += report.prefilled_tokens
+        return report
+
+    # -- mixed-batch chunked prefill ------------------------------------------
+    def _akey(self) -> Optional[jax.Array]:
+        """Per-admission sampling key.  Greedy mode returns None without
+        touching the device — argmax needs no key, and a fold_in per
+        admission is measurable dispatch chatter at high request rates."""
+        if self.eng.cfg.temperature <= 0.0:
+            self._admissions += 1
+            return None
+        akey = jax.random.fold_in(self.key, self._admissions)
+        self._admissions += 1
+        return akey
+
+    def _admit_mixed(self, s: int, rid: int, inp: np.ndarray, max_new: int) -> None:
+        """Contiguous mixed admission: the prompt enters the slot as pending
+        chunks; NO dispatch happens here — the prompt rides the next mixed
+        steps alongside the ongoing decodes."""
+        self._lens_host[s] = 0
+        self._prefilling[s] = dict(
+            rid=rid, rem=np.asarray(inp)[0].astype(np.int64),
+            plen=int(inp.shape[1]), max_new=int(max_new), akey=self._akey(),
+            tokens=None,
+        )
+
+    def _admit_paged_mixed(self, s: int, rid: int, inp: np.ndarray,
+                           max_new: int) -> bool:
+        """Paged mixed admission.  Full-prompt cache hits go straight to
+        decode off the cached logits (zero model work, identical to the
+        legacy path); everything else allocates the request's whole block
+        budget up front and queues the un-cached suffix as pending chunks
+        — ``prefilled_tokens`` then accrues per chunk *dispatched*, never
+        double-counting a prompt token across chunks.
+
+        Returns False (all page state rolled back) under pool pressure."""
+        eng, al = self.eng, self.allocator
+        ps = al.page_size
+        tokens = [int(t) for t in np.asarray(inp)[0]]
+        plen = len(tokens)
+        total_blocks = al.blocks_for(plen + max_new)
+
+        entry = al.lookup_prompt(tokens)
+        if entry is not None:
+            # full-prompt hit: zero prefill, bit-exact first token
+            pages = [int(p) for p in entry.pages]
+            for p in pages:
+                al.ref(p)
+            bi = plen // ps
+            cow_needed = bool(plen % ps) and al.refcount[pages[bi]] > 1
+            ok = self._extend_alloc(pages, total_blocks,
+                                    reserve=1 if cow_needed else 0)
+            if ok and cow_needed:
+                fresh = al.cow(pages[bi])
+                if fresh is None:
+                    ok = False
+                else:
+                    self.cache = eng._copy_page(
+                        self.cache, jnp.int32(pages[bi]), jnp.int32(fresh)
+                    )
+                    pages[bi] = fresh
+            if not ok:
+                for p in pages:
+                    al.deref(p)
+                return False
+            self._set_table(s, pages)
+            tok0 = eng._sample(jnp.asarray(entry.logits)[None], self._akey())[0]
+            self.tok = self.tok.at[s].set(tok0)
+            self._lens_host[s] = plen
+            al.stats.full_hits += 1
+            al.stats.reused_tokens += plen
+            self._slot_pages[s] = pages
+            self._slot_of[rid] = s
+            self.slots.admit(s, rid, max_new)     # decoding immediately
+            return True
+
+        if al.enable_reuse and self._ingest_overlap(tokens):
+            # another slot is mid-ingest on this prompt (or a block-sharing
+            # sibling): admitting now would redundantly re-prefill KV the
+            # cache is about to hold.  Defer — publish lands when that slot's
+            # last chunk completes, and the retry becomes a cache hit (the
+            # legacy path got this for free because its admission prefill
+            # was synchronous).
+            return False
+
+        m, shared = al.match_prefix(tokens)
+        pages = [int(p) for p in shared]
+        for p in pages:
+            al.ref(p)
+        if not self._extend_alloc(pages, total_blocks):
+            for p in pages:
+                al.deref(p)
+            return False
+        self._set_table(s, pages)
+        self._slot_pages[s] = pages
+        self._slot_of[rid] = s
+        if m > 0:
+            # block-aligned prefix hit: the first m tokens never touch the
+            # model — only the suffix is queued for chunked prefill
+            al.stats.prefix_hits += 1
+            al.stats.reused_tokens += m
+        else:
+            al.stats.misses += 1
+        self._lens_host[s] = m
+        self._prefilling[s] = dict(
+            rid=rid, rem=np.asarray(tokens[m:], np.int64), plen=plen,
+            max_new=int(max_new), akey=self._akey(), tokens=tokens,
+        )
+        return True
+
+    def _ingest_overlap(self, tokens: List[int]) -> bool:
+        """Whether any slot is currently ingesting a prompt this one would
+        share cached pages with once published: an identical prompt, or one
+        sharing at least a whole block-aligned prefix."""
+        ps = self.allocator.page_size
+        for st in self._prefilling.values():
+            ft = st["tokens"]
+            if ft is None:
+                continue
+            if tokens == ft:
+                return True
+            nb = min(len(tokens), len(ft)) // ps
+            if nb > 0 and tokens[:nb * ps] == ft[:nb * ps]:
+                return True
+        return False
+
+    def _schedule_chunks(self) -> List[Tuple[int, np.ndarray]]:
+        """Token-budget packing for the next mixed step: decode slots take
+        one token each off the budget; ingesting slots get one fixed-width
+        chunk quantum each until the remainder runs out.  The quantum is
+        the ONLY chunk width ever dispatched (tails ride the same grid with
+        masked columns), so traces never depend on prompt lengths or wave
+        mixtures.  At least one slot is always scheduled, so ingestion
+        cannot starve under a tiny budget or a decode-saturated batch."""
+        pending = sorted(self._prefilling.items())
+        if not pending:
+            return []
+        n_decode = int(np.sum(self.slots.request_id >= 0))
+        room = max(1, int(self.token_budget) - n_decode)
+        quantum = self.eng.chunk_quantum(self.token_budget)
+        k = max(1, room // quantum)
+        return [(s, st["rem"][:quantum]) for s, st in pending[:k]]
+
+    def _pump_mixed(self) -> PumpReport:
+        """One mixed cycle: admission -> budget-bounded fused prefill+decode
+        dispatches until this pump's admissions are fully ingested (decode
+        rows advance a token in every one) -> one decode chunk scan."""
+        eng, slots = self.eng, self.slots
+        chunk = max(1, eng.cfg.decode_chunk)
+        n_slots = slots.n_slots
+        greedy = eng.cfg.temperature <= 0.0
+        report = PumpReport()
+        t0 = time.perf_counter()
+        for rid in self._instant:
+            report.completed[rid] = self.results[rid]
+        self._instant = []
+
+        if self.paged:
+            st0 = self.allocator.stats
+            stats0 = (st0.full_hits + st0.prefix_hits, st0.misses,
+                      st0.reused_tokens, st0.prefilled_tokens)
+
+        # admit while there is work and a slot neither decoding nor ingesting
+        for s in slots.free:
+            if not self.queue:
+                break
+            s = int(s)
+            if s in self._prefilling:
+                continue
+            rid, inp, max_new = self.queue.pop(0)
+            if self.paged:
+                if not self._admit_paged_mixed(s, rid, inp, max_new):
+                    # page pressure: put it back and retry after decodes
+                    # release pages (completions free at chunk boundaries)
+                    self.queue.insert(0, (rid, inp, max_new))
+                    break
+            else:
+                self._admit_mixed(s, rid, inp, max_new)
+            report.admitted.append(rid)
+
+        decode_active = slots.request_id >= 0
+        report.occupancy = (
+            int(np.sum(decode_active)) + len(self._prefilling)
+        ) / n_slots
+
+        def _complete(rid: int) -> None:
+            tokens = np.asarray(self._out.pop(rid), np.int64)
+            self.results[rid] = tokens
+            report.completed[rid] = tokens
+            if self.paged:
+                self._release_rid(rid)
+
+        def _paged_report_tail() -> None:
+            if not self.paged:
+                return
+            st1 = self.allocator.stats
+            report.prefix_hits = st1.full_hits + st1.prefix_hits - stats0[0]
+            report.prefix_misses = st1.misses - stats0[1]
+            report.reused_tokens = st1.reused_tokens - stats0[2]
+            report.prefilled_tokens = st1.prefilled_tokens - stats0[3]
+            # post-release sample: a draining session reports decaying
+            # occupancy, not the admission-time peak
+            report.page_occupancy = self.allocator.occupancy
+            report.cached_pages = self.allocator.cached_pages
+
+        sched = self._schedule_chunks()
+        if not sched and not decode_active.any():       # nothing to run
+            _paged_report_tail()
+            report.wall_s = time.perf_counter() - t0
+            return report
+
+        # ---- the fused prefill+decode dispatches --------------------------
+        # drive this pump's admissions to completion: every iteration is one
+        # budget-bounded mixed step, and decode rows advance a token in each
+        # — ingestion wall is decode wall, never a stall (the legacy pump
+        # symmetrically runs ALL its B=1 admission prefills per cycle, with
+        # every decode slot idle while it does).  Emitted-token reads are
+        # deferred past the loop: the carried-token arrays stay valid (tok
+        # is never donated), so the steps pipeline with no per-step sync.
+        deferred_emits: List[Tuple[Any, List[Tuple[int, int]]]] = []
+        deferred_done: List[int] = []
+        while sched:
+            decode_active = slots.request_id >= 0
+            Q = eng.chunk_quantum(self.token_budget)    # the one chunk width
+            chunks_np = np.zeros((n_slots, Q), np.int32)
+            new_lens = np.zeros((n_slots,), np.int32)
+            for s, c in sched:
+                chunks_np[s, :len(c)] = c
+                new_lens[s] = len(c)
+            new_lens[decode_active] = 1
+            # decode rows emit their carried token; record WHICH (slot, rid)
+            # pairs emit now, read the values after the loop
+            pairs = [(int(s), int(slots.request_id[s]))
+                     for s in np.nonzero(decode_active)[0]]
+            deferred_emits.append((self.tok, pairs))
+            is_decode = jnp.asarray(decode_active)
+            # attention window: pow-2 bucket over the step's content
+            # frontier, so score work tracks real lengths, not max_len.
+            # Only rows actually advancing count — a freed slot's stale
+            # mirror entry must not ratchet the window up for the rest of
+            # the session's life.  Floored at Q so (Q, aw) pairs stay
+            # inside the enumerated warm_mixed_traces grid (aw >= Q, both
+            # pow-2, aw <= max_len).
+            need = int(np.max(np.where(new_lens > 0,
+                                       self._lens_host + new_lens, 0)))
+            aw = max(1 << (max(1, need) - 1).bit_length(), Q)
+            aw = min(aw, eng.cfg.max_len)
+            # device lens comes from the host mirror: admissions never touch
+            # the device, so the mirror is the single source of truth here
+            lens_dev = jnp.asarray(self._lens_host, jnp.int32)
+            if self.paged:
+                logits, self.cache, self.lens = eng._mixed_paged(
+                    eng.params, self.cache, jnp.asarray(self.tables),
+                    jnp.asarray(chunks_np), self.tok, lens_dev,
+                    jnp.asarray(new_lens), is_decode, aw,
+                )
+            else:
+                logits, self.cache, self.lens = eng._mixed(
+                    eng.params, self.cache, jnp.asarray(chunks_np), self.tok,
+                    lens_dev, jnp.asarray(new_lens), is_decode, aw,
+                )
+            self._lens_host += new_lens
+            report.mixed_steps += 1
+            # rows finishing their prompt THIS step start decoding from the
+            # step's last-position logits
+            completing = [s for s, c in sched
+                          if len(self._prefilling[s]["rem"]) == len(c)]
+            # decode rows advanced one token: emit the carried one, sample
+            # next.  Greedy mode folds the completing rows' first-token
+            # argmax into the SAME batched sample (argmax needs no key).
+            if greedy:
+                nxt = eng._sample(logits, self.key)
+                upd = decode_active.copy()
+                upd[completing] = True
+                self.tok = jnp.where(jnp.asarray(upd), nxt, self.tok)
+            else:
+                self.key, sub = jax.random.split(self.key)
+                nxt = eng._sample(logits, sub)
+                self.tok = jnp.where(is_decode, nxt, self.tok)
+                for s in completing:
+                    tok0 = eng._sample(logits[s][None],
+                                       self._prefilling[s]["akey"])[0]
+                    self.tok = self.tok.at[s].set(tok0)
+            logits_np = (np.asarray(logits)
+                         if self.paged and completing else None)
+            report.useful_tokens += len(pairs)
+            report.wasted_tokens += n_slots - len(pairs) - len(sched)
+            deferred_done.extend(slots.step())
+            # prefill rows consumed their chunk
+            for s, c in sched:
+                stt = self._prefilling[s]
+                stt["rem"] = stt["rem"][len(c):]
+                report.prefill_chunks += 1
+                if self.paged:
+                    self.allocator.stats.prefilled_tokens += len(c)
+                if len(stt["rem"]) == 0:
+                    if self.paged:
+                        al = self.allocator
+                        al.publish(
+                            stt["tokens"],
+                            self._slot_pages[s][:al.blocks_for(stt["plen"])],
+                            logits_np[s],
+                        )
+                    slots.admit(s, stt["rid"], stt["max_new"])
+                    del self._prefilling[s]
+                    eng.telemetry.prefills += 1
+            sched = self._schedule_chunks()
+
+        # flush the deferred emitted-token reads (one D2H per step, all
+        # issued after the dispatches), then the completions they finish
+        for tok_dev, pairs in deferred_emits:
+            vals = np.asarray(tok_dev)
+            for s, rid in pairs:
+                self._out[rid].append(int(vals[s]))
+                report.emitted[rid] = report.emitted.get(rid, 0) + 1
+        for rid in deferred_done:
+            _complete(rid)
+
+        # ---- the decode chunk scan ----------------------------------------
+        decode_active = slots.request_id >= 0
+        if decode_active.any():
+            active_j = jnp.asarray(decode_active)
+            lens_dev = jnp.asarray(self._lens_host, jnp.int32)
+            if self.paged:
+                self.cache, self.tok, self.lens, self.key, toks = eng._chunk_paged(
+                    eng.params, self.cache, jnp.asarray(self.tables),
+                    self.tok, lens_dev, active_j, self.key, chunk
+                )
+            else:
+                self.cache, self.tok, self.lens, self.key, toks = eng._chunk(
+                    eng.params, self.cache, self.tok, lens_dev, active_j,
+                    self.key, chunk
+                )
+            self._lens_host[decode_active] = np.minimum(
+                self._lens_host[decode_active] + chunk, eng.cfg.max_len - 1
+            )
+            toks_np = np.asarray(toks)                # ONE transfer per chunk
+            for t in range(chunk):
+                active = np.nonzero(slots.request_id >= 0)[0]
+                for s in active:
+                    rid = int(slots.request_id[s])
+                    self._out[rid].append(int(toks_np[t, s]))
+                    report.emitted[rid] = report.emitted.get(rid, 0) + 1
+                report.useful_tokens += len(active)
+                report.wasted_tokens += n_slots - len(active)
+                for rid in slots.step():
+                    _complete(rid)
+            report.chunk_steps = chunk
+
+        _paged_report_tail()
+        report.wall_s = time.perf_counter() - t0
+
+        tel = eng.telemetry
+        tel.mixed_steps += report.mixed_steps
+        tel.prefill_chunks += report.prefill_chunks
+        if report.chunk_steps:
+            tel.chunks += 1
         tel.decode_s += report.wall_s
         tel.useful_tokens += report.useful_tokens
         tel.wasted_tokens += report.wasted_tokens
