@@ -12,7 +12,12 @@ Four rows:
   * ``fleet/ttft_p99_burst`` — a prompt-heavy burst through the mixed-batch
     engine vs the identical fleet with legacy per-request prefill
     admission: p99 TTFT (must be strictly lower) and the goodput ratio the
-    fused prefill+decode step buys (acceptance: >= 1.3x).
+    fused prefill+decode step buys (acceptance: >= 1.3x);
+  * ``fleet/stream_ttft_burst`` — the same 96-request burst through the
+    STREAMING client API (``FleetClient`` handles): p99 of the TRUE
+    first-token TTFT (stamped when the first token reached the handle)
+    vs the completion-derived p99 a legacy ``on_complete`` client
+    observes (acceptance: stream p99 <= completion-derived p99).
 """
 from __future__ import annotations
 
@@ -142,5 +147,39 @@ def run() -> List[Row]:
         f"p99_ttft_legacy_s={p99[False]:.2f},"
         f"p99_ttft_mixed_s={p99[True]:.2f},"
         f"goodput_vs_legacy={good[True] / max(good[False], 1e-9):.2f}x",
+    ))
+
+    # -- streaming first-token TTFT on the 96-request burst ----------------
+    # the acceptance half of the API redesign: the handle-observed p99
+    # TTFT (first token actually streamed to the client) must be <= the
+    # completion-derived p99 at EQUAL settings — what a pre-streaming
+    # on_complete client had to report as its first visible token
+    import numpy as np
+
+    from repro.fleet.client import FleetClient
+    from repro.serving.api import RequestStatus
+
+    rt = build_saturated_fleet(
+        n_requests=96, n_replicas=1, decode_batch=16,
+        prompt_len=16, max_new=(4, 12), mixed_step=True,
+        prefill_chunk=128, seed=1,
+    )
+    client = FleetClient(rt)
+    handles = client.adopt_workload()
+    client.drain()
+    assert all(h.status is RequestStatus.COMPLETED for h in handles), \
+        "stream bench lost requests"
+    recs = [h.record for h in handles]
+    stream_p99 = float(np.percentile([r.ttft_s for r in recs], 99.0))
+    compl_p99 = float(np.percentile([r.latency_s for r in recs], 99.0))
+    assert stream_p99 <= compl_p99, (
+        f"streamed p99 TTFT {stream_p99:.2f}s above completion-derived "
+        f"{compl_p99:.2f}s")
+    rows.append((
+        "fleet/stream_ttft_burst",
+        stream_p99 * 1e6,                      # us of true first-token p99
+        f"p99_first_token_s={stream_p99:.2f},"
+        f"p99_completion_derived_s={compl_p99:.2f},"
+        f"ttft_win={compl_p99 / max(stream_p99, 1e-9):.2f}x",
     ))
     return rows

@@ -10,11 +10,18 @@ killed mid-decode, their in-flight requests requeue onto the premium tier,
 the controller flips to capacity-optimized on the measured shortfall, and
 flips back after recovery.
 
+Driven through the STREAMING client API (``FleetClient``): every trace
+request becomes a live ``RequestHandle`` whose tokens arrive per tick —
+through the outage a killed replica's handles keep streaming after their
+requests requeue (position-reconciled, token-exact under greedy).
+
 The run asserts the PR's acceptance criteria:
-  * zero lost requests through the outage (every request completes);
+  * zero lost requests through the outage (every handle COMPLETED);
   * a controller mode trace containing cost -> capacity -> cost;
   * fleet goodput (tokens/s of decode wall time) within 2x of one bare
-    ``ServingEngine.serve_queue`` run over the same requests.
+    ``ServingEngine.serve_queue`` run over the same requests;
+  * handle-observed (first-token) p99 TTFT no worse than what a
+    completion-only client would observe.
 
     PYTHONPATH=src python examples/fleet_serving.py
 """
@@ -28,9 +35,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import policy
+from repro.fleet.client import FleetClient
 from repro.fleet.runtime import build_demo_fleet
 from repro.models import Model
 from repro.serving import EngineConfig, ServingEngine
+from repro.serving.api import RequestStatus
 
 N_REQUESTS = 80
 RATE = 2.0
@@ -40,9 +49,12 @@ print(f"fleet: 2 tiers (cheap x2 slots, premium x4 slots), "
       f"{N_REQUESTS} requests @ {RATE}/s, cheap-tier outage t={OUTAGE}")
 rt = build_demo_fleet(n_requests=N_REQUESTS, rate=RATE, outage=OUTAGE)
 requests = list(rt.workload)
+client = FleetClient(rt)
+handles = client.adopt_workload()
 t0 = time.perf_counter()
-report = rt.run()
+client.drain()
 wall = time.perf_counter() - t0
+report = rt.report()
 
 s = report.summary()
 print("\nper-request ledger:")
@@ -72,7 +84,16 @@ assert has_subsequence(seq, [policy.COST_OPTIMIZED,
                              policy.COST_OPTIMIZED]), seq
 assert seq[0] == policy.COST_OPTIMIZED
 
-# -- token-exactness: fleet outputs == ONE bare engine, same requests -------
+# -- streaming handles: every request completed, TTFT observed at token 1 ---
+assert all(h.status is RequestStatus.COMPLETED for h in handles)
+recs = [h.record for h in handles]
+stream_p99 = float(np.percentile([r.ttft_s for r in recs], 99.0))
+compl_p99 = float(np.percentile([r.latency_s for r in recs], 99.0))
+print(f"\nstreaming: p99 TTFT {stream_p99:.2f}s at the first emitted token "
+      f"(a completion-only client observes {compl_p99:.2f}s)")
+assert stream_p99 <= compl_p99
+
+# -- token-exactness: streamed handles == ONE bare engine, same requests ----
 cfg = get_config("qwen3-0.6b").reduce()
 model = Model(cfg)
 params = model.init(jax.random.key(0))
@@ -80,12 +101,14 @@ bare = ServingEngine(model, params,
                      EngineConfig(max_len=64, decode_batch=4, decode_chunk=4))
 batch = [(r.prompt, r.max_new) for r in requests]
 ref = bare.serve_queue(batch)
+by_rid = {h.rid: h for h in handles}
 mismatch = sum(
-    0 if np.array_equal(report.outputs[r.rid], ref[i]) else 1
+    0 if (np.array_equal(report.outputs[r.rid], ref[i])
+          and np.array_equal(by_rid[r.rid].result(), ref[i])) else 1
     for i, r in enumerate(requests)
 )
 assert mismatch == 0, f"{mismatch} requests decoded differently"
-print(f"\ntoken-exact: {len(requests)}/{len(requests)} fleet outputs match "
+print(f"token-exact: {len(requests)}/{len(requests)} streamed handles match "
       f"the bare engine (through {int(s['total_retries'])} retries)")
 
 # -- goodput at EQUAL replica count -----------------------------------------

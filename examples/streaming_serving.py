@@ -1,0 +1,79 @@
+"""Streaming serving demo: submit -> stream -> cancel on a bare engine.
+
+The client API (`repro.serving.api`) turns the batch-shaped engine surface
+into a streaming request lifecycle: ``EngineClient.submit`` returns a
+``RequestHandle`` whose ``tokens()`` iterator yields output tokens as the
+engine's pumps emit them (NOT at completion), whose ``record`` stamps TTFT
+at the actual first token, and whose ``cancel()`` releases the request's
+decode slot and KV pages mid-flight.
+
+This demo streams four concurrent requests off one paged mixed-batch
+engine, prints tokens as they arrive, cancels one request mid-stream, and
+shows the per-request records — then verifies the cancelled request's KV
+pages were actually released.
+
+    PYTHONPATH=src python examples/streaming_serving.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import EngineConfig, ServingEngine
+from repro.serving.api import EngineClient, InferenceRequest, RequestStatus
+
+cfg = get_config("qwen3-0.6b").reduce()
+model = Model(cfg)
+params = model.init(jax.random.key(0))
+eng = ServingEngine(model, params, EngineConfig(
+    max_len=64, decode_batch=4, decode_chunk=4, paged_kv=True, page_size=8))
+client = EngineClient(eng)
+
+rng = np.random.default_rng(0)
+reqs = [
+    InferenceRequest(prompt=rng.integers(0, cfg.vocab_size, (1, 12)),
+                     max_new=16, slo_class="interactive"),
+    InferenceRequest(prompt=rng.integers(0, cfg.vocab_size, (1, 8)),
+                     max_new=12, slo_class="interactive", deadline_s=30.0),
+    InferenceRequest(prompt=rng.integers(0, cfg.vocab_size, (1, 10)),
+                     max_new=24, slo_class="batch"),
+    InferenceRequest(prompt=rng.integers(0, cfg.vocab_size, (1, 6)),
+                     max_new=12, slo_class="batch", priority=1),
+]
+handles = [client.submit(r) for r in reqs]
+victim = handles[2]
+print(f"submitted {len(handles)} requests "
+      f"(interactive admit before batch; handle rids {[h.rid for h in handles]})")
+
+# stream: poll each pump's deltas with take(); cancel the long batch
+# request once it has produced a few tokens
+print("\nstreaming (one line per engine pump):")
+while not client.idle:
+    client.tick()
+    for h in handles:
+        fresh = h.take()
+        if fresh:
+            print(f"  r{h.rid} [{h.status.value:>9}] += {fresh}")
+    if victim.delivered >= 4 and not victim.done:
+        print(f"  r{victim.rid} cancelling mid-stream "
+              f"({victim.delivered}/{victim.request.max_new} tokens delivered)")
+        victim.cancel()
+
+print("\nfinal states:")
+for h in handles:
+    rec = h.record
+    ttft = f"TTFT {rec.ttft_s * 1e3:.0f}ms" if rec else "no record (cancelled)"
+    print(f"  r{h.rid}: {h.status.value:>9}  {h.delivered} tokens  {ttft}")
+
+assert victim.status is RequestStatus.CANCELLED
+assert 0 < victim.delivered < victim.request.max_new
+assert all(h.status is RequestStatus.COMPLETED
+           for h in handles if h is not victim)
+# the cancel released its slot and pages: nothing live remains after drain
+assert client.session.allocator.live_pages == 0
+print("\nstreaming_serving OK: tokens streamed per pump, one request "
+      "cancelled mid-flight, all pages released")

@@ -16,6 +16,7 @@ Three layers now exist in this repo:
 The fleet runtime is request-granular: every request is dispatched,
 retried on replica death, and accounted individually (``RequestLog``).
 """
+from repro.fleet.client import FleetClient  # noqa: F401
 from repro.fleet.dispatcher import Dispatcher  # noqa: F401
 from repro.fleet.replica import Replica, ReplicaState  # noqa: F401
 from repro.fleet.runtime import (  # noqa: F401

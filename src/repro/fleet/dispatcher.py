@@ -22,9 +22,17 @@ every individual request is placed on a concrete replica:
     requests are only dropped after ``max_retries`` replica failures;
   * optional hedging duplicates a fraction of requests onto a second tier,
     first completion wins and cancels the twin (straggler mitigation).
+    Requests already past their deadline are never hedged — hedging buys
+    tail latency, and theirs is already lost;
+  * the backlog is SLO-ordered before placement (the same
+    ``slo_order_key`` rule the engine session uses for admission):
+    interactive before batch, higher priority first, soonest deadline
+    first, FIFO within ties — so a batch burst cannot head-of-line block
+    interactive traffic at the dispatch layer either.
 
 On replica death ``on_failure`` requeues the victim's in-flight rids at the
-FRONT of the backlog (oldest work first) with a retry tick.
+FRONT of the backlog (oldest work first) with a retry tick; ``cancel``
+withdraws a request wherever it is (backlog, primary, hedge twin).
 """
 from __future__ import annotations
 
@@ -35,6 +43,7 @@ import numpy as np
 
 from repro.fleet.replica import Replica
 from repro.fleet.workload import Request
+from repro.serving.api import slo_order_key
 
 
 class Dispatcher:
@@ -141,14 +150,28 @@ class Dispatcher:
             self._deficit += w
             self._deficit[ti] -= 1.0
 
+    def _order_backlog(self) -> None:
+        """SLO-order the backlog in place: interactive before batch, then
+        priority, then soonest deadline.  The sort is stable, so FIFO (and
+        requeued-work-first after a failure) is preserved within ties."""
+        if len(self.backlog) > 1:
+            self.backlog = deque(sorted(
+                self.backlog,
+                key=lambda r: slo_order_key(r.slo_class, r.priority,
+                                            r.deadline_t),
+            ))
+
     def dispatch(self, weights: np.ndarray,
-                 replicas_by_tier: Dict[str, List[Replica]]) -> int:
+                 replicas_by_tier: Dict[str, List[Replica]],
+                 now: float = 0.0) -> int:
         """Place as much of the backlog as current capacity allows.
 
         Returns the number of requests placed this tick; whatever could not
-        be placed stays in the backlog (zero silent drops).
+        be placed stays in the backlog (zero silent drops).  ``now`` is
+        control-loop time, used only for deadline checks (hedge skipping).
         """
         weights = np.asarray(weights, dtype=np.float64)
+        self._order_backlog()
         placed = 0
         rotated: set = set()        # unfittable rids already cycled this call
         while self.backlog:
@@ -194,7 +217,7 @@ class Dispatcher:
             if rep is None or not rep.submit(req):
                 # room was guaranteed above; a refusal here is a logic bug
                 raise RuntimeError(f"tier {tier} refused request {req.rid}")
-            hedge = self._maybe_hedge(req, ti, weights, replicas_by_tier)
+            hedge = self._maybe_hedge(req, ti, weights, replicas_by_tier, now)
             self.inflight[req.rid] = (req, rep, hedge)
             self.dispatched_per_tier[tier] += 1
             if affinity is not None:
@@ -203,8 +226,14 @@ class Dispatcher:
         return placed
 
     def _maybe_hedge(self, req: Request, primary_ti: int, weights: np.ndarray,
-                     replicas_by_tier: Dict[str, List[Replica]]) -> Optional[Replica]:
+                     replicas_by_tier: Dict[str, List[Replica]],
+                     now: float = 0.0) -> Optional[Replica]:
         if self.hedge_fraction <= 0.0:
+            return None
+        if req.past_deadline(now):
+            # hedging spends capacity to pull in the latency tail; a
+            # request already past its deadline cannot buy that back —
+            # serve it once, don't duplicate it (no debt accrued either)
             return None
         self._hedge_debt += self.hedge_fraction
         if self._hedge_debt < 1.0:
@@ -217,6 +246,24 @@ class Dispatcher:
                 self._hedge_debt -= 1.0
                 return rep
         return None
+
+    # -- cancellation --------------------------------------------------------
+    def cancel(self, rid: int) -> bool:
+        """Withdraw a request wherever it currently is: drop it from the
+        backlog, and/or cancel it on the primary and hedge replicas (the
+        streaming client's ``RequestHandle.cancel`` lands here).  Returns
+        False when the request is unknown (already completed/dropped)."""
+        before = len(self.backlog)
+        self.backlog = deque(r for r in self.backlog if r.rid != rid)
+        hit = len(self.backlog) < before
+        entry = self.inflight.pop(rid, None)
+        if entry is not None:
+            _, primary, hedge = entry
+            for rep in (primary, hedge):
+                if rep is not None and rep.session is not None:
+                    rep.session.cancel(rid)
+            hit = True
+        return hit
 
     # -- completion / failure ----------------------------------------------
     def on_complete(self, rid: int, source: Replica) -> Optional[Tuple[Request, Replica]]:

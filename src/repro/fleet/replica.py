@@ -125,7 +125,9 @@ class Replica:
     def submit(self, req: Request) -> bool:
         if not self.accepting or not self.fits(req):
             return False
-        self.session.submit(req.rid, req.prompt, req.max_new)
+        self.session.submit(req.rid, req.prompt, req.max_new,
+                            slo_class=req.slo_class, priority=req.priority,
+                            deadline_s=req.deadline_s)
         return True
 
     def pump(self) -> Optional[PumpReport]:

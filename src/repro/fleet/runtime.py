@@ -206,6 +206,56 @@ class FleetRuntime:
         self._wasted_tokens = 0
         self._warmed = False
         self._nominal = np.array([t.nominal_t_max for t in self.tiers])
+        # -- open-loop client surface (repro.fleet.client.FleetClient) ------
+        self._sinks: List[object] = []        # streaming-event subscribers
+        self._injected: List[Request] = []    # submit()-ed, not yet arrived
+        self._next_rid = 1 + max((r.rid for r in self.workload), default=-1)
+
+    # -- open-loop client surface --------------------------------------------
+    def attach_sink(self, sink) -> None:
+        """Subscribe a streaming-event sink (duck-typed: ``on_tokens(rid,
+        toks, replica, t)``, ``on_complete(rid, toks, record)``,
+        ``on_drop(rid, t)``).  ``FleetClient`` is the canonical sink; the
+        closed-trace ``run()`` path works identically with none attached."""
+        if sink not in self._sinks:
+            self._sinks.append(sink)
+
+    def new_rid(self) -> int:
+        """A request id no trace or prior submission has used."""
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    def submit(self, req: Request) -> None:
+        """Open-loop intake: the request enters the dispatcher backlog at
+        the next tick (its ``arrival_t`` is stamped to current control-loop
+        time) — the facade ``FleetClient.submit`` wraps with a handle."""
+        if req.rid >= self._next_rid:
+            self._next_rid = req.rid + 1
+        req.arrival_t = self.t
+        self._injected.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Withdraw a request wherever it is: not-yet-arrived (trace or
+        injected), backlogged, or in flight on replicas (primary + hedge;
+        slots and KV pages release immediately).  Returns False when the
+        rid is unknown or already completed."""
+        hit = False
+        pending = self.workload[self._wl_idx:]
+        if any(r.rid == rid for r in pending):
+            self.workload = (self.workload[:self._wl_idx]
+                             + [r for r in pending if r.rid != rid])
+            hit = True
+        before = len(self._injected)
+        self._injected = [r for r in self._injected if r.rid != rid]
+        hit = hit or len(self._injected) < before
+        hit = self.dispatcher.cancel(rid) or hit
+        self._first_token_t.pop(rid, None)
+        return hit
+
+    @property
+    def busy(self) -> bool:
+        return self._busy()
 
     # -- engines / replicas --------------------------------------------------
     def _engine_for(self, spec: TierSpec) -> ServingEngine:
@@ -252,6 +302,8 @@ class FleetRuntime:
         for req in dropped:
             self.request_log.dropped.append(req.rid)
             self._first_token_t.pop(req.rid, None)
+            for sink in self._sinks:
+                sink.on_drop(req.rid, self.t)
         self.telemetry.forget_replica(rep.name)
 
     # -- pool<->replica reconciliation ---------------------------------------
@@ -299,12 +351,14 @@ class FleetRuntime:
     def tick(self) -> None:
         t, cfg = self.t, self.cfg
 
-        # 1. arrivals
+        # 1. arrivals (trace requests due now + open-loop submissions)
         arrived: List[Request] = []
         while (self._wl_idx < len(self.workload)
                and self.workload[self._wl_idx].arrival_t <= t):
             arrived.append(self.workload[self._wl_idx])
             self._wl_idx += 1
+        arrived.extend(self._injected)
+        self._injected = []
         self.dispatcher.submit(arrived)
         arrival_rate = len(arrived) / cfg.tick_s
         backlog_pressure = len(self.dispatcher.backlog) / (
@@ -354,7 +408,7 @@ class FleetRuntime:
                 rep.set_chunk_budget(budget)
 
         # 5. request-granularity dispatch
-        self.dispatcher.dispatch(decision.weights, self.replicas)
+        self.dispatcher.dispatch(decision.weights, self.replicas, now=t)
         # requests the dispatcher dropped as unfittable (they fit no live
         # replica's engine/page budget) must reach the request log too —
         # replica-failure drops are already logged via _fail_replica
@@ -364,6 +418,8 @@ class FleetRuntime:
             if req.rid not in self.request_log.dropped:
                 self.request_log.dropped.append(req.rid)
                 self._first_token_t.pop(req.rid, None)
+                for sink in self._sinks:
+                    sink.on_drop(req.rid, t)
 
         # 6. pump every live replica one admission+chunk cycle
         completions_per_tier = {s.name: 0 for s in self.tiers}
@@ -383,8 +439,12 @@ class FleetRuntime:
                 if rep.state == ReplicaState.READY:
                     occ_sum[spec.name] += report.occupancy
                     occ_n[spec.name] += 1
-                for rid in report.emitted:
+                for rid, toks in report.tokens.items():
+                    # the TRUE first-token stamp: the tick the token was
+                    # actually emitted, not inferred from the completion
                     self._first_token_t.setdefault(rid, t + cfg.tick_s)
+                    for sink in self._sinks:
+                        sink.on_tokens(rid, toks, rep.name, t + cfg.tick_s)
                 for rid, toks in report.completed.items():
                     self._complete(rid, toks, rep, spec,
                                    completions_per_tier, latency_sum)
@@ -443,6 +503,8 @@ class FleetRuntime:
                                          rec.ttft_s, rec.tpot_s, rec.tokens)
         completions_per_tier[spec.name] += 1
         latency_sum[spec.name] += rec.latency_s
+        for sink in self._sinks:
+            sink.on_complete(rid, toks, rec)
 
     # -- drive to completion -------------------------------------------------
     def warmup(self) -> None:
@@ -498,17 +560,14 @@ class FleetRuntime:
         self._warmed = True
 
     def _busy(self) -> bool:
-        if self._wl_idx < len(self.workload) or not self.dispatcher.quiet:
+        if (self._wl_idx < len(self.workload) or self._injected
+                or not self.dispatcher.quiet):
             return True
         return any(r.load > 0 for reps in self.replicas.values() for r in reps)
 
-    def run(self) -> FleetReport:
-        """Run until the workload is drained (all requests completed or
-        dropped) or ``max_ticks`` elapses."""
-        if self.cfg.warmup:
-            self.warmup()
-        while self._busy() and self.ticks < self.cfg.max_ticks:
-            self.tick()
+    def report(self) -> FleetReport:
+        """Snapshot the run so far as a ``FleetReport`` (what ``run()``
+        returns; open-loop clients can take one at any point)."""
         return FleetReport(
             outputs=self.outputs,
             requests=self.request_log,
@@ -520,6 +579,17 @@ class FleetRuntime:
             useful_tokens=self._useful_tokens,
             wasted_tokens=self._wasted_tokens,
         )
+
+    def run(self) -> FleetReport:
+        """Closed-trace shim: drain the pre-built workload trace and return
+        the report — the legacy entry point, now equivalent to attaching a
+        ``FleetClient``, adopting the trace, and ticking to idle (the
+        streaming examples/benchmarks do exactly that)."""
+        if self.cfg.warmup:
+            self.warmup()
+        while self._busy() and self.ticks < self.cfg.max_ticks:
+            self.tick()
+        return self.report()
 
 
 # ---------------------------------------------------------------------------

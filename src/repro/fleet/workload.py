@@ -43,6 +43,10 @@ class Request:
     max_new: int
     slo_class: str = "interactive"
     retries: int = 0              # incremented on every requeue after failure
+    priority: int = 0             # higher dispatches/admits first in-class
+    deadline_s: Optional[float] = None   # relative to arrival; past it the
+                                         # request keeps serving but loses
+                                         # hedging (latency is already lost)
     # lazy int-tuple form of the prompt (the prefix-cache key shape);
     # carried through retried() copies so a backlogged request boxes once
     _token_key: Optional[tuple] = field(default=None, repr=False, compare=False)
@@ -50,6 +54,16 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[1])
+
+    @property
+    def deadline_t(self) -> float:
+        """Absolute deadline in control-loop time (inf when none)."""
+        if self.deadline_s is None:
+            return float("inf")
+        return self.arrival_t + self.deadline_s
+
+    def past_deadline(self, now: float) -> bool:
+        return now > self.deadline_t
 
     def token_key(self) -> tuple:
         if self._token_key is None:

@@ -98,6 +98,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.fleet:
+        from repro.fleet.client import FleetClient
         from repro.fleet.runtime import build_demo_fleet
 
         outage = None
@@ -107,10 +108,22 @@ def main(argv=None):
         rt = build_demo_fleet(arch=args.arch, n_requests=args.requests,
                               rate=max(args.demand / 100.0, 1.0),
                               outage=outage)
-        report = rt.run()
+        # the streaming client API: every trace request becomes a live
+        # RequestHandle (status / tokens() / cancel()), and TTFT is
+        # observed at the first emitted token instead of inferred later
+        client = FleetClient(rt)
+        handles = client.adopt_workload()
+        client.drain()
+        report = rt.report()
         print("fleet summary:",
               {k: round(v, 4) for k, v in report.summary().items()})
         print("mode trace:", [(round(t, 1), m) for t, m in report.mode_trace])
+        done = [h.record for h in handles if h.record is not None]
+        if done:
+            stream_p99 = float(np.percentile([r.ttft_s for r in done], 99.0))
+            compl_p99 = float(np.percentile([r.latency_s for r in done], 99.0))
+            print(f"p99 TTFT: {stream_p99:.2f}s at the first streamed token "
+                  f"(a completion-only client would observe {compl_p99:.2f}s)")
         return report
 
     from repro.configs.sd21 import paper_deployment_units
@@ -159,15 +172,24 @@ def main(argv=None):
         eng = ServingEngine(model, params, EngineConfig(max_len=64, decode_batch=4))
         rng = np.random.default_rng(0)
         if args.continuous:
-            reqs = [(rng.integers(0, cfg.vocab_size, (1, 16)),
-                     args.execute_samples) for _ in range(4)]
+            from repro.serving.api import EngineClient, InferenceRequest
+
+            client = EngineClient(eng)
             t0 = time.perf_counter()
-            res = eng.serve_queue(reqs)
+            handles = [
+                client.submit(InferenceRequest(
+                    prompt=rng.integers(0, cfg.vocab_size, (1, 16)),
+                    max_new=args.execute_samples))
+                for _ in range(4)
+            ]
+            streamed = list(handles[0].tokens())   # drives pumps while live
+            client.drain()
             dt = time.perf_counter() - t0
-            n = sum(v.size for v in res.values())
-            print(f"continuous batching: {n} tokens over {len(reqs)} requests "
-                  f"in {dt:.3f}s ({n / dt:.1f} tok/s); "
-                  f"sample: {res[0].tolist()}")
+            n = sum(h.result().size for h in handles)
+            print(f"continuous batching (streaming client): {n} tokens over "
+                  f"{len(handles)} requests in {dt:.3f}s ({n / dt:.1f} tok/s); "
+                  f"first handle streamed {streamed} "
+                  f"(TTFT {handles[0].record.ttft_s * 1e3:.1f}ms)")
         else:
             prompt = {
                 "inputs": jax.numpy.asarray(

@@ -1,4 +1,11 @@
-"""Serving layer: engine replicas + request traces."""
+"""Serving layer: engine replicas, request traces, and the streaming
+client API (submit -> stream -> cancel)."""
+from repro.serving.api import (  # noqa: F401
+    EngineClient,
+    InferenceRequest,
+    RequestHandle,
+    RequestStatus,
+)
 from repro.serving.engine import (  # noqa: F401
     DecodeSlots,
     EngineConfig,

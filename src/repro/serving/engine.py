@@ -73,6 +73,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -476,28 +477,39 @@ class ServingEngine:
         slots: Optional["DecodeSlots"] = None,
         on_complete: Optional[Callable[[int, np.ndarray], None]] = None,
     ) -> Dict[int, np.ndarray]:
-        """Continuous batching: admit queued requests into free decode slots,
-        decode the full slot batch in jitted scan chunks, refill as requests
-        finish.  Returns {request_index: (max_new,) tokens}.
+        """DEPRECATED batch facade — a thin shim over the streaming client
+        API (``repro.serving.api.EngineClient``), kept token-exact with the
+        pre-streaming drain loop.  New code should hold ``RequestHandle``s
+        and stream: tokens become visible per pump, requests can be
+        cancelled mid-flight, and TTFT is observed at the first token
+        instead of inferred at completion.
 
-        Throughput model: one prefill dispatch per admission + one scan
-        dispatch and ONE device→host transfer per ``decode_chunk`` steps —
-        dispatch/sync count is O(requests + total_steps / chunk), never
-        O(total tokens).
-
-        ``on_complete(rid, tokens)`` fires the moment a request's last token
-        crosses a chunk boundary (the per-request completion hook the fleet
-        dispatcher uses for hedging/retirement).
+        Admits queued requests into free decode slots, decodes the full
+        slot batch in jitted scan chunks, refills as requests finish.
+        Returns {request_index: (max_new,) tokens}.  ``on_complete(rid,
+        tokens)`` fires the moment a request's last token crosses a chunk
+        boundary.
         """
-        session = QueueSession(self, slots=slots)
-        for rid, (inp, max_new) in enumerate(requests):
-            session.submit(rid, inp, max_new)
-        while not session.idle:
-            report = session.pump()
+        from repro.serving.api import EngineClient, InferenceRequest
+
+        warnings.warn(
+            "serve_queue is a deprecation shim; use "
+            "repro.serving.api.EngineClient for the streaming request "
+            "lifecycle (submit -> stream -> cancel)",
+            DeprecationWarning, stacklevel=2,
+        )
+        client = EngineClient(self, slots=slots)
+        handles = [
+            client.submit(InferenceRequest(prompt=np.asarray(inp),
+                                           max_new=max_new), rid=rid)
+            for rid, (inp, max_new) in enumerate(requests)
+        ]
+        while not client.idle:
+            report = client.tick()
             if on_complete is not None:
                 for rid, toks in report.completed.items():
                     on_complete(rid, toks)
-        return dict(session.results)
+        return {h.rid: h.result() for h in handles}
 
 
 @dataclass
@@ -505,7 +517,11 @@ class PumpReport:
     """What one ``QueueSession.pump`` observed (the fleet telemetry unit)."""
 
     admitted: List[int] = field(default_factory=list)     # rids entering a slot
-    emitted: Dict[int, int] = field(default_factory=dict)  # rid -> tokens
+    emitted: Dict[int, int] = field(default_factory=dict)  # rid -> token count
+    # per-slot token DELTAS this pump (rid -> tokens emitted, in order) —
+    # the streaming-client feed: concatenated across pumps these are
+    # byte-identical to the completion-time array in ``completed``
+    tokens: Dict[int, List[int]] = field(default_factory=dict)
     completed: Dict[int, np.ndarray] = field(default_factory=dict)
     chunk_steps: int = 0
     prefill_chunks: int = 0           # prompt chunks dispatched (mixed mode)
@@ -563,6 +579,11 @@ class QueueSession:
         self._out: Dict[int, List[int]] = {}
         self._admissions = 0
         self._instant: List[int] = []                 # max_new<=0 completions
+        # SLO-aware admission order: rid -> (class_rank, -priority,
+        # deadline_at, seq).  All-default submissions collapse to FIFO
+        # (seq tiebreak), keeping the legacy paths token-exact.
+        self._slo: Dict[int, Tuple[int, int, float, int]] = {}
+        self._seq = 0
         # -- mixed-batch chunked prefill ------------------------------------
         self.mixed = engine.mixed
         # the live TTFT/TPOT knob: new tokens per mixed step (decode slots
@@ -579,7 +600,13 @@ class QueueSession:
         self._lens_host = np.zeros((n_slots,), np.int64)
 
     # -- request intake -------------------------------------------------------
-    def submit(self, rid: int, inp: np.ndarray, max_new: int) -> None:
+    def submit(self, rid: int, inp: np.ndarray, max_new: int, *,
+               slo_class: str = "interactive", priority: int = 0,
+               deadline_s: Optional[float] = None) -> None:
+        """Queue a request.  ``slo_class``/``priority``/``deadline_s`` set
+        its admission order (interactive before batch, higher priority
+        first, soonest deadline first, then FIFO); defaults reproduce the
+        legacy FIFO admission exactly."""
         if rid in self._out or rid in self.results:
             raise ValueError(f"request id {rid} already in session")
         inp = np.asarray(inp)
@@ -600,8 +627,25 @@ class QueueSession:
                     f"request {rid}: needs {need} KV pages but the pool only "
                     f"has {self.allocator.usable}"
                 )
+        from repro.serving.api import slo_order_key
+
+        deadline_at = (time.monotonic() + deadline_s
+                       if deadline_s is not None else math.inf)
+        self._slo[rid] = slo_order_key(slo_class, priority, deadline_at,
+                                       self._seq)
+        self._seq += 1
         self._out[rid] = []
         self.queue.append((rid, inp, max_new))
+
+    def _pop_next(self) -> Tuple[int, np.ndarray, int]:
+        """Remove and return the queued request that should admit next
+        (SLO order; position in ``self.queue`` is storage, not order)."""
+        best = min(range(len(self.queue)),
+                   key=lambda i: self._slo[self.queue[i][0]])
+        return self.queue.pop(best)
+
+    def _retire(self, rid: int) -> None:
+        self._slo.pop(rid, None)
 
     def cancel(self, rid: int) -> bool:
         """Abandon a request (hedge loser): drop it from the queue or free
@@ -622,6 +666,7 @@ class QueueSession:
         if self.paged:
             self._release_rid(rid)
         self._out.pop(rid, None)
+        self._retire(rid)
         return hit
 
     def fits(self, prompt_len: int, max_new: int) -> bool:
@@ -837,7 +882,7 @@ class QueueSession:
         for s in slots.free:
             if not self.queue:
                 break
-            rid, inp, max_new = self.queue.pop(0)
+            rid, inp, max_new = self._pop_next()
             if self.paged:
                 if not self._admit_paged(int(s), rid, inp, max_new):
                     # page pressure: put it back and retry after decodes
@@ -886,14 +931,17 @@ class QueueSession:
             active = np.nonzero(slots.request_id >= 0)[0]
             for s in active:
                 rid = int(slots.request_id[s])
-                self._out[rid].append(int(toks_np[t, s]))
+                val = int(toks_np[t, s])
+                self._out[rid].append(val)
                 report.emitted[rid] = report.emitted.get(rid, 0) + 1
+                report.tokens.setdefault(rid, []).append(val)
             report.useful_tokens += len(active)
             report.wasted_tokens += n_slots - len(active)
             for rid in slots.step():
                 tokens = np.asarray(self._out.pop(rid), np.int64)
                 self.results[rid] = tokens
                 report.completed[rid] = tokens
+                self._retire(rid)
                 if self.paged:
                     self._release_rid(rid)
         if self.paged:
@@ -1048,7 +1096,18 @@ class QueueSession:
         masked columns), so traces never depend on prompt lengths or wave
         mixtures.  At least one slot is always scheduled, so ingestion
         cannot starve under a tiny budget or a decode-saturated batch."""
-        pending = sorted(self._prefilling.items())
+        # SLO admission order applies to chunk scheduling too: under a
+        # budget that cannot feed every ingesting slot, interactive /
+        # high-priority / deadline-soonest prompts take their chunk first.
+        # All-default metadata degenerates to submission (FIFO) order —
+        # within one pump's admission wave that coincides with the legacy
+        # slot order, since free slots fill in ascending index from a FIFO
+        # queue
+        pending = sorted(
+            self._prefilling.items(),
+            key=lambda kv: (self._slo.get(kv[1]["rid"], (0, 0, math.inf, 0)),
+                            kv[0]),
+        )
         if not pending:
             return []
         n_decode = int(np.sum(self.slots.request_id >= 0))
@@ -1083,7 +1142,7 @@ class QueueSession:
             s = int(s)
             if s in self._prefilling:
                 continue
-            rid, inp, max_new = self.queue.pop(0)
+            rid, inp, max_new = self._pop_next()
             if self.paged:
                 if not self._admit_paged_mixed(s, rid, inp, max_new):
                     # page pressure: put it back and retry after decodes
@@ -1103,6 +1162,7 @@ class QueueSession:
             tokens = np.asarray(self._out.pop(rid), np.int64)
             self.results[rid] = tokens
             report.completed[rid] = tokens
+            self._retire(rid)
             if self.paged:
                 self._release_rid(rid)
 
@@ -1227,8 +1287,10 @@ class QueueSession:
         for tok_dev, pairs in deferred_emits:
             vals = np.asarray(tok_dev)
             for s, rid in pairs:
-                self._out[rid].append(int(vals[s]))
+                val = int(vals[s])
+                self._out[rid].append(val)
                 report.emitted[rid] = report.emitted.get(rid, 0) + 1
+                report.tokens.setdefault(rid, []).append(val)
         for rid in deferred_done:
             _complete(rid)
 
@@ -1255,8 +1317,10 @@ class QueueSession:
                 active = np.nonzero(slots.request_id >= 0)[0]
                 for s in active:
                     rid = int(slots.request_id[s])
-                    self._out[rid].append(int(toks_np[t, s]))
+                    val = int(toks_np[t, s])
+                    self._out[rid].append(val)
                     report.emitted[rid] = report.emitted.get(rid, 0) + 1
+                    report.tokens.setdefault(rid, []).append(val)
                 report.useful_tokens += len(active)
                 report.wasted_tokens += n_slots - len(active)
                 for rid in slots.step():

@@ -40,6 +40,17 @@ def test_serve_cli_paper_dus():
     assert "real decode tokens" in p.stdout
 
 
+def test_serve_cli_streaming_continuous():
+    """--continuous now drives the streaming EngineClient: tokens stream
+    per pump and the printed TTFT comes from the first-token stamp."""
+    p = _run([
+        "repro.launch.serve", "--paper-dus", "--duration", "60",
+        "--demand", "200", "--execute-samples", "4", "--continuous",
+    ])
+    assert "streaming client" in p.stdout
+    assert "TTFT" in p.stdout
+
+
 def test_serve_cli_roofline_dus():
     """Roofline-derived DU profiles from the dry-run artifacts (if present)."""
     results = os.path.join(REPO, "results", "dryrun")

@@ -1,0 +1,468 @@
+"""Streaming request lifecycle: one client API from engine to fleet.
+
+The acceptance bar: streamed token sequences are token-exact with the
+legacy completion-time arrays on BOTH cache layouts and both engine modes
+(mixed / legacy per-request prefill); cancel-mid-stream releases pages and
+slots at ragged cancel points (hypothesis property); a mid-decode replica
+kill leaves handles streaming after the requeue; SLO metadata orders
+admission (interactive before batch, priority, deadline) and disables
+hedging past the deadline; ``serve_queue`` survives as a deprecation shim
+with the exact old call pattern; and the committed API-surface snapshot
+matches the live code.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.fleet.client import FleetClient
+from repro.fleet.dispatcher import Dispatcher
+from repro.fleet.replica import Replica
+from repro.fleet.runtime import FleetConfig, FleetRuntime, TierSpec, build_demo_fleet
+from repro.fleet.workload import Request
+from repro.models import Model
+from repro.serving import EngineConfig, QueueSession, ServingEngine
+from repro.serving.api import (
+    EngineClient,
+    InferenceRequest,
+    RequestStatus,
+    slo_order_key,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(model, params, *, mixed=True, paged=False, budget=8, batch=3,
+            max_len=64, page_size=8):
+    return ServingEngine(model, params, EngineConfig(
+        max_len=max_len, decode_batch=batch, temperature=0.0, decode_chunk=4,
+        mixed_step=mixed, prefill_chunk=budget,
+        paged_kv=paged, page_size=page_size))
+
+
+@pytest.fixture(scope="module")
+def engines(qwen):
+    """One engine per (mixed, paged) corner, compiled once per module."""
+    _, model, params = qwen
+    return {
+        (True, False): _engine(model, params, mixed=True, paged=False),
+        (True, True): _engine(model, params, mixed=True, paged=True),
+        (False, False): _engine(model, params, mixed=False, paged=False),
+        (False, True): _engine(model, params, mixed=False, paged=True),
+    }
+
+
+def _requests(cfg, seed=0, shapes=((12, 6), (5, 9), (17, 3), (8, 7), (12, 5))):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, (1, p)), n) for p, n in shapes]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: streamed deltas == legacy completion-time arrays (both layouts,
+# both engine modes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mixed,paged", [(True, False), (True, True),
+                                         (False, False), (False, True)])
+def test_streamed_tokens_token_exact_with_legacy(qwen, engines, mixed, paged):
+    """Per-pump streamed deltas, concatenated, must be byte-identical to
+    the legacy ``on_complete`` completion arrays — the API redesign changes
+    WHEN tokens become visible, never WHAT they are."""
+    cfg, _, _ = qwen
+    eng = engines[(mixed, paged)]
+    reqs = _requests(cfg, seed=1)
+
+    legacy = {}
+    eng.serve_queue(reqs, on_complete=lambda rid, toks: legacy.setdefault(rid, toks))
+
+    client = EngineClient(eng)
+    handles = [client.submit(InferenceRequest(prompt=p, max_new=n))
+               for p, n in reqs]
+    streamed = {h.rid: [] for h in handles}
+    while not client.idle:
+        client.tick()
+        for h in handles:
+            streamed[h.rid].extend(h.take())     # deltas as they appeared
+    for h in handles:
+        assert h.status is RequestStatus.COMPLETED
+        np.testing.assert_array_equal(np.asarray(streamed[h.rid], np.int64),
+                                      legacy[h.rid])
+        np.testing.assert_array_equal(h.result(), legacy[h.rid])
+
+
+def test_pump_report_deltas_concat_to_completed(qwen, engines):
+    """Session-level contract: ``PumpReport.tokens`` concatenated across
+    pumps equals ``PumpReport.completed``'s final array for every rid, and
+    ``emitted`` counts match the delta lengths."""
+    cfg, _, _ = qwen
+    sess = QueueSession(engines[(True, True)])
+    for rid, (p, n) in enumerate(_requests(cfg, seed=2)):
+        sess.submit(rid, p, n)
+    deltas, finals = {}, {}
+    while not sess.idle:
+        rep = sess.pump()
+        for rid, toks in rep.tokens.items():
+            deltas.setdefault(rid, []).extend(toks)
+            assert rep.emitted[rid] == len(rep.tokens[rid])
+        finals.update(rep.completed)
+    assert set(deltas) == set(finals)
+    for rid in finals:
+        np.testing.assert_array_equal(np.asarray(deltas[rid], np.int64),
+                                      finals[rid])
+
+
+def test_handle_ttft_observed_before_completion(qwen, engines):
+    """The point of streaming: the first token is observed strictly before
+    the request completes (legacy clients could only infer TTFT from the
+    completion record)."""
+    cfg, _, _ = qwen
+    client = EngineClient(engines[(True, False)])
+    rng = np.random.default_rng(3)
+    h = client.submit(InferenceRequest(
+        prompt=rng.integers(0, cfg.vocab_size, (1, 8)), max_new=20))
+    client.drain()
+    rec = h.record
+    assert rec is not None and rec.tokens == 20
+    # 20 tokens over chunk=4 pumps => first token stamped pumps earlier
+    assert rec.first_token_t < rec.complete_t
+    assert rec.ttft_s < rec.latency_s
+
+
+def test_instant_and_oversized_requests_through_client(qwen, engines):
+    cfg, _, _ = qwen
+    client = EngineClient(engines[(True, False)])
+    h = client.submit(InferenceRequest(prompt=np.zeros((1, 8), np.int64),
+                                       max_new=0))
+    client.drain()
+    assert h.status is RequestStatus.COMPLETED and h.result().size == 0
+    with pytest.raises(ValueError):
+        client.submit(InferenceRequest(prompt=np.zeros((1, 8), np.int64),
+                                       max_new=1000))
+
+
+# ---------------------------------------------------------------------------
+# satellite: serve_queue deprecation shim pins the old call pattern
+# ---------------------------------------------------------------------------
+
+
+def test_serve_queue_shim_old_call_pattern(qwen, engines):
+    """The exact pre-streaming call pattern: a list of (inputs, max_new)
+    tuples in, {rid: np.ndarray} out, optional on_complete hook — now a
+    DeprecationWarning-emitting shim over EngineClient."""
+    cfg, _, _ = qwen
+    eng = engines[(True, False)]
+    reqs = _requests(cfg, seed=4, shapes=((8, 4), (10, 6), (6, 3)))
+    seen = {}
+    with pytest.warns(DeprecationWarning, match="serve_queue"):
+        res = eng.serve_queue(reqs, on_complete=lambda rid, t: seen.setdefault(rid, t))
+    assert set(res) == {0, 1, 2} and set(seen) == {0, 1, 2}
+    for rid, (_, n) in enumerate(reqs):
+        assert isinstance(res[rid], np.ndarray) and res[rid].size == n
+        np.testing.assert_array_equal(res[rid], seen[rid])
+
+
+# ---------------------------------------------------------------------------
+# satellite: SLO-aware admission (session + dispatcher)
+# ---------------------------------------------------------------------------
+
+
+def test_slo_order_key_rule():
+    inf = float("inf")
+    ia = slo_order_key("interactive", 0, inf, 0)
+    ba = slo_order_key("batch", 0, inf, 1)
+    hi = slo_order_key("batch", 5, inf, 2)
+    dl = slo_order_key("interactive", 0, 10.0, 3)
+    assert ia < ba                     # interactive before batch
+    assert hi < ba                     # priority within a class
+    assert dl < ia                     # sooner deadline first
+    assert slo_order_key("interactive", 0, inf, 0) < slo_order_key(
+        "interactive", 0, inf, 1)      # FIFO tiebreak
+
+
+def test_session_admits_interactive_before_batch(qwen, engines):
+    """A mixed-SLO queue wider than the slot batch: the interactive
+    requests take the first admission wave even though the batch requests
+    were submitted first."""
+    cfg, _, _ = qwen
+    eng = engines[(True, False)]       # batch=3 slots
+    sess = QueueSession(eng)
+    rng = np.random.default_rng(5)
+    prompts = {rid: rng.integers(0, cfg.vocab_size, (1, 8)) for rid in range(5)}
+    for rid in (0, 1, 2):
+        sess.submit(rid, prompts[rid], 4, slo_class="batch")
+    sess.submit(3, prompts[3], 4)                       # interactive
+    sess.submit(4, prompts[4], 4, slo_class="interactive", priority=2)
+    rep = sess.pump()
+    assert rep.admitted[:2] == [4, 3]   # priority first, then plain interactive
+    assert rep.admitted[2] == 0         # FIFO within the batch class
+    while not sess.idle:
+        sess.pump()
+    assert set(sess.results) == set(range(5))
+
+
+def test_session_deadline_orders_same_class(qwen, engines):
+    cfg, _, _ = qwen
+    sess = QueueSession(engines[(True, False)])
+    rng = np.random.default_rng(6)
+    p = {rid: rng.integers(0, cfg.vocab_size, (1, 8)) for rid in range(4)}
+    sess.submit(0, p[0], 3, deadline_s=3600.0)
+    sess.submit(1, p[1], 3)                             # no deadline: last
+    sess.submit(2, p[2], 3, deadline_s=1.0)             # most urgent
+    sess.submit(3, p[3], 3, deadline_s=60.0)
+    rep = sess.pump()                                   # 3 slots
+    assert rep.admitted == [2, 3, 0]
+    while not sess.idle:
+        sess.pump()
+
+
+def test_schedule_chunks_prefers_interactive(qwen):
+    """Under a starved token budget, the chunk scheduler feeds the
+    interactive ingesting slot before the batch one regardless of slot
+    index."""
+    cfg, model, params = qwen
+    eng = _engine(model, params, batch=2, budget=2)
+    sess = QueueSession(eng)
+    rng = np.random.default_rng(7)
+    sess.submit(0, rng.integers(0, cfg.vocab_size, (1, 16)), 4,
+                slo_class="batch")
+    sess.submit(1, rng.integers(0, cfg.vocab_size, (1, 16)), 4)
+    # admit manually in FIFO slot order so the batch request holds slot 0
+    for slot in (0, 1):
+        rid, inp, max_new = sess.queue.pop(0)
+        sess._admit_mixed(slot, rid, inp, max_new)
+    sess.token_budget = 1                               # room for ONE chunk
+    sched = sess._schedule_chunks()
+    assert len(sched) == 1 and sched[0][0] == 1         # interactive slot
+    while not sess.idle:
+        sess.pump()
+    assert set(sess.results) == {0, 1}
+
+
+def test_dispatcher_backlog_interactive_first(qwen, engines):
+    cfg, _, _ = qwen
+    eng = engines[(False, False)]
+    rep = Replica("a/r1", "a", eng, queue_limit=2)
+    rep.activate(0.0)
+    d = Dispatcher(["a"])
+    rng = np.random.default_rng(8)
+
+    def req(rid, slo, priority=0):
+        return Request(rid=rid, arrival_t=0.0,
+                       prompt=rng.integers(0, cfg.vocab_size, (1, 8)),
+                       max_new=4, slo_class=slo, priority=priority)
+
+    d.submit([req(0, "batch"), req(1, "batch", priority=3),
+              req(2, "interactive")])
+    placed = d.dispatch(np.array([1.0]), {"a": [rep]}, now=0.0)
+    assert placed == 2                  # queue_limit=2
+    assert set(d.inflight) == {2, 1}    # interactive, then high-prio batch
+    assert [r.rid for r in d.backlog] == [0]
+
+
+def test_hedging_skipped_past_deadline(qwen, engines):
+    """Same dispatcher, hedge_fraction=1: an in-deadline request hedges
+    onto the second tier; one past its deadline does not."""
+    cfg, _, _ = qwen
+    eng = engines[(False, False)]
+    a = Replica("a/r1", "a", eng, queue_limit=4)
+    b = Replica("b/r1", "b", eng, queue_limit=4)
+    a.activate(0.0)
+    b.activate(0.0)
+    d = Dispatcher(["a", "b"], hedge_fraction=1.0)
+    rng = np.random.default_rng(9)
+    fresh = Request(rid=0, arrival_t=0.0, max_new=4,
+                    prompt=rng.integers(0, cfg.vocab_size, (1, 8)),
+                    deadline_s=100.0)
+    expired = Request(rid=1, arrival_t=0.0, max_new=4,
+                      prompt=rng.integers(0, cfg.vocab_size, (1, 8)),
+                      deadline_s=1.0)
+    d.submit([fresh, expired])
+    d.dispatch(np.array([1.0, 0.0]), {"a": [a], "b": [b]}, now=50.0)
+    assert d.inflight[0][2] is not None          # hedged
+    assert d.inflight[1][2] is None              # past deadline: no hedge
+    # drain so the module-shared engine session ends clean
+    d.cancel(0)
+    d.cancel(1)
+
+
+def test_slo_defaults_preserve_fifo_exactness(qwen, engines):
+    """All-default metadata must collapse to the legacy FIFO admission —
+    pinned by comparing against the pre-streaming reference outputs."""
+    cfg, _, _ = qwen
+    eng = engines[(True, False)]
+    reqs = _requests(cfg, seed=10)
+    res = eng.serve_queue(reqs)
+    sess = QueueSession(eng)
+    for rid, (p, n) in enumerate(reqs):
+        sess.submit(rid, p, n)
+    first = sess.pump()
+    assert first.admitted == [0, 1, 2]           # FIFO across 3 slots
+    while not sess.idle:
+        sess.pump()
+    for rid in res:
+        np.testing.assert_array_equal(sess.results[rid], res[rid])
+
+
+# ---------------------------------------------------------------------------
+# satellite: cancel-mid-stream releases pages/slots (ragged cancel points)
+# ---------------------------------------------------------------------------
+
+
+def _cancel_drill(cfg, eng, ref, *, cancel_pumps, victim, seed):
+    """Run the paged streaming session, cancel ``victim`` after
+    ``cancel_pumps`` pumps, drain, and assert: pages fully released,
+    survivors token-exact, victim gone."""
+    reqs = _requests(cfg, seed=seed, shapes=((12, 8), (5, 10), (17, 6), (8, 9)))
+    client = EngineClient(eng)
+    handles = [client.submit(InferenceRequest(prompt=p, max_new=n))
+               for p, n in reqs]
+    for _ in range(cancel_pumps):
+        if client.idle:
+            break
+        client.tick()
+    h = handles[victim]
+    was_done = h.done
+    cancelled = h.cancel()
+    assert cancelled == (not was_done)   # cancel hits iff still in flight
+    client.drain()
+    assert client.session.allocator.live_pages == 0
+    assert np.all(client.session.slots.request_id < 0)
+    for i, hh in enumerate(handles):
+        if i == victim and cancelled:
+            assert hh.status is RequestStatus.CANCELLED
+            assert hh.rid not in client.session.results
+            # the partial stream is a prefix of the uncancelled output
+            got = np.asarray(hh.take(), np.int64)
+            np.testing.assert_array_equal(got, ref[i][:got.size])
+        else:
+            assert hh.status is RequestStatus.COMPLETED
+            np.testing.assert_array_equal(hh.result(), ref[i])
+
+
+def test_cancel_mid_stream_releases_pages_property(qwen, engines):
+    """Hypothesis property over ragged cancel points: any (pump count,
+    victim) combination leaves zero live pages after drain and survivors
+    token-exact.  Falls back to a fixed adversarial sweep without
+    hypothesis (queued / mid-stream / near-completion cancels)."""
+    cfg, _, _ = qwen
+    eng = engines[(True, True)]
+    refs = {}
+
+    def check(cancel_pumps, victim, seed):
+        if seed not in refs:           # uncancelled reference, once per seed
+            reqs = _requests(cfg, seed=seed,
+                             shapes=((12, 8), (5, 10), (17, 6), (8, 9)))
+            refs[seed] = eng.serve_queue(reqs)
+        _cancel_drill(cfg, eng, refs[seed], cancel_pumps=cancel_pumps,
+                      victim=victim, seed=seed)
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        for case in [(0, 0, 0), (0, 3, 0), (1, 1, 0), (2, 2, 1), (3, 0, 1)]:
+            check(*case)
+        return
+
+    settings(max_examples=10, deadline=None)(given(
+        cancel_pumps=st.integers(0, 3),
+        victim=st.integers(0, 3),
+        seed=st.integers(0, 1),
+    )(check))()
+
+
+# ---------------------------------------------------------------------------
+# satellite: mid-decode kill drill — handles resume streaming after requeue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fleet_kill_drill_handles_resume_streaming(qwen):
+    """THE streaming drill: the cheap tier dies mid-decode; every handle
+    keeps streaming after its request requeues — the live-observed token
+    stream (pre-kill deltas + post-requeue deltas, position-reconciled)
+    is byte-identical to an undisturbed bare-engine run, with no token
+    replayed to the client."""
+    cfg, model, params = qwen
+    rt = build_demo_fleet(n_requests=40, rate=2.0, outage=(6.0, 16.0))
+    client = FleetClient(rt)
+    handles = client.adopt_workload()
+    observed = {h.rid: [] for h in handles}
+    while not client.idle and rt.ticks < rt.cfg.max_ticks:
+        client.tick()
+        for h in handles:
+            observed[h.rid].extend(h.take())     # live stream, across kills
+
+    report = rt.report()
+    assert report.requests.total_retries() >= 1  # the kill interrupted work
+    assert not report.requests.dropped
+    assert all(h.status is RequestStatus.COMPLETED for h in handles)
+
+    bare = ServingEngine(model, params, EngineConfig(
+        max_len=64, decode_batch=4, temperature=0.0, decode_chunk=4))
+    requests = sorted(client.handles.values(), key=lambda h: h.rid)
+    ref = bare.serve_queue([(h.request.prompt_2d(), h.request.max_new)
+                            for h in requests])
+    for i, h in enumerate(requests):
+        np.testing.assert_array_equal(
+            np.asarray(observed[h.rid], np.int64), ref[i])
+        assert h.record.tokens == ref[i].size
+        # TTFT survives the retry: stamped at the FIRST token the client
+        # ever saw, never reset by the requeue
+        assert h.record.first_token_t <= h.record.complete_t
+
+
+@pytest.mark.slow
+def test_fleet_client_open_loop_submit_token_exact(qwen):
+    """The open-loop facade: requests submitted live (no pre-built trace)
+    complete token-exact with a bare engine over the same prompts."""
+    cfg, model, params = qwen
+    tier = TierSpec(name="flat", arch="qwen3-0.6b", max_len=64,
+                    decode_batch=4, decode_chunk=4, queue_limit=8,
+                    base_capacity=1, initial_replicas=1,
+                    provision_delay_s=1.0)
+    rt = FleetRuntime([tier], workload=[], config=FleetConfig(seed=0))
+    rt._engines["flat"] = ServingEngine(model, params, EngineConfig(
+        max_len=64, decode_batch=4, temperature=0.0, decode_chunk=4))
+    client = FleetClient(rt)
+    rng = np.random.default_rng(11)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 8)), 4 + i) for i in range(6)]
+    handles = [client.submit(InferenceRequest(prompt=p, max_new=n,
+                                              slo_class="interactive"))
+               for p, n in reqs]
+    client.drain()
+    ref = rt._engines["flat"].serve_queue(reqs)
+    for i, h in enumerate(handles):
+        assert h.status is RequestStatus.COMPLETED
+        np.testing.assert_array_equal(h.result(), ref[i])
+        assert h.record.ttft_s > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: CI tooling — the committed API-surface snapshot is current
+# ---------------------------------------------------------------------------
+
+
+def test_api_surface_snapshot_current():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO_ROOT, "tools", "api_surface.py"),
+         "--check"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, (
+        f"API surface drift — regenerate docs/api_surface.txt:\n{proc.stdout}")

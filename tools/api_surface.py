@@ -1,0 +1,154 @@
+#!/usr/bin/env python
+"""Public-API surface snapshot + drift gate for the serving/fleet layers.
+
+The streaming request lifecycle (ISSUE 5) made ``repro.serving`` /
+``repro.fleet`` the repo's public client surface; this tool pins it.  It
+walks the modules, renders every public symbol (functions with their
+signatures, classes with their public methods/properties, dataclasses
+with their fields) into a stable text form, and compares against the
+committed snapshot:
+
+    python tools/api_surface.py --check            # CI gate: fail on drift
+    python tools/api_surface.py --update           # refresh docs/api_surface.txt
+    python tools/api_surface.py                    # print the live surface
+
+Intentional API changes are reviewed by regenerating the snapshot and
+committing the diff; unreviewed drift fails CI.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import difflib
+import importlib
+import inspect
+import os
+import sys
+
+MODULES = [
+    "repro.serving",
+    "repro.serving.api",
+    "repro.serving.engine",
+    "repro.serving.paged_kv",
+    "repro.fleet",
+    "repro.fleet.client",
+    "repro.fleet.dispatcher",
+    "repro.fleet.replica",
+    "repro.fleet.runtime",
+    "repro.fleet.telemetry",
+    "repro.fleet.workload",
+]
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), "..", "docs",
+                        "api_surface.txt")
+
+
+def _sig(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"
+
+
+def _class_lines(prefix: str, cls) -> list:
+    lines = []
+    if dataclasses.is_dataclass(cls):
+        for f in dataclasses.fields(cls):
+            if f.name.startswith("_"):
+                continue
+            tp = f.type if isinstance(f.type, str) else getattr(
+                f.type, "__name__", str(f.type))
+            lines.append(f"{prefix}.{f.name}: {tp}")
+    for name, member in sorted(vars(cls).items()):
+        if name.startswith("_") and name != "__init__":
+            continue
+        if isinstance(member, property):
+            lines.append(f"{prefix}.{name} [property]")
+        elif isinstance(member, (staticmethod, classmethod)):
+            lines.append(f"{prefix}.{name}{_sig(member.__func__)}")
+        elif inspect.isfunction(member):
+            if name == "__init__" and dataclasses.is_dataclass(cls):
+                continue               # synthesized; fields above cover it
+            lines.append(f"{prefix}.{name}{_sig(member)}")
+    return lines
+
+
+def render_surface() -> str:
+    lines = [
+        "# Public API surface of repro.serving / repro.fleet.",
+        "# Regenerate with: python tools/api_surface.py --update",
+        "# CI fails when this file and the live surface disagree.",
+    ]
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        lines.append(f"\n[{modname}]")
+        for name in sorted(vars(mod)):
+            if name.startswith("_"):
+                continue
+            obj = vars(mod)[name]
+            if inspect.ismodule(obj):
+                continue
+            is_pkg_reexport = modname.count(".") == 1   # repro.serving / repro.fleet
+            if not is_pkg_reexport:
+                # in leaf modules only symbols DEFINED there are surface
+                if getattr(obj, "__module__", modname) != modname:
+                    continue
+            prefix = f"{modname}.{name}"
+            if inspect.isclass(obj):
+                if is_pkg_reexport:
+                    lines.append(f"{prefix} -> {obj.__module__}.{obj.__name__}")
+                else:
+                    lines.append(prefix)
+                    lines.extend(_class_lines(prefix, obj))
+            elif inspect.isfunction(obj):
+                if is_pkg_reexport:
+                    lines.append(f"{prefix} -> {obj.__module__}.{obj.__name__}")
+                else:
+                    lines.append(f"{prefix}{_sig(obj)}")
+            else:
+                lines.append(f"{prefix} = {obj!r}")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--check", action="store_true",
+                      help="fail (exit 1) when the snapshot is stale")
+    mode.add_argument("--update", action="store_true",
+                      help="rewrite docs/api_surface.txt from the live code")
+    args = ap.parse_args(argv)
+
+    live = render_surface()
+    if args.update:
+        with open(SNAPSHOT, "w") as f:
+            f.write(live)
+        print(f"api_surface: wrote {os.path.relpath(SNAPSHOT)}")
+        return 0
+    if args.check:
+        try:
+            with open(SNAPSHOT) as f:
+                committed = f.read()
+        except FileNotFoundError:
+            print(f"api_surface: missing snapshot {SNAPSHOT}; "
+                  "run tools/api_surface.py --update and commit it")
+            return 1
+        if committed == live:
+            print("api_surface: OK (surface matches committed snapshot)")
+            return 0
+        diff = difflib.unified_diff(
+            committed.splitlines(keepends=True), live.splitlines(keepends=True),
+            fromfile="docs/api_surface.txt (committed)",
+            tofile="live surface",
+        )
+        sys.stdout.writelines(diff)
+        print("\napi_surface: DRIFT — the public surface of repro.serving / "
+              "repro.fleet changed.  If intentional, refresh the snapshot:\n"
+              "    PYTHONPATH=src python tools/api_surface.py --update")
+        return 1
+    print(live, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

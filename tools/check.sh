@@ -13,6 +13,9 @@ else
   echo "== ruff lint: skipped (ruff not installed locally; CI enforces it) =="
 fi
 
+echo "== API-surface drift gate (repro.serving / repro.fleet) =="
+python tools/api_surface.py --check
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
