@@ -17,7 +17,13 @@ Four rows:
     STREAMING client API (``FleetClient`` handles): p99 of the TRUE
     first-token TTFT (stamped when the first token reached the handle)
     vs the completion-derived p99 a legacy ``on_complete`` client
-    observes (acceptance: stream p99 <= completion-derived p99).
+    observes (acceptance: stream p99 <= completion-derived p99);
+  * ``fleet/recovery_drill`` — the durable-KV drill: mid-decode kills plus
+    a preemption notice over long prompts, with the fleet KV store on vs
+    off.  The store arm must recover with ZERO recomputed prefill tokens
+    and byte-identical outputs; goodput (delivered tokens per second of
+    pump+flush wall) must be at least the re-prefill arm's (3-rep
+    medians — observed ~1.6x on the reference box).
 """
 from __future__ import annotations
 
@@ -181,5 +187,75 @@ def run() -> List[Row]:
         f"p99_first_token_s={stream_p99:.2f},"
         f"p99_completion_derived_s={compl_p99:.2f},"
         f"ttft_win={compl_p99 / max(stream_p99, 1e-9):.2f}x",
+    ))
+
+    # -- durable KV: zero-recompute recovery vs re-prefill -----------------
+    # the default build_recovery_fleet: 512-token prompts, two mid-decode
+    # kills plus a preemption notice.  Goodput here is DELIVERED tokens per
+    # wall-second of pump + KV-flush work: the store arm pays flush/restore
+    # overhead but skips every re-prefill, the control arm re-prefills all
+    # interrupted work.  Correctness halves of the acceptance bar (zero
+    # recomputed prefill tokens, byte-identical streams) are asserted
+    # outright; the goodput half is wall-clock, so 3-rep medians and a
+    # parity floor (observed ~1.6x on the reference box)
+    from statistics import median
+
+    from repro.fleet.runtime import build_recovery_fleet
+
+    engines = {}
+    goodputs = {True: [], False: []}
+    walls = {True: [], False: []}
+    outs_ab = {}
+    recovery = {}
+    for rep_i in range(3):
+        for store in (True, False):
+            rt = build_recovery_fleet(kv_store=store, seed=2)
+            rt._engines.update(engines)        # one compile, six runs
+            n_req = len(rt.workload)
+            report = rt.run()
+            engines.update(rt._engines)
+            assert len(report.requests.records) == n_req, \
+                "recovery bench lost requests"
+            assert not report.requests.dropped, "recovery bench dropped requests"
+            s = report.summary()
+            tel = report.telemetry["spot"]
+            delivered = sum(r.tokens for r in report.requests.records)
+            wall = report.pump_wall_s + tel["kv_flush_s"]
+            goodputs[store].append(delivered / max(wall, 1e-9))
+            walls[store].append(wall)
+            if store:
+                assert s["recomputed_prefill_tokens"] == 0, (
+                    f"store arm recomputed {s['recomputed_prefill_tokens']} "
+                    "prefill tokens (expected zero-recompute recovery)")
+                assert s["recovered_tokens"] > 0, "store arm recovered nothing"
+                assert report.kv_store["puts"] > 0, "no frontier checkpoints"
+                assert report.kv_store["hits"] > 0, "no store hits on requeue"
+                assert tel["kv_flush_tokens"] > 0, "no KV flushed"
+                recovery = {"recovered": int(s["recovered_tokens"]),
+                            "flush_s": tel["kv_flush_s"],
+                            "occupancy": report.kv_store["occupancy"]}
+            else:
+                assert s["recovered_tokens"] == 0
+                assert s["recomputed_prefill_tokens"] > 0, (
+                    "control arm recomputed nothing — the kills missed")
+            if rep_i == 0:
+                outs_ab[store] = report.outputs
+    for rid, toks in outs_ab[True].items():    # A/B must be token-exact
+        assert (toks == outs_ab[False][rid]).all(), \
+            f"store != re-prefill on rid {rid}"
+    good_store = median(goodputs[True])
+    good_nostore = median(goodputs[False])
+    assert good_store >= good_nostore, (
+        f"store goodput {good_store:.0f} tok/s below re-prefill baseline "
+        f"{good_nostore:.0f} tok/s")
+    rows.append((
+        "fleet/recovery_drill",
+        median(walls[True]) / n_req * 1e6,     # us of pump+flush per request
+        f"goodput_store={good_store:.0f},"
+        f"goodput_reprefill={good_nostore:.0f},"
+        f"ratio={good_store / max(good_nostore, 1e-9):.2f}x,"
+        f"recovered_tokens={recovery['recovered']},"
+        f"recomputed_prefill_tokens=0,"
+        f"kv_flush_s={recovery['flush_s']:.3f}",
     ))
     return rows

@@ -49,6 +49,11 @@ class HeartbeatMonitor:
         now = time.monotonic() if t is None else t
         return sorted(w for w, lt in self._last.items() if now - lt <= self.deadline_s)
 
+    def forget(self, worker: int) -> None:
+        """Stop tracking a worker that left on purpose (drain/terminate) —
+        otherwise its last beat ages into a false death."""
+        self._last.pop(worker, None)
+
 
 # ---------------------------------------------------------------------------
 # elastic re-meshing

@@ -18,14 +18,17 @@ retried on replica death, and accounted individually (``RequestLog``).
 """
 from repro.fleet.client import FleetClient  # noqa: F401
 from repro.fleet.dispatcher import Dispatcher  # noqa: F401
+from repro.fleet.kv_store import KVStore, KVStoreStats  # noqa: F401
 from repro.fleet.replica import Replica, ReplicaState  # noqa: F401
 from repro.fleet.runtime import (  # noqa: F401
     FailureEvent,
     FleetConfig,
     FleetReport,
     FleetRuntime,
+    PreemptionEvent,
     TierSpec,
     build_demo_fleet,
+    build_recovery_fleet,
 )
 from repro.fleet.telemetry import Ewma, TelemetryBus  # noqa: F401
 from repro.fleet.workload import (  # noqa: F401

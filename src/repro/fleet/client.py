@@ -149,10 +149,10 @@ class FleetClient:
                            replica=rec.replica, retries=rec.retries)
         self._forget(rid)
 
-    def on_drop(self, rid: int, t: float) -> None:
+    def on_drop(self, rid: int, t: float, reason: str = "") -> None:
         handle = self.handles.get(rid)
         if handle is not None:
-            handle._fail(t)
+            handle._fail(t, reason)
         self._forget(rid)
 
     def _forget(self, rid: int) -> None:

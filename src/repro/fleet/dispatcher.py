@@ -59,6 +59,7 @@ class Dispatcher:
         # rid -> (request, primary replica, optional hedge replica)
         self.inflight: Dict[int, Tuple[Request, Replica, Optional[Replica]]] = {}
         self.dropped: List[Request] = []
+        self.drop_reasons: Dict[int, str] = {}   # rid -> why it was dropped
         self.dispatched_per_tier: Dict[str, int] = {t: 0 for t in tiers}
         self.affinity_placements = 0      # requests routed by cached prefix
         self._deficit = np.zeros(len(tiers), dtype=np.float64)
@@ -207,6 +208,10 @@ class Dispatcher:
                         retried = req.retried()
                         if retried.retries > self.max_retries:
                             self.dropped.append(retried)
+                            self.drop_reasons[req.rid] = (
+                                "unfittable on any live replica "
+                                f"(prompt_len={req.prompt_len}, "
+                                f"max_new={req.max_new})")
                         else:
                             self.backlog.append(retried)
                         continue
@@ -298,6 +303,9 @@ class Dispatcher:
             retried = req.retried()
             if retried.retries > self.max_retries:
                 self.dropped.append(retried)
+                self.drop_reasons[rid] = (
+                    f"max retries exceeded: {retried.retries} replica "
+                    f"failures (max_retries={self.max_retries})")
                 dropped.append(retried)
             else:
                 requeued.append(retried)

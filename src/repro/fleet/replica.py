@@ -46,6 +46,15 @@ class Replica:
         self.session: Optional[QueueSession] = None
         self.born_t: float = 0.0
         self.pumps = 0
+        # preemption-with-notice: absolute deadline by which this replica's
+        # node disappears (None = no notice pending)
+        self.preempt_deadline: Optional[float] = None
+        # test hook: a wedged replica looks READY but its pump does nothing
+        # and never heartbeats — the model of a hung process that only the
+        # missed-pump detector can catch
+        self.wedged = False
+        self._hb = None               # HeartbeatMonitor (runtime-owned)
+        self._hb_id: Optional[int] = None
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Replica({self.name}, {self.tier}, {self.state.value}, load={self.load})"
@@ -72,12 +81,30 @@ class Replica:
         assert self.state in (ReplicaState.READY, ReplicaState.DRAINING), self.state
         self.state = ReplicaState.DRAINING
 
+    def preempt(self, deadline_t: float) -> None:
+        """Spot-reclaim NOTICE: the node disappears at ``deadline_t``.  The
+        replica drains (no new admissions) and the runtime flushes its KV
+        frontiers to the fleet store every pump until the deadline, then
+        crash-kills whatever is left."""
+        self.preempt_deadline = deadline_t
+        self.drain()
+
+    @property
+    def preempting(self) -> bool:
+        return self.preempt_deadline is not None and self.live
+
+    def wedge(self) -> None:
+        """Test hook: hang the replica (state stays READY, pumps become
+        no-ops, heartbeats stop).  Only missed-pump detection can see it."""
+        self.wedged = True
+
     def fail(self) -> List[int]:
         """Kill mid-decode (spot reclaim / crash): the session dies with the
         replica; every incomplete rid is returned for requeueing."""
         rids = self.session.inflight_rids() if self.session is not None else []
         self.state = ReplicaState.FAILED
         self.session = None
+        self.preempt_deadline = None
         return rids
 
     # -- traffic ------------------------------------------------------------
@@ -127,22 +154,50 @@ class Replica:
             return False
         self.session.submit(req.rid, req.prompt, req.max_new,
                             slo_class=req.slo_class, priority=req.priority,
-                            deadline_s=req.deadline_s)
+                            deadline_s=req.deadline_s,
+                            recompute=req.prefilled_once,
+                            frontier=req.frontier)
         return True
 
-    def pump(self) -> Optional[PumpReport]:
+    # -- durable KV / liveness ----------------------------------------------
+    def attach_heartbeat(self, monitor, hb_id: int) -> None:
+        """Register with the runtime's missed-pump detector; every live
+        ``pump`` call beats (idle included — an idle replica responded, it
+        just had no work)."""
+        self._hb = monitor
+        self._hb_id = hb_id
+
+    def checkpoint_frontiers(self):
+        """Every decoding request's ``KVFrontier`` (the flush unit the
+        runtime pushes into the fleet KV store)."""
+        if self.session is None or not self.session.paged:
+            return []
+        return self.session.extract_frontiers()
+
+    def pump(self, now: Optional[float] = None) -> Optional[PumpReport]:
         """One admission+chunk cycle; DRAINING replicas that empty out
         transition to TERMINATED and return their final report."""
         if not self.live or self.session is None:
             return None
+        if self.wedged:               # hung: no beat, no work, looks READY
+            return None
+        if self._hb is not None:
+            self._hb.beat(self._hb_id, now)
         if self.session.idle:
             if self.state == ReplicaState.DRAINING:
-                self.state = ReplicaState.TERMINATED
-                self.session = None
+                self._terminate()
             return None
         report = self.session.pump()
         self.pumps += 1
         if self.state == ReplicaState.DRAINING and self.session.idle:
-            self.state = ReplicaState.TERMINATED
-            self.session = None
+            self._terminate()
         return report
+
+    def _terminate(self) -> None:
+        """Clean exit after a drain: release the session and stop the
+        heartbeat record (a terminated replica's last beat must not age
+        into a false death)."""
+        self.state = ReplicaState.TERMINATED
+        self.session = None
+        if self._hb is not None and self._hb_id is not None:
+            self._hb.forget(self._hb_id)

@@ -42,7 +42,9 @@ from repro.core.capacity import CapacityEvent, CapacityPool, synthetic_outage
 from repro.core.controller import ControllerConfig, ModeController
 from repro.core.deployment import DUProfile
 from repro.core.metrics import MetricsLog, RequestLog, RequestRecord, TickRecord
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.fleet.dispatcher import Dispatcher
+from repro.fleet.kv_store import KVStore
 from repro.fleet.replica import Replica, ReplicaState
 from repro.fleet.telemetry import Ewma, TelemetryBus
 from repro.fleet.workload import Request
@@ -102,6 +104,21 @@ class FailureEvent:
 
 
 @dataclass
+class PreemptionEvent:
+    """Spot-reclaim NOTICE: at time ``t``, ``count`` ready replicas of
+    ``tier`` get ``deadline_s`` of warning before their node disappears.
+    Unlike a ``FailureEvent`` crash, the victim drains with the deadline and
+    the runtime flushes its in-flight KV frontiers to the fleet store every
+    pump — whatever has not finished by the deadline is crash-killed, but
+    its decode state survives in the store."""
+
+    t: float
+    tier: str
+    deadline_s: float = 2.0
+    count: int = 1
+
+
+@dataclass
 class FleetConfig:
     tick_s: float = 1.0
     max_ticks: int = 5000
@@ -112,6 +129,18 @@ class FleetConfig:
     max_retries: int = 16
     warmup: bool = True               # pre-compile jits before the tick loop
     seed: int = 0
+    # -- durable KV (fleet-global frontier store) ---------------------------
+    kv_store: bool = False            # checkpoint decode frontiers fleet-wide
+    kv_store_tokens: int = 1 << 16    # store capacity (tokens of frontier KV)
+    kv_checkpoint_interval: int = 1   # periodic flush every N ticks (>=1);
+                                      # preempting replicas flush EVERY pump
+    # -- liveness / crash-loop guard ----------------------------------------
+    heartbeat_deadline_s: float = 5.0 # missed-pump death (0 disables)
+    crash_backoff_base_s: float = 0.0 # >0 enables exponential re-provision
+                                      # backoff after repeated same-tier
+                                      # crashes (crash-loop guard)
+    crash_backoff_max_s: float = 30.0
+    crash_window_s: float = 20.0      # crashes older than this don't count
     controller: ControllerConfig = field(default_factory=ControllerConfig)
     autoscaler: AutoscalerConfig = field(
         default_factory=lambda: AutoscalerConfig(scale_down_stabilization_s=10.0)
@@ -129,6 +158,7 @@ class FleetReport:
     pump_wall_s: float                    # wall time inside replica pumps
     useful_tokens: int
     wasted_tokens: int
+    kv_store: Optional[Dict[str, float]] = None   # durable-KV store snapshot
 
     @property
     def goodput_tokens_per_s(self) -> float:
@@ -146,6 +176,11 @@ class FleetReport:
             wasted_tokens=float(self.wasted_tokens),
             mode_changes=float(max(0, len(self.mode_trace) - 1)),
             total_cost_usd=self.metrics.total_cost(),
+            recovered_tokens=float(sum(
+                v.get("recovered_tokens", 0.0) for v in self.telemetry.values())),
+            recomputed_prefill_tokens=float(sum(
+                v.get("recomputed_prefill_tokens", 0.0)
+                for v in self.telemetry.values())),
         )
         return s
 
@@ -156,11 +191,13 @@ class FleetRuntime:
     def __init__(self, tiers: Sequence[TierSpec], workload: Sequence[Request],
                  config: Optional[FleetConfig] = None,
                  failures: Sequence[FailureEvent] = (),
-                 pool_events: Optional[Dict[str, List[CapacityEvent]]] = None):
+                 pool_events: Optional[Dict[str, List[CapacityEvent]]] = None,
+                 preemptions: Sequence[PreemptionEvent] = ()):
         self.tiers = list(tiers)
         self.cfg = config or FleetConfig()
         self.workload = sorted(workload, key=lambda r: r.arrival_t)
         self.failures = sorted(failures, key=lambda f: f.t)
+        self.preemptions = sorted(preemptions, key=lambda p: p.t)
         names = [t.name for t in self.tiers]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tier names: {names}")
@@ -185,6 +222,16 @@ class FleetRuntime:
         self.telemetry = TelemetryBus(names, alpha=self.cfg.telemetry_alpha)
         self.dispatcher = Dispatcher(names, max_retries=self.cfg.max_retries,
                                      hedge_fraction=self.cfg.hedge_fraction)
+        # durable KV: the fleet-global frontier store (None = feature off)
+        self.kv_store: Optional[KVStore] = (
+            KVStore(capacity_tokens=self.cfg.kv_store_tokens)
+            if self.cfg.kv_store else None)
+        # missed-pump liveness: replicas beat on every live pump; a wedged
+        # process (READY on paper, no beats) is the failure mode only this
+        # detector catches — scripted FailureEvents stay as the test hook
+        self.heartbeats: Optional[HeartbeatMonitor] = (
+            HeartbeatMonitor(deadline_s=self.cfg.heartbeat_deadline_s)
+            if self.cfg.heartbeat_deadline_s > 0 else None)
 
         self._engines: Dict[str, ServingEngine] = {}
         self._model_cache: Dict[Tuple[str, int], Tuple[object, object]] = {}
@@ -199,6 +246,17 @@ class FleetRuntime:
         self.mode_trace: List[Tuple[float, int]] = []
         self._first_token_t: Dict[int, float] = {}
         self._demand = Ewma(self.cfg.demand_alpha)
+        # recovery pressure: requeued work the controller should see as
+        # demand (a store hit resumes cheaply => weighs 1/4 of a re-prefill)
+        self._recovery_rate = Ewma(self.cfg.demand_alpha)
+        self._requeue_pressure = 0.0
+        # crash-loop guard state
+        self._crash_t: Dict[str, List[float]] = {}
+        self._hold_until: Dict[str, float] = {}
+        self._backoff_rng = np.random.default_rng(self.cfg.seed + 7)
+        # (replica, rid) -> frontier length at last checkpoint (the
+        # incremental-flush cursor)
+        self._flushed_len: Dict[Tuple[str, int], int] = {}
         self._dispatcher_drops_seen = 0
         self._wl_idx = 0
         self._pump_wall_s = 0.0
@@ -215,8 +273,9 @@ class FleetRuntime:
     def attach_sink(self, sink) -> None:
         """Subscribe a streaming-event sink (duck-typed: ``on_tokens(rid,
         toks, replica, t)``, ``on_complete(rid, toks, record)``,
-        ``on_drop(rid, t)``).  ``FleetClient`` is the canonical sink; the
-        closed-trace ``run()`` path works identically with none attached."""
+        ``on_drop(rid, t, reason)``).  ``FleetClient`` is the canonical
+        sink; the closed-trace ``run()`` path works identically with none
+        attached."""
         if sink not in self._sinks:
             self._sinks.append(sink)
 
@@ -289,22 +348,90 @@ class FleetRuntime:
 
     def _new_replica(self, spec: TierSpec) -> Replica:
         self._replica_counter += 1
-        return Replica(f"{spec.name}/r{self._replica_counter}", spec.name,
-                       self._engine_for(spec), queue_limit=spec.queue_limit)
+        rep = Replica(f"{spec.name}/r{self._replica_counter}", spec.name,
+                      self._engine_for(spec), queue_limit=spec.queue_limit)
+        if self.heartbeats is not None:
+            rep.attach_heartbeat(self.heartbeats, self._replica_counter)
+        return rep
 
-    def _fail_replica(self, rep: Replica) -> None:
+    def _fail_replica(self, rep: Replica, *, crash: bool = False) -> None:
         rids = rep.fail()
+        if self.heartbeats is not None and rep._hb_id is not None:
+            self.heartbeats.forget(rep._hb_id)
         requeued, dropped = self.dispatcher.on_failure(rep, rids)
         for req in requeued:
             # tokens the dead replica emitted never reached the client:
-            # the retry's first token defines TTFT, not the lost one
+            # the retry's first token defines TTFT, not the lost one.
+            # A request that already emitted one has a COMPLETED prefill
+            # behind it — its retry's prefill (absent a store hit) is
+            # recomputation of paid-for work, and is billed as such.
+            if req.rid in self._first_token_t:
+                req.prefilled_once = True
             self._first_token_t.pop(req.rid, None)
+            if self.kv_store is not None:
+                fr = self.kv_store.get(req.token_key())
+                if fr is not None:
+                    req.frontier = fr
+            self._requeue_pressure += 0.25 if req.frontier is not None else 1.0
         for req in dropped:
             self.request_log.dropped.append(req.rid)
             self._first_token_t.pop(req.rid, None)
+            reason = self.dispatcher.drop_reasons.get(req.rid, "")
             for sink in self._sinks:
-                sink.on_drop(req.rid, self.t)
+                sink.on_drop(req.rid, self.t, reason)
         self.telemetry.forget_replica(rep.name)
+        for key in [k for k in self._flushed_len if k[0] == rep.name]:
+            del self._flushed_len[key]
+        if crash and self.cfg.crash_backoff_base_s > 0:
+            self._note_crash(rep.tier)
+
+    def _note_crash(self, tier: str) -> None:
+        """Crash-loop guard: repeated crashes of one tier inside the window
+        exponentially back off NEW provisions (with jitter, so tiers don't
+        re-provision in lockstep).  First crash in a window is free — one
+        spot reclaim is normal life, a streak is a sick tier/image."""
+        t = self.t
+        hist = self._crash_t.setdefault(tier, [])
+        hist.append(t)
+        hist[:] = [x for x in hist if t - x <= self.cfg.crash_window_s]
+        if len(hist) < 2:
+            return
+        backoff = min(self.cfg.crash_backoff_base_s * 2.0 ** (len(hist) - 2),
+                      self.cfg.crash_backoff_max_s)
+        backoff *= 1.0 + 0.5 * float(self._backoff_rng.random())
+        self._hold_until[tier] = max(self._hold_until.get(tier, 0.0),
+                                     t + backoff)
+        self.telemetry.record_backoff(tier)
+
+    def _flush_replica(self, tier: str, rep: Replica) -> None:
+        """Checkpoint decoding frontiers on ``rep`` into the fleet KV store
+        (the periodic durability flush, and the preemption drain).
+
+        Incremental: a frontier is re-extracted only when it crossed a page
+        boundary since its last checkpoint — extraction is a device->host
+        copy of the WHOLE frontier, so flushing every token would cost more
+        than the re-prefill it saves.  A preempting replica flushes
+        unconditionally (last chance), and every request's FIRST decode
+        checkpoint always lands, so a victim never re-prefills; at most a
+        partial page of cheap decode is replayed."""
+        if self.kv_store is None or rep.session is None or rep.wedged:
+            return
+        t0 = time.perf_counter()
+        accepted = 0
+        al = rep.session.allocator
+        ps = al.page_size if al is not None else 1
+        for rid, n in rep.session.decoding_lens().items():
+            key = (rep.name, rid)
+            last = self._flushed_len.get(key, -1)
+            if not rep.preempting and last >= 0 and n // ps <= last // ps:
+                continue
+            fr = rep.session.extract_frontier(rid)
+            if fr is None:
+                continue
+            self._flushed_len[key] = fr.tokens
+            if self.kv_store.put(fr):
+                accepted += fr.tokens
+        self.telemetry.record_flush(tier, time.perf_counter() - t0, accepted)
 
     # -- pool<->replica reconciliation ---------------------------------------
     def _reconcile(self, spec: TierSpec) -> None:
@@ -359,12 +486,25 @@ class FleetRuntime:
             self._wl_idx += 1
         arrived.extend(self._injected)
         self._injected = []
+        if self.kv_store is not None:
+            # fleet-global second tier behind the per-replica prefix caches:
+            # a fresh arrival whose exact prompt was checkpointed (an earlier
+            # victim, or a twin request) resumes from the stored frontier
+            for req in arrived:
+                if req.frontier is None:
+                    req.frontier = self.kv_store.get(req.token_key())
         self.dispatcher.submit(arrived)
         arrival_rate = len(arrived) / cfg.tick_s
         backlog_pressure = len(self.dispatcher.backlog) / (
             cfg.backlog_drain_ticks * cfg.tick_s
         )
         demand = self._demand.update(arrival_rate) + backlog_pressure
+        # recovery pressure: requeued work is demand the arrival EWMA never
+        # saw — fold it in so the controller buys capacity for retries too
+        recovery = self._recovery_rate.update(self._requeue_pressure / cfg.tick_s)
+        self._requeue_pressure = 0.0
+        if self.kv_store is not None:
+            demand += recovery
 
         # 2. failure injections (crashes: pool ceiling unchanged)
         while self.failures and self.failures[0].t <= t:
@@ -372,9 +512,48 @@ class FleetRuntime:
             victims = [r for r in self.replicas[ev.tier]
                        if r.state == ReplicaState.READY][-ev.count:]
             for rep in victims:
-                self._fail_replica(rep)
+                self._fail_replica(rep, crash=True)
                 pool = self.pools[ev.tier]
                 pool.ready = max(0, pool.ready - 1)
+
+        # 2b. preemption notices: victim drains with a deadline; its KV
+        # flushes to the store at notice and on every pump until the kill.
+        # pool.ready drops NOW so the autoscaler re-provisions proactively —
+        # the whole point of a notice.
+        while self.preemptions and self.preemptions[0].t <= t:
+            ev = self.preemptions.pop(0)
+            victims = [r for r in self.replicas[ev.tier]
+                       if r.state == ReplicaState.READY][-ev.count:]
+            for rep in victims:
+                rep.preempt(t + ev.deadline_s)
+                self._flush_replica(ev.tier, rep)
+                pool = self.pools[ev.tier]
+                pool.ready = max(0, pool.ready - 1)
+
+        # 2c. expired preemption deadlines: final flush, then the node is
+        # gone — whatever didn't finish draining dies like a crash (but its
+        # frontiers are in the store, so the retry resumes, not re-prefills)
+        for spec in self.tiers:
+            for rep in list(self.replicas[spec.name]):
+                if rep.preempting and t >= rep.preempt_deadline:
+                    self._flush_replica(spec.name, rep)
+                    self._fail_replica(rep)
+
+        # 2d. missed-pump deaths: a replica that stopped beating past the
+        # deadline is a hung process — kill and requeue like a crash
+        if self.heartbeats is not None:
+            dead = set(self.heartbeats.dead(t))
+            if dead:
+                for spec in self.tiers:
+                    for rep in list(self.replicas[spec.name]):
+                        if rep._hb_id in dead and rep.live:
+                            dead.discard(rep._hb_id)
+                            if rep.state == ReplicaState.READY:
+                                pool = self.pools[spec.name]
+                                pool.ready = max(0, pool.ready - 1)
+                            self._fail_replica(rep, crash=True)
+                for hb_id in dead:    # stale ids of already-gone replicas
+                    self.heartbeats.forget(hb_id)
 
         # 3. capacity dynamics + reconcile
         for spec in self.tiers:
@@ -418,8 +597,9 @@ class FleetRuntime:
             if req.rid not in self.request_log.dropped:
                 self.request_log.dropped.append(req.rid)
                 self._first_token_t.pop(req.rid, None)
+                reason = self.dispatcher.drop_reasons.get(req.rid, "")
                 for sink in self._sinks:
-                    sink.on_drop(req.rid, t)
+                    sink.on_drop(req.rid, t, reason)
 
         # 6. pump every live replica one admission+chunk cycle
         completions_per_tier = {s.name: 0 for s in self.tiers}
@@ -428,7 +608,15 @@ class FleetRuntime:
         occ_n = {s.name: 0 for s in self.tiers}
         for spec in self.tiers:
             for rep in list(self.replicas[spec.name]):
-                report = rep.pump()
+                report = rep.pump(now=t)
+                # periodic durability checkpoint (every pump while a
+                # preemption notice is live — the drain must win the race
+                # against the deadline)
+                if self.kv_store is not None and rep.session is not None and (
+                    rep.preempting
+                    or self.ticks % max(1, cfg.kv_checkpoint_interval) == 0
+                ):
+                    self._flush_replica(spec.name, rep)
                 if report is None:
                     continue
                 self._pump_wall_s += report.wall_s
@@ -455,7 +643,11 @@ class FleetRuntime:
             a = self.autoscalers[spec.name]
             a.target_metric_value = max(0.8 * float(measured[i]), 1e-6)
             want = a.desired(t, float(decision.weights[i]) * demand)
-            self.pools[spec.name].request(t, want)
+            pool = self.pools[spec.name]
+            if t < self._hold_until.get(spec.name, 0.0):
+                # crash-loop hold: keep what exists, provision nothing new
+                want = min(want, pool.ready + pool.inflight)
+            pool.request(t, want)
 
         # 8. metrics
         names = [s.name for s in self.tiers]
@@ -557,6 +749,24 @@ class FleetRuntime:
                 budgets = [spec.prefill_chunk,
                            spec.capacity_prefill_chunk or 4 * spec.prefill_chunk]
                 eng.warm_mixed_traces(budgets)
+            if eng.paged and self.kv_store is not None:
+                # precompile the frontier-restore scatter: injects are padded
+                # to pow-2 block buckets, so one trace per bucket covers
+                # every possible recovery — a mid-drill restore must cost
+                # decode time, not compile time
+                import jax
+                import jax.numpy as jnp
+
+                nb, top = 1, 1 << max(0, eng.max_blocks - 1).bit_length()
+                while nb <= top:
+                    kv = jax.tree.map(
+                        lambda a, k=nb: jnp.zeros(
+                            (a.shape[0], k) + a.shape[2:], a.dtype),
+                        sess.cache)
+                    sess.cache = eng._inject_pages(
+                        sess.cache, kv, jnp.zeros((nb,), jnp.int32))
+                    eng.extract_pages(sess.cache, [0] * nb)
+                    nb <<= 1
         self._warmed = True
 
     def _busy(self) -> bool:
@@ -578,6 +788,8 @@ class FleetRuntime:
             pump_wall_s=self._pump_wall_s,
             useful_tokens=self._useful_tokens,
             wasted_tokens=self._wasted_tokens,
+            kv_store=(self.kv_store.snapshot()
+                      if self.kv_store is not None else None),
         )
 
     def run(self) -> FleetReport:
@@ -727,6 +939,60 @@ def build_prefix_fleet(
                     page_size=page_size, num_pages=num_pages,
                     prefix_reuse=prefix_reuse)
     return FleetRuntime([tier], workload, FleetConfig(seed=seed))
+
+
+def build_recovery_fleet(
+    *,
+    arch: str = "qwen3-0.6b",
+    n_requests: int = 8,
+    prompt_len: int = 512,
+    max_new: Tuple[int, int] = (12, 24),
+    n_replicas: int = 2,
+    decode_batch: int = 3,
+    page_size: int = 16,
+    kv_store: bool = True,
+    kill_ts: Sequence[float] = (2.0, 4.0),
+    preempt_t: Optional[float] = 3.0,
+    preempt_deadline_s: float = 2.0,
+    seed: int = 0,
+) -> FleetRuntime:
+    """A single paged tier under a mid-decode crash AND a preemption notice
+    — the durable-KV drill.  Long prompts make re-prefill expensive, so the
+    store's zero-recompute recovery is measurable: ``kv_store=False`` runs
+    the identical fleet where every requeued request pays full re-prefill
+    (the control).  Greedy + shared params keep both arms token-exact."""
+    from repro.configs import get_config
+    from repro.fleet.workload import burst_of
+
+    vocab = get_config(arch).reduce().vocab_size
+    workload = burst_of(n_requests, vocab_size=vocab, prompt_len=prompt_len,
+                        max_new=max_new, seed=seed)
+    max_len = -(-(prompt_len + max_new[1]) // page_size) * page_size
+    # generous pool: restored frontiers land on fresh pages while the
+    # victim's prompt pages may still sit in the survivor's prefix cache
+    num_pages = 1 + 2 * decode_batch * (max_len // page_size)
+    tier = TierSpec(name="spot", arch=arch, cost_per_hour=1.0,
+                    nominal_t_max=2.0, max_len=max_len,
+                    decode_batch=decode_batch, decode_chunk=4,
+                    queue_limit=2 * decode_batch,
+                    # ceiling == replica count: no idle spares, so the
+                    # scripted events always hit a replica carrying work
+                    base_capacity=n_replicas,
+                    initial_replicas=n_replicas,
+                    provision_delay_s=2.0, paged_kv=True,
+                    page_size=page_size, num_pages=num_pages,
+                    prefill_chunk=64)
+    failures = [FailureEvent(t=kt, tier="spot") for kt in kill_ts]
+    preemptions = ([PreemptionEvent(t=preempt_t, tier="spot",
+                                    deadline_s=preempt_deadline_s)]
+                   if preempt_t is not None else [])
+    return FleetRuntime(
+        [tier], workload,
+        FleetConfig(seed=seed, kv_store=kv_store, kv_checkpoint_interval=1,
+                    max_retries=8),
+        failures=failures,
+        preemptions=preemptions,
+    )
 
 
 def main(argv=None) -> int:

@@ -100,6 +100,13 @@ class TelemetryBus:
         self.tier_cache_hit_rate: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_token_reuse: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_page_occupancy: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        # durable-KV recovery: cumulative totals (not EWMAs — the drills
+        # assert exact counts, "zero recomputed prefill tokens" especially)
+        self.tier_recovered: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_recomputed: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_flush_s: Dict[str, float] = {t: 0.0 for t in tiers}
+        self.tier_flush_tokens: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_backoffs: Dict[str, int] = {t: 0 for t in tiers}  # crash-loop holds
 
     # -- ingestion ----------------------------------------------------------
     def signals_for(self, replica_name: str) -> ReplicaSignals:
@@ -124,6 +131,9 @@ class TelemetryBus:
         win.prefix_misses += getattr(report, "prefix_misses", 0)
         win.reused_tokens += getattr(report, "reused_tokens", 0)
         win.prefilled_tokens += getattr(report, "prefilled_tokens", 0)
+        self.tier_recovered[tier] += getattr(report, "recovered_tokens", 0)
+        self.tier_recomputed[tier] += getattr(
+            report, "recomputed_prefill_tokens", 0)
         # unconditional: a drained pool must decay the EWMA back toward 0
         # (contiguous tiers just keep it pinned at 0)
         self.tier_page_occupancy[tier].update(getattr(report, "page_occupancy", 0.0))
@@ -148,6 +158,17 @@ class TelemetryBus:
         if not win:
             return 0.0
         return float(np.percentile(np.asarray(win), 99.0))
+
+    def record_flush(self, tier: str, wall_s: float, tokens: int) -> None:
+        """One KV-store flush (periodic checkpoint or preemption drain):
+        host wall time spent extracting + storing, and tokens ACCEPTED by
+        the store (stale checkpoints count 0)."""
+        self.tier_flush_s[tier] += float(wall_s)
+        self.tier_flush_tokens[tier] += int(tokens)
+
+    def record_backoff(self, tier: str) -> None:
+        """The crash-loop guard held this tier's re-provisioning back."""
+        self.tier_backoffs[tier] += 1
 
     def forget_replica(self, replica_name: str) -> None:
         self.replica.pop(replica_name, None)
@@ -204,6 +225,11 @@ class TelemetryBus:
                 "cache_hit_rate": self.tier_cache_hit_rate[tier].get(),
                 "token_reuse_rate": self.tier_token_reuse[tier].get(),
                 "page_occupancy": self.tier_page_occupancy[tier].get(),
+                "recovered_tokens": float(self.tier_recovered[tier]),
+                "recomputed_prefill_tokens": float(self.tier_recomputed[tier]),
+                "kv_flush_s": self.tier_flush_s[tier],
+                "kv_flush_tokens": float(self.tier_flush_tokens[tier]),
+                "crash_backoffs": float(self.tier_backoffs[tier]),
             }
             for tier in self.tiers
         }

@@ -50,6 +50,12 @@ class Request:
     # lazy int-tuple form of the prompt (the prefix-cache key shape);
     # carried through retried() copies so a backlogged request boxes once
     _token_key: Optional[tuple] = field(default=None, repr=False, compare=False)
+    # durable-KV recovery: a stored KVFrontier attached by the runtime's
+    # requeue/arrival path (the replica resumes decode from it), and whether
+    # this request already completed a prefill on a replica that later died
+    # (its retry prefill then counts as RECOMPUTED work in telemetry)
+    frontier: Optional[object] = field(default=None, repr=False, compare=False)
+    prefilled_once: bool = field(default=False, repr=False, compare=False)
 
     @property
     def prompt_len(self) -> int:

@@ -17,6 +17,7 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.paged_kv import (  # noqa: F401
     TRASH_PAGE,
     BlockAllocator,
+    KVFrontier,
     PrefixStats,
     PromptEntry,
 )

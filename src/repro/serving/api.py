@@ -108,6 +108,7 @@ class RequestHandle:
         self.tier = ""
         self.replica = ""
         self.retries = 0
+        self.failure_reason: Optional[str] = None   # set when status FAILED
         self._client = client
         self._streamed: List[int] = []
         self._cursor = 0              # tokens already yielded by tokens()
@@ -155,7 +156,8 @@ class RequestHandle:
         while not self.status.terminal:
             self._client._drive()
         if self.status is RequestStatus.FAILED:
-            raise RuntimeError(f"request {self.rid} was dropped")
+            why = f": {self.failure_reason}" if self.failure_reason else ""
+            raise RuntimeError(f"request {self.rid} was dropped{why}")
         return np.asarray(self._streamed, np.int64)
 
     def cancel(self) -> bool:
@@ -201,10 +203,11 @@ class RequestHandle:
             self.complete_t = t
             self.status = RequestStatus.CANCELLED
 
-    def _fail(self, t: float) -> None:
+    def _fail(self, t: float, reason: str = "") -> None:
         if not self.status.terminal:
             self.complete_t = t
             self.status = RequestStatus.FAILED
+            self.failure_reason = reason or None
 
 
 class EngineClient:

@@ -83,7 +83,7 @@ import numpy as np
 from jax import lax
 
 from repro.models.model import Model
-from repro.serving.paged_kv import TRASH_PAGE, BlockAllocator
+from repro.serving.paged_kv import TRASH_PAGE, BlockAllocator, KVFrontier
 
 
 @dataclass
@@ -134,6 +134,9 @@ class EngineTelemetry:
     prefix_misses: int = 0
     reused_tokens: int = 0           # prompt tokens served from cached pages
     prefilled_tokens: int = 0        # prompt tokens run through the model
+    # durable-KV recovery (zero when no frontiers are restored)
+    recovered_tokens: int = 0        # KV tokens resumed from injected frontiers
+    recomputed_prefill_tokens: int = 0  # retry prefill re-run through the model
 
     @property
     def tokens_per_s(self) -> float:
@@ -201,6 +204,7 @@ class ServingEngine:
         self._prefill_paged = jax.jit(model.prefill_paged, donate_argnums=(2,))
         self._place_pages = jax.jit(self._place_pages_fn, donate_argnums=(0,))
         self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
+        self._inject_pages = jax.jit(self._inject_pages_fn, donate_argnums=(0,))
 
     # -- single-shot steps ----------------------------------------------------
     def prefill(self, batch: Dict[str, Any]):
@@ -454,6 +458,29 @@ class ServingEngine:
         every layer leaf (used before a slot writes into a shared page)."""
         return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
 
+    def _inject_pages_fn(self, pool, kv, pages):
+        """Scatter host frontier pages back into the pool: the inverse of
+        ``extract_pages``.  ``kv`` leaves are (L, nb, ps, H, D); ``pages``
+        is the (nb,) destination page list (traces key on nb)."""
+        return jax.tree.map(
+            lambda buf, c: buf.at[:, pages].set(c.astype(buf.dtype)), pool, kv
+        )
+
+    def extract_pages(self, pool, pages: Sequence[int]):
+        """Host snapshot of ``pages`` from the page pool: one gather per
+        leaf, leaves shaped (L, nb, ps, H, D) — the ``KVFrontier`` payload.
+        Read-only; the pool is untouched.  The gather is padded to a pow-2
+        page count (the op compiles per index length) and sliced back on
+        the host, mirroring ``_inject_pages_fn``'s bucketing."""
+        idx = np.asarray(pages, np.int32)
+        nb = int(idx.size)
+        nb_pad = 1 << max(0, nb - 1).bit_length()
+        if nb_pad > nb:
+            idx = np.concatenate(
+                [idx, np.full(nb_pad - nb, TRASH_PAGE, np.int32)])
+        jidx = jnp.asarray(idx)
+        return jax.tree.map(lambda a: np.asarray(a[:, jidx])[:, :nb], pool)
+
     def _place_slot(self, cache, pcache, slot):
         """Write a B=1 prefill cache into slot ``slot`` of the decode buffer.
 
@@ -537,6 +564,10 @@ class PumpReport:
     prefilled_tokens: int = 0         # prompt tokens run through the model
     page_occupancy: float = 0.0       # live fraction of the page pool
     cached_pages: int = 0             # reusable (refcount-0) pages held
+    # durable-KV recovery activity this pump (zero when no frontiers move)
+    recovered_tokens: int = 0         # KV tokens resumed from injected frontiers
+    recomputed_prefill_tokens: int = 0  # retry prompt tokens re-run through
+                                      # the model (zero on a store hit)
 
 
 class QueueSession:
@@ -598,15 +629,40 @@ class QueueSession:
         # scans add their step count), so the attention-window bucket is
         # computed without a device sync
         self._lens_host = np.zeros((n_slots,), np.int64)
+        # -- durable-KV recovery state ---------------------------------------
+        # rid -> validated KVFrontier awaiting a slot (admission injects it
+        # instead of prefilling); rid -> prompt tuple for frontier extraction
+        self._frontiers: Dict[int, KVFrontier] = {}
+        self._prompt_of: Dict[int, Tuple[int, ...]] = {}
+        # rids whose retry prefill counts as RECOMPUTED work (the request
+        # completed its first prefill on a replica that later died)
+        self._recompute: set = set()
+        # restored emissions to replay through the next report.tokens (the
+        # streaming client reconciles by position, so a restored request
+        # "replays" from 0 and the client forwards only the unseen suffix)
+        self._restored: List[Tuple[int, List[int]]] = []
+        self._pending_recovered = 0
+        self._pending_recomputed = 0
 
     # -- request intake -------------------------------------------------------
     def submit(self, rid: int, inp: np.ndarray, max_new: int, *,
                slo_class: str = "interactive", priority: int = 0,
-               deadline_s: Optional[float] = None) -> None:
+               deadline_s: Optional[float] = None,
+               recompute: bool = False,
+               frontier: Optional[KVFrontier] = None) -> None:
         """Queue a request.  ``slo_class``/``priority``/``deadline_s`` set
         its admission order (interactive before batch, higher priority
         first, soonest deadline first, then FIFO); defaults reproduce the
-        legacy FIFO admission exactly."""
+        legacy FIFO admission exactly.
+
+        ``frontier`` resumes a previously checkpointed request: admission
+        injects its KV pages and continues decode from its token frontier
+        instead of prefilling (token-exact with the replay path).  A
+        frontier that doesn't match this session (prompt, page size, or
+        paging off) is ignored and the request prefills normally.
+        ``recompute`` marks prefill work on this request as RECOMPUTED in
+        telemetry (its first prefill already completed on a replica that
+        died)."""
         if rid in self._out or rid in self.results:
             raise ValueError(f"request id {rid} already in session")
         inp = np.asarray(inp)
@@ -627,6 +683,24 @@ class QueueSession:
                     f"request {rid}: needs {need} KV pages but the pool only "
                     f"has {self.allocator.usable}"
                 )
+        if recompute:
+            self._recompute.add(rid)
+        if frontier is not None:
+            ok = (self.paged
+                  and frontier.page_size == self.allocator.page_size
+                  and tuple(int(t) for t in inp[0]) == tuple(frontier.prompt))
+            if ok and len(frontier.generated) >= max_new:
+                # the frontier already covers everything this submission
+                # asked for: complete instantly off the checkpointed tokens
+                self.results[rid] = np.asarray(
+                    list(frontier.generated[:max_new]), np.int64
+                )
+                self._instant.append(rid)
+                self._recompute.discard(rid)
+                self._pending_recovered += len(frontier.prompt) + max_new
+                return
+            if ok:
+                self._frontiers[rid] = frontier
         from repro.serving.api import slo_order_key
 
         deadline_at = (time.monotonic() + deadline_s
@@ -646,6 +720,9 @@ class QueueSession:
 
     def _retire(self, rid: int) -> None:
         self._slo.pop(rid, None)
+        self._prompt_of.pop(rid, None)
+        self._frontiers.pop(rid, None)
+        self._recompute.discard(rid)
 
     def cancel(self, rid: int) -> bool:
         """Abandon a request (hedge loser): drop it from the queue or free
@@ -808,6 +885,8 @@ class QueueSession:
                 al.stats.prefix_hits += 1
                 al.stats.reused_tokens += m
                 al.stats.prefilled_tokens += plen - m
+                if rid in self._recompute:
+                    self._pending_recomputed += plen - m
                 eng.telemetry.prefills += 1    # suffix prefill IS a dispatch
             else:
                 self._set_table(s, pages)
@@ -821,11 +900,14 @@ class QueueSession:
                 self.lens = self.lens.at[s].set(plen)
                 al.stats.misses += 1
                 al.stats.prefilled_tokens += plen
+                if rid in self._recompute:
+                    self._pending_recomputed += plen
                 eng.telemetry.prefills += 1
         self._admissions += 1
         self.tok = self.tok.at[s].set(tok0)
         self._slot_pages[s] = pages
         self._slot_of[rid] = s
+        self._prompt_of[rid] = tuple(tokens)
         return True
 
     # -- introspection --------------------------------------------------------
@@ -848,6 +930,124 @@ class QueueSession:
         active = [int(r) for r in self.slots.request_id if r >= 0]
         active += [st["rid"] for _, st in sorted(self._prefilling.items())]
         return active + [rid for rid, _, _ in self.queue]
+
+    # -- durable-KV checkpoint / restore --------------------------------------
+    def extract_frontier(self, rid: int) -> Optional[KVFrontier]:
+        """Snapshot one DECODING request's resumable state: prompt + tokens
+        generated so far, the carried next token, and host copies of the KV
+        pages covering that frontier.  None for anything not actively
+        decoding (queued and mid-prefill requests have nothing worth
+        externalizing — their retry is a plain re-prefill, not recompute
+        of paid-for work) and on non-paged sessions."""
+        if not self.paged:
+            return None
+        s = self._slot_of.get(rid)
+        if s is None or int(self.slots.request_id[s]) != rid:
+            return None
+        prompt = self._prompt_of.get(rid)
+        if prompt is None:
+            return None
+        # an inflight request never hits the max_len-1 clamp, so the host
+        # bookkeeping IS the device lens: n == len(prompt) + len(generated)
+        # exactly (avoids a device sync per checkpoint)
+        n = len(prompt) + len(self._out.get(rid, ()))
+        if n <= 0:
+            return None
+        al = self.allocator
+        pages = al.extract_kv(self._slot_pages[s][:al.blocks_for(n)])
+        return KVFrontier(
+            prompt=prompt,
+            generated=tuple(self._out.get(rid, ())),
+            carry_tok=int(np.asarray(self.tok)[s]),
+            pages_kv=self.eng.extract_pages(self.cache, pages),
+            page_size=al.page_size,
+        )
+
+    def extract_frontiers(self) -> List[Tuple[int, KVFrontier]]:
+        """Checkpoint every decoding request (the periodic flush unit and
+        the preemption-drain payload)."""
+        out: List[Tuple[int, KVFrontier]] = []
+        for r in self.slots.request_id:
+            if r < 0:
+                continue
+            fr = self.extract_frontier(int(r))
+            if fr is not None:
+                out.append((int(r), fr))
+        return out
+
+    def decoding_lens(self) -> Dict[int, int]:
+        """rid -> current frontier length for every decoding request,
+        computed host-side (no device sync) — what an incremental flush
+        checks before paying for a full ``extract_frontier``."""
+        out: Dict[int, int] = {}
+        for r in self.slots.request_id:
+            rid = int(r)
+            if rid < 0 or rid not in self._prompt_of:
+                continue
+            out[rid] = len(self._prompt_of[rid]) + len(self._out.get(rid, ()))
+        return out
+
+    def _admit_restored(self, s: int, rid: int, fr: KVFrontier,
+                        max_new: int) -> bool:
+        """Admit straight into decode from an injected frontier: fresh pages
+        take the checkpointed KV, the slot resumes at the carried token —
+        zero prefill, token-exact with the uninterrupted run (greedy).
+        Returns False (no state change) under pool pressure; the caller
+        requeues with the frontier intact."""
+        eng, al = self.eng, self.allocator
+        n = fr.tokens
+        gen = list(fr.generated)
+        pages = al.inject_kv(al.blocks_for(len(fr.prompt) + max_new))
+        if pages is None:
+            return False
+        nb = al.blocks_for(n)
+        dst = list(pages[:nb])
+        # pad the inject to the next pow-2 block count: the jit traces key
+        # on nb, so padding bounds compilation to log2(max_blocks) shapes
+        # (pad rows land on TRASH_PAGE, the designated scribble page).
+        # Padding happens host-side in numpy — a device concat would itself
+        # compile once per distinct nb, which is what the bucket avoids.
+        kv_host = fr.pages_kv
+        nb_pad = 1 << (nb - 1).bit_length()
+        if nb_pad > nb:
+            pad = nb_pad - nb
+            kv_host = jax.tree.map(
+                lambda c: np.concatenate(
+                    [c, np.zeros(c.shape[:1] + (pad,) + c.shape[2:],
+                                 c.dtype)], axis=1), kv_host)
+            dst += [TRASH_PAGE] * pad
+        self.cache = eng._inject_pages(
+            self.cache, jax.tree.map(jnp.asarray, kv_host),
+            jnp.asarray(dst, jnp.int32))
+        self._set_table(s, pages)
+        self._slot_pages[s] = pages
+        self._slot_of[rid] = s
+        self._prompt_of[rid] = tuple(fr.prompt)
+        self.tok = self.tok.at[s].set(jnp.int32(fr.carry_tok))
+        self.lens = self.lens.at[s].set(n)
+        self._lens_host[s] = n
+        self._out[rid] = list(gen)
+        self._admissions += 1
+        self.slots.admit(s, rid, max_new - len(gen))
+        # replay the checkpointed tokens through report.tokens: the
+        # streaming client reconciles by per-replica position, so it
+        # forwards only what the handle hasn't seen yet
+        self._restored.append((rid, gen))
+        self._pending_recovered += n
+        return True
+
+    def _drain_recovery(self, report: "PumpReport") -> None:
+        report.recovered_tokens += self._pending_recovered
+        report.recomputed_prefill_tokens += self._pending_recomputed
+        self._pending_recovered = 0
+        self._pending_recomputed = 0
+
+    def _emit_restored(self, report: "PumpReport") -> None:
+        for rid, toks in self._restored:
+            if rid in self._out and toks:
+                report.emitted[rid] = report.emitted.get(rid, 0) + len(toks)
+                report.tokens.setdefault(rid, []).extend(toks)
+        self._restored = []
 
     # -- the loop body --------------------------------------------------------
     def pump(self) -> PumpReport:
@@ -883,6 +1083,16 @@ class QueueSession:
             if not self.queue:
                 break
             rid, inp, max_new = self._pop_next()
+            fr = self._frontiers.pop(rid, None)
+            if fr is not None:
+                if not self._admit_restored(int(s), rid, fr, max_new):
+                    # page pressure: requeue with the frontier intact so the
+                    # retry still resumes instead of re-prefilling
+                    self._frontiers[rid] = fr
+                    self.queue.insert(0, (rid, inp, max_new))
+                    break
+                report.admitted.append(rid)
+                continue
             if self.paged:
                 if not self._admit_paged(int(s), rid, inp, max_new):
                     # page pressure: put it back and retry after decodes
@@ -896,9 +1106,12 @@ class QueueSession:
                 akey = jax.random.fold_in(self.key, self._admissions)
                 self._admissions += 1
                 self.tok = self.tok.at[s].set(eng._sample(logits, akey)[0])
+                if rid in self._recompute:
+                    self._pending_recomputed += int(inp.shape[1])
                 eng.telemetry.prefills += 1
             slots.admit(int(s), rid, max_new)
             report.admitted.append(rid)
+        self._emit_restored(report)
 
         report.occupancy = slots.occupancy
         if self.paged:
@@ -910,6 +1123,7 @@ class QueueSession:
             report.page_occupancy = self.allocator.occupancy
             report.cached_pages = self.allocator.cached_pages
         if report.occupancy == 0.0:                   # nothing to decode
+            self._drain_recovery(report)
             report.wall_s = time.perf_counter() - t0
             return report
 
@@ -951,6 +1165,7 @@ class QueueSession:
             report.page_occupancy = self.allocator.occupancy
             report.cached_pages = self.allocator.cached_pages
         report.chunk_steps = chunk
+        self._drain_recovery(report)
         report.wall_s = time.perf_counter() - t0
 
         tel = eng.telemetry
@@ -963,6 +1178,8 @@ class QueueSession:
         tel.prefix_misses += report.prefix_misses
         tel.reused_tokens += report.reused_tokens
         tel.prefilled_tokens += report.prefilled_tokens
+        tel.recovered_tokens += report.recovered_tokens
+        tel.recomputed_prefill_tokens += report.recomputed_prefill_tokens
         return report
 
     # -- mixed-batch chunked prefill ------------------------------------------
@@ -1035,6 +1252,7 @@ class QueueSession:
             al.stats.reused_tokens += plen
             self._slot_pages[s] = pages
             self._slot_of[rid] = s
+            self._prompt_of[rid] = tuple(tokens)
             self.slots.admit(s, rid, max_new)     # decoding immediately
             return True
 
@@ -1058,6 +1276,7 @@ class QueueSession:
         self._set_table(s, pages)
         self._slot_pages[s] = pages
         self._slot_of[rid] = s
+        self._prompt_of[rid] = tuple(tokens)
         if m > 0:
             # block-aligned prefix hit: the first m tokens never touch the
             # model — only the suffix is queued for chunked prefill
@@ -1143,7 +1362,15 @@ class QueueSession:
             if s in self._prefilling:
                 continue
             rid, inp, max_new = self._pop_next()
-            if self.paged:
+            fr = self._frontiers.pop(rid, None)
+            if fr is not None:
+                if not self._admit_restored(s, rid, fr, max_new):
+                    # page pressure: requeue with the frontier intact so the
+                    # retry still resumes instead of re-prefilling
+                    self._frontiers[rid] = fr
+                    self.queue.insert(0, (rid, inp, max_new))
+                    break
+            elif self.paged:
                 if not self._admit_paged_mixed(s, rid, inp, max_new):
                     # page pressure: put it back and retry after decodes
                     # release pages (completions free at chunk boundaries)
@@ -1152,6 +1379,7 @@ class QueueSession:
             else:
                 self._admit_mixed(s, rid, inp, max_new)
             report.admitted.append(rid)
+        self._emit_restored(report)
 
         decode_active = slots.request_id >= 0
         report.occupancy = (
@@ -1182,6 +1410,7 @@ class QueueSession:
         sched = self._schedule_chunks()
         if not sched and not decode_active.any():       # nothing to run
             _paged_report_tail()
+            self._drain_recovery(report)
             report.wall_s = time.perf_counter() - t0
             return report
 
@@ -1267,6 +1496,8 @@ class QueueSession:
                 stt = self._prefilling[s]
                 stt["rem"] = stt["rem"][len(c):]
                 report.prefill_chunks += 1
+                if stt["rid"] in self._recompute:
+                    self._pending_recomputed += len(c)
                 if self.paged:
                     self.allocator.stats.prefilled_tokens += len(c)
                 if len(stt["rem"]) == 0:
@@ -1328,6 +1559,7 @@ class QueueSession:
             report.chunk_steps = chunk
 
         _paged_report_tail()
+        self._drain_recovery(report)
         report.wall_s = time.perf_counter() - t0
 
         tel = eng.telemetry
@@ -1343,6 +1575,8 @@ class QueueSession:
         tel.prefix_misses += report.prefix_misses
         tel.reused_tokens += report.reused_tokens
         tel.prefilled_tokens += report.prefilled_tokens
+        tel.recovered_tokens += report.recovered_tokens
+        tel.recomputed_prefill_tokens += report.recomputed_prefill_tokens
         return report
 
 

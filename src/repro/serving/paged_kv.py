@@ -30,11 +30,37 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 TRASH_PAGE = 0   # page 0 is the write sink for idle/overrun slots; never allocated
+
+
+@dataclass
+class KVFrontier:
+    """One request's resumable decode state, externalized.
+
+    The portable unit of the durable-KV recovery layer: the token frontier
+    (prompt + tokens generated so far), the carried next token (sampled but
+    not yet written to KV), and HOST copies of the page contents covering
+    the frontier — leaves shaped (L, n_blocks, page_size, Hkv, Dh), the
+    page-pool layout minus the pool axis.  A frontier is engine-portable
+    across sessions sharing params and page size: injecting it into a
+    fresh allocator's pages and resuming decode from ``tokens`` is
+    token-exact with the uninterrupted run (greedy).
+    """
+
+    prompt: Tuple[int, ...]
+    generated: Tuple[int, ...]    # emitted tokens whose KV the pages hold
+    carry_tok: int                # next token to decode (KV not yet written)
+    pages_kv: Any                 # pytree of np arrays, (L, nb, ps, Hkv, Dh)
+    page_size: int
+
+    @property
+    def tokens(self) -> int:
+        """Content length the pages cover (prompt + generated)."""
+        return len(self.prompt) + len(self.generated)
 
 
 @dataclass
@@ -171,6 +197,40 @@ class BlockAllocator:
         self.deref(page)
         self.stats.cow_copies += 1
         return fresh
+
+    # -- durable-KV extraction / injection -----------------------------------
+    def extract_kv(self, pages: Sequence[int]) -> Tuple[int, ...]:
+        """Validate a page range for externalization: every page must be
+        live (refcount > 0) and never the trash page.  Returns the page
+        tuple unchanged; the engine snapshots the device contents.  The
+        allocator is untouched — extraction is a read."""
+        out = []
+        for p in pages:
+            p = int(p)
+            if p == TRASH_PAGE:
+                raise ValueError("cannot extract the trash page")
+            if self.refcount[p] <= 0:
+                raise ValueError(f"extract of unreferenced page {p}")
+            out.append(p)
+        return tuple(out)
+
+    def inject_kv(self, n_blocks: int) -> Optional[List[int]]:
+        """Allocate ``n_blocks`` fresh refcount-1 pages for an injected
+        frontier; all-or-nothing.  The up-front capacity check mirrors
+        ``QueueSession._extend_alloc``: a grab that cannot fully succeed
+        must not evict cached pages on the way to failing.  Returns None
+        (no state change) under pool pressure."""
+        if n_blocks > self.free_pages + self.cached_pages:
+            return None
+        pages: List[int] = []
+        for _ in range(n_blocks):
+            p = self.alloc()
+            if p is None:                 # unreachable given the pre-check
+                for q in pages:
+                    self.deref(q)
+                return None
+            pages.append(p)
+        return pages
 
     # -- prefix cache --------------------------------------------------------
     def match_prefix(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
