@@ -37,6 +37,15 @@ class SwitchDecision:
     weights: np.ndarray
     demand_seen: float                   # (possibly smoothed) demand used
     switched: bool
+    # -- the signal vector the step branched on (the decision audit log
+    #    records these verbatim so every switch is explainable after the
+    #    fact; None-free even when measured_t_max was omitted) -------------
+    t_max_used: np.ndarray = None        # profile or measured service rates
+    tentative: np.ndarray = None         # replicas the cost allocation wants
+    cap_violated: bool = False           # any(tentative > pool): Eq.(3) break
+    supply_possible: float = 0.0         # sum(pool * t_max)
+    hold_supply: float = 0.0             # sum(min(requested, pool) * t_max)
+    prev_mode: int = 0                   # mode before this evaluation
 
 
 class ModeController:
@@ -109,15 +118,15 @@ class ModeController:
         ).astype(np.int64)
         cap_violated = bool(np.any(tentative > pool))
         supply_possible = float(np.sum(pool * t_max))
+        hold_supply = float(np.sum(np.minimum(requested, pool) * t_max))
 
         prev = self.mode
         if cap_violated or supply_possible < demand_s:
             want = policy.CAPACITY_OPTIMIZED
         else:
             margin = 1.0 + self.config.hysteresis_margin
-            if prev == policy.CAPACITY_OPTIMIZED and float(
-                np.sum(np.minimum(requested, pool) * t_max)
-            ) < demand_s * margin:
+            if (prev == policy.CAPACITY_OPTIMIZED
+                    and hold_supply < demand_s * margin):
                 want = policy.CAPACITY_OPTIMIZED  # hold until margin met
             else:
                 want = policy.COST_OPTIMIZED
@@ -144,4 +153,10 @@ class ModeController:
             weights=np.asarray(w),
             demand_seen=demand_s,
             switched=switched,
+            t_max_used=np.asarray(t_max, dtype=np.float64),
+            tentative=tentative,
+            cap_violated=cap_violated,
+            supply_possible=supply_possible,
+            hold_supply=hold_supply,
+            prev_mode=prev,
         )

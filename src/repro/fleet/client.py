@@ -163,3 +163,14 @@ class FleetClient:
     def record_of(self, rid: int) -> Optional[RequestRecord]:
         h = self.handles.get(rid)
         return h.record if h is not None else None
+
+    @property
+    def tracer(self):
+        """The runtime's flight recorder (``repro.obs.Tracer``)."""
+        return self.runtime.tracer
+
+    def export_trace(self, path: str) -> int:
+        """Dump the runtime's event trace as JSONL (the format
+        ``tools/trace_export.py`` converts to a Chrome/Perfetto timeline);
+        returns the event count."""
+        return self.runtime.tracer.dump_jsonl(path)

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.fleet.replica import Replica
 from repro.fleet.workload import Request
+from repro.obs import Tracer
 from repro.serving.api import slo_order_key
 
 
@@ -51,6 +52,8 @@ class Dispatcher:
                  hedge_fraction: float = 0.0, prefix_affinity: bool = True,
                  min_affinity_tokens: int = 16):
         self.tiers = list(tiers)
+        # flight recorder (runtime-owned; disabled stub when standalone)
+        self.tracer: Tracer = Tracer.disabled()
         self.max_retries = max_retries
         self.hedge_fraction = hedge_fraction
         self.prefix_affinity = prefix_affinity
@@ -212,6 +215,9 @@ class Dispatcher:
                                 "unfittable on any live replica "
                                 f"(prompt_len={req.prompt_len}, "
                                 f"max_new={req.max_new})")
+                            self.tracer.event(
+                                "req.failed", t=now, cat="req", rid=req.rid,
+                                reason=self.drop_reasons[req.rid])
                         else:
                             self.backlog.append(retried)
                         continue
@@ -225,6 +231,13 @@ class Dispatcher:
             hedge = self._maybe_hedge(req, ti, weights, replicas_by_tier, now)
             self.inflight[req.rid] = (req, rep, hedge)
             self.dispatched_per_tier[tier] += 1
+            self.tracer.event("req.dispatched", t=now, cat="req", rid=req.rid,
+                              tier=tier, replica=rep.name, load=rep.load,
+                              affinity=affinity is not None,
+                              retries=req.retries)
+            if hedge is not None:
+                self.tracer.event("req.hedged", t=now, cat="req", rid=req.rid,
+                                  tier=hedge.tier, replica=hedge.name)
             if affinity is not None:
                 self.affinity_placements += 1
             placed += 1
@@ -268,6 +281,8 @@ class Dispatcher:
                 if rep is not None and rep.session is not None:
                     rep.session.cancel(rid)
             hit = True
+        if hit:
+            self.tracer.event("req.cancelled", cat="req", rid=rid)
         return hit
 
     # -- completion / failure ----------------------------------------------
@@ -307,8 +322,14 @@ class Dispatcher:
                     f"max retries exceeded: {retried.retries} replica "
                     f"failures (max_retries={self.max_retries})")
                 dropped.append(retried)
+                self.tracer.event("req.failed", cat="req", rid=rid,
+                                  replica=victim.name,
+                                  reason=self.drop_reasons[rid])
             else:
                 requeued.append(retried)
+                self.tracer.event("req.requeued", cat="req", rid=rid,
+                                  replica=victim.name, tier=victim.tier,
+                                  retries=retried.retries)
         # oldest work to the front so retried requests cut the line
         for req in reversed(requeued):
             self.backlog.appendleft(req)

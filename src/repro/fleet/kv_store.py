@@ -28,6 +28,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.obs import Tracer
 from repro.serving.paged_kv import KVFrontier
 
 
@@ -45,7 +46,8 @@ class KVStore:
     """Capacity-bounded, LRU-evicting map of prompt -> ``KVFrontier``."""
 
     def __init__(self, capacity_tokens: int = 1 << 16,
-                 max_entries: int = 1024):
+                 max_entries: int = 1024, *,
+                 tracer: Optional[Tracer] = None):
         if capacity_tokens < 1:
             raise ValueError(f"capacity_tokens must be positive, got {capacity_tokens}")
         self.capacity_tokens = int(capacity_tokens)
@@ -53,6 +55,8 @@ class KVStore:
         self._entries: "OrderedDict[Tuple[int, ...], KVFrontier]" = OrderedDict()
         self._tokens = 0
         self.stats = KVStoreStats()
+        # kv.* events are high-frequency (every periodic flush): sampled
+        self.tracer = tracer if tracer is not None else Tracer.disabled()
 
     # -- capacity ------------------------------------------------------------
     def __len__(self) -> int:
@@ -92,9 +96,13 @@ class KVStore:
             _, evicted = self._entries.popitem(last=False)
             self._tokens -= evicted.tokens
             self.stats.evictions += 1
+            self.tracer.event("kv.evict", cat="kv", sampled=True,
+                              tokens=evicted.tokens)
         self._entries[key] = frontier
         self._tokens += n
         self.stats.puts += 1
+        self.tracer.event("kv.put", cat="kv", sampled=True, tokens=n,
+                          occupancy_tokens=self._tokens)
         return True
 
     def get(self, prompt: Sequence[int]) -> Optional[KVFrontier]:
@@ -107,6 +115,7 @@ class KVStore:
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
+        self.tracer.event("kv.hit", cat="kv", sampled=True, tokens=fr.tokens)
         return fr
 
     def match_len(self, prompt: Sequence[int]) -> int:

@@ -21,6 +21,7 @@ from typing import List, Optional
 
 
 from repro.fleet.workload import Request
+from repro.obs import Tracer
 from repro.serving.engine import PumpReport, QueueSession, ServingEngine
 
 
@@ -55,6 +56,13 @@ class Replica:
         self.wedged = False
         self._hb = None               # HeartbeatMonitor (runtime-owned)
         self._hb_id: Optional[int] = None
+        # flight recorder (runtime-owned; disabled stub when standalone so
+        # every transition site emits unconditionally)
+        self.tracer: Tracer = Tracer.disabled()
+
+    def _trace_state(self) -> None:
+        self.tracer.event(f"replica.{self.state.value}", cat="ctl",
+                          replica=self.name, tier=self.tier)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Replica({self.name}, {self.tier}, {self.state.value}, load={self.load})"
@@ -64,6 +72,7 @@ class Replica:
         assert self.state == ReplicaState.PROVISIONING, self.state
         self.session = QueueSession(self.engine)
         self.state = ReplicaState.WARMING
+        self._trace_state()
 
     def activate(self, t: float = 0.0) -> None:
         if self.state == ReplicaState.PROVISIONING:
@@ -71,15 +80,19 @@ class Replica:
         assert self.state == ReplicaState.WARMING, self.state
         self.state = ReplicaState.READY
         self.born_t = t
+        self._trace_state()
 
     def drain(self) -> None:
         """Graceful scale-down: stop admissions, finish in-flight work."""
         if self.state in (ReplicaState.PROVISIONING, ReplicaState.WARMING):
             self.state = ReplicaState.TERMINATED
             self.session = None
+            self._trace_state()
             return
         assert self.state in (ReplicaState.READY, ReplicaState.DRAINING), self.state
-        self.state = ReplicaState.DRAINING
+        if self.state != ReplicaState.DRAINING:
+            self.state = ReplicaState.DRAINING
+            self._trace_state()
 
     def preempt(self, deadline_t: float) -> None:
         """Spot-reclaim NOTICE: the node disappears at ``deadline_t``.  The
@@ -97,6 +110,8 @@ class Replica:
         """Test hook: hang the replica (state stays READY, pumps become
         no-ops, heartbeats stop).  Only missed-pump detection can see it."""
         self.wedged = True
+        self.tracer.event("replica.wedged", cat="ctl",
+                          replica=self.name, tier=self.tier)
 
     def fail(self) -> List[int]:
         """Kill mid-decode (spot reclaim / crash): the session dies with the
@@ -105,6 +120,8 @@ class Replica:
         self.state = ReplicaState.FAILED
         self.session = None
         self.preempt_deadline = None
+        self.tracer.event("replica.failed", cat="ctl", replica=self.name,
+                          tier=self.tier, inflight=len(rids))
         return rids
 
     # -- traffic ------------------------------------------------------------
@@ -199,5 +216,6 @@ class Replica:
         into a false death)."""
         self.state = ReplicaState.TERMINATED
         self.session = None
+        self._trace_state()
         if self._hb is not None and self._hb_id is not None:
             self._hb.forget(self._hb_id)

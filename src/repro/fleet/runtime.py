@@ -30,6 +30,8 @@ asserts byte-identical outputs through a mid-decode replica kill.
 from __future__ import annotations
 
 import argparse
+import logging
+import sys
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -48,7 +50,10 @@ from repro.fleet.kv_store import KVStore
 from repro.fleet.replica import Replica, ReplicaState
 from repro.fleet.telemetry import Ewma, TelemetryBus
 from repro.fleet.workload import Request
+from repro.obs import DecisionRecord, Tracer
 from repro.serving.engine import EngineConfig, ServingEngine
+
+logger = logging.getLogger(__name__)
 
 
 @dataclass
@@ -141,6 +146,12 @@ class FleetConfig:
                                       # crashes (crash-loop guard)
     crash_backoff_max_s: float = 30.0
     crash_window_s: float = 20.0      # crashes older than this don't count
+    # -- flight recorder ----------------------------------------------------
+    trace: bool = True                # structured event tracing (obs.Tracer)
+    trace_capacity: int = 1 << 16     # event ring size (oldest fall off)
+    trace_sample: float = 1.0         # decimation for high-frequency events
+                                      # (engine.pump, kv.*); lifecycle and
+                                      # control-plane events never sample
     controller: ControllerConfig = field(default_factory=ControllerConfig)
     autoscaler: AutoscalerConfig = field(
         default_factory=lambda: AutoscalerConfig(scale_down_stabilization_s=10.0)
@@ -159,6 +170,10 @@ class FleetReport:
     useful_tokens: int
     wasted_tokens: int
     kv_store: Optional[Dict[str, float]] = None   # durable-KV store snapshot
+    # controller decision audit: every mode evaluation that set or changed
+    # the mode, with the full signal vector it branched on (each record's
+    # ``explains()`` re-derives the decision from its inputs alone)
+    decisions: List[DecisionRecord] = field(default_factory=list)
 
     @property
     def goodput_tokens_per_s(self) -> float:
@@ -220,11 +235,22 @@ class FleetRuntime:
         for spec in self.tiers:
             self.autoscalers[spec.name].current = self.pools[spec.name].ready
         self.telemetry = TelemetryBus(names, alpha=self.cfg.telemetry_alpha)
+        # flight recorder: one tracer on the control-loop clock, shared by
+        # every layer (dispatcher, replicas, KV store) — disabled it still
+        # exists, so emit sites stay unconditional and the overhead bench
+        # measures the same code path in both arms
+        self.tracer = (
+            Tracer(capacity=self.cfg.trace_capacity,
+                   sample=self.cfg.trace_sample, clock=lambda: self.t)
+            if self.cfg.trace else Tracer.disabled())
+        self.decisions: List[DecisionRecord] = []
         self.dispatcher = Dispatcher(names, max_retries=self.cfg.max_retries,
                                      hedge_fraction=self.cfg.hedge_fraction)
+        self.dispatcher.tracer = self.tracer
         # durable KV: the fleet-global frontier store (None = feature off)
         self.kv_store: Optional[KVStore] = (
-            KVStore(capacity_tokens=self.cfg.kv_store_tokens)
+            KVStore(capacity_tokens=self.cfg.kv_store_tokens,
+                    tracer=self.tracer)
             if self.cfg.kv_store else None)
         # missed-pump liveness: replicas beat on every live pump; a wedged
         # process (READY on paper, no beats) is the failure mode only this
@@ -253,6 +279,7 @@ class FleetRuntime:
         # crash-loop guard state
         self._crash_t: Dict[str, List[float]] = {}
         self._hold_until: Dict[str, float] = {}
+        self._last_want: Dict[str, int] = {}   # autoscale-change edge detect
         self._backoff_rng = np.random.default_rng(self.cfg.seed + 7)
         # (replica, rid) -> frontier length at last checkpoint (the
         # incremental-flush cursor)
@@ -308,7 +335,10 @@ class FleetRuntime:
         before = len(self._injected)
         self._injected = [r for r in self._injected if r.rid != rid]
         hit = hit or len(self._injected) < before
-        hit = self.dispatcher.cancel(rid) or hit
+        d_hit = self.dispatcher.cancel(rid)     # emits req.cancelled itself
+        if hit and not d_hit:                   # withdrawn before arrival
+            self.tracer.event("req.cancelled", cat="req", rid=rid)
+        hit = d_hit or hit
         self._first_token_t.pop(rid, None)
         return hit
 
@@ -350,6 +380,7 @@ class FleetRuntime:
         self._replica_counter += 1
         rep = Replica(f"{spec.name}/r{self._replica_counter}", spec.name,
                       self._engine_for(spec), queue_limit=spec.queue_limit)
+        rep.tracer = self.tracer
         if self.heartbeats is not None:
             rep.attach_heartbeat(self.heartbeats, self._replica_counter)
         return rep
@@ -372,6 +403,8 @@ class FleetRuntime:
                 fr = self.kv_store.get(req.token_key())
                 if fr is not None:
                     req.frontier = fr
+                    self.tracer.event("ctl.kv_restore", rid=req.rid,
+                                      tokens=fr.tokens, at="requeue")
             self._requeue_pressure += 0.25 if req.frontier is not None else 1.0
         for req in dropped:
             self.request_log.dropped.append(req.rid)
@@ -402,6 +435,8 @@ class FleetRuntime:
         self._hold_until[tier] = max(self._hold_until.get(tier, 0.0),
                                      t + backoff)
         self.telemetry.record_backoff(tier)
+        self.tracer.event("ctl.crash_backoff", tier=tier,
+                          crashes=len(hist), hold_until=self._hold_until[tier])
 
     def _flush_replica(self, tier: str, rep: Replica) -> None:
         """Checkpoint decoding frontiers on ``rep`` into the fleet KV store
@@ -432,6 +467,10 @@ class FleetRuntime:
             if self.kv_store.put(fr):
                 accepted += fr.tokens
         self.telemetry.record_flush(tier, time.perf_counter() - t0, accepted)
+        if accepted:
+            self.tracer.event("ctl.kv_flush", replica=rep.name, tier=tier,
+                              tokens=accepted,
+                              preempting=bool(rep.preempting))
 
     # -- pool<->replica reconciliation ---------------------------------------
     def _reconcile(self, spec: TierSpec) -> None:
@@ -493,6 +532,14 @@ class FleetRuntime:
             for req in arrived:
                 if req.frontier is None:
                     req.frontier = self.kv_store.get(req.token_key())
+                    if req.frontier is not None:
+                        self.tracer.event("ctl.kv_restore", rid=req.rid,
+                                          tokens=req.frontier.tokens,
+                                          at="arrival")
+        for req in arrived:
+            self.tracer.event("req.queued", t=req.arrival_t, cat="req",
+                              rid=req.rid, prompt_len=req.prompt_len,
+                              max_new=req.max_new, slo=req.slo_class)
         self.dispatcher.submit(arrived)
         arrival_rate = len(arrived) / cfg.tick_s
         backlog_pressure = len(self.dispatcher.backlog) / (
@@ -512,6 +559,8 @@ class FleetRuntime:
             victims = [r for r in self.replicas[ev.tier]
                        if r.state == ReplicaState.READY][-ev.count:]
             for rep in victims:
+                self.tracer.event("ctl.replica_fail", tier=ev.tier,
+                                  replica=rep.name, cause="injected_crash")
                 self._fail_replica(rep, crash=True)
                 pool = self.pools[ev.tier]
                 pool.ready = max(0, pool.ready - 1)
@@ -525,6 +574,9 @@ class FleetRuntime:
             victims = [r for r in self.replicas[ev.tier]
                        if r.state == ReplicaState.READY][-ev.count:]
             for rep in victims:
+                self.tracer.event("ctl.preempt_notice", tier=ev.tier,
+                                  replica=rep.name,
+                                  deadline=t + ev.deadline_s)
                 rep.preempt(t + ev.deadline_s)
                 self._flush_replica(ev.tier, rep)
                 pool = self.pools[ev.tier]
@@ -536,6 +588,8 @@ class FleetRuntime:
         for spec in self.tiers:
             for rep in list(self.replicas[spec.name]):
                 if rep.preempting and t >= rep.preempt_deadline:
+                    self.tracer.event("ctl.preempt_deadline", tier=spec.name,
+                                      replica=rep.name)
                     self._flush_replica(spec.name, rep)
                     self._fail_replica(rep)
 
@@ -548,6 +602,9 @@ class FleetRuntime:
                     for rep in list(self.replicas[spec.name]):
                         if rep._hb_id in dead and rep.live:
                             dead.discard(rep._hb_id)
+                            self.tracer.event(
+                                "ctl.wedge_death", tier=spec.name,
+                                replica=rep.name, wedged=bool(rep.wedged))
                             if rep.state == ReplicaState.READY:
                                 pool = self.pools[spec.name]
                                 pool.ready = max(0, pool.ready - 1)
@@ -572,6 +629,28 @@ class FleetRuntime:
                                         measured_t_max=measured)
         if not self.mode_trace or self.mode_trace[-1][1] != decision.mode:
             self.mode_trace.append((t, decision.mode))
+            # audit: the mode changed (or was first set) — record the full
+            # signal vector the step branched on, so the decision stays
+            # explainable from the log alone (FleetReport.decisions)
+            rec = DecisionRecord(
+                t=t, prev_mode=int(decision.prev_mode),
+                mode=int(decision.mode), switched=bool(decision.switched),
+                demand=float(decision.demand_seen),
+                tiers=tuple(s.name for s in self.tiers),
+                pool=tuple(int(x) for x in pool_cap),
+                requested=tuple(int(x) for x in requested),
+                measured_t_max=tuple(float(x) for x in decision.t_max_used),
+                tentative=tuple(int(x) for x in decision.tentative),
+                cap_violated=bool(decision.cap_violated),
+                supply_possible=float(decision.supply_possible),
+                hold_supply=float(decision.hold_supply),
+                hysteresis_margin=float(self.cfg.controller.hysteresis_margin),
+                weights=tuple(float(x) for x in decision.weights),
+            )
+            self.decisions.append(rec)
+            self.tracer.event("ctl.mode_switch", mode=rec.mode,
+                              prev_mode=rec.prev_mode, reason=rec.reason(),
+                              **rec.signals())
 
         # 4b. mode drives the mixed-step chunk budget: capacity mode buys
         # admission throughput (whole prompts per step => TTFT down, TPOT
@@ -608,7 +687,15 @@ class FleetRuntime:
         occ_n = {s.name: 0 for s in self.tiers}
         for spec in self.tiers:
             for rep in list(self.replicas[spec.name]):
+                traces_before = getattr(rep.engine, "mixed_traces", 0)
                 report = rep.pump(now=t)
+                traces_after = getattr(rep.engine, "mixed_traces", 0)
+                if traces_after > traces_before:
+                    # a measured pump hit a cold jit trace — compile cost
+                    # landed inside serving time (warmup should prevent it)
+                    self.tracer.event("engine.compile", cat="engine",
+                                      replica=rep.name, tier=spec.name,
+                                      new_traces=traces_after - traces_before)
                 # periodic durability checkpoint (every pump while a
                 # preemption notice is live — the drain must win the race
                 # against the deadline)
@@ -622,6 +709,14 @@ class FleetRuntime:
                 self._pump_wall_s += report.wall_s
                 self._useful_tokens += report.useful_tokens
                 self._wasted_tokens += report.wasted_tokens
+                self.tracer.event("engine.pump", cat="engine", sampled=True,
+                                  replica=rep.name, tier=spec.name,
+                                  wall_s=report.wall_s,
+                                  admit_s=report.admit_s,
+                                  dispatch_s=report.dispatch_s,
+                                  sync_s=report.sync_s,
+                                  occupancy=report.occupancy,
+                                  completed=len(report.completed))
                 qd = rep.load
                 self.telemetry.record_pump(spec.name, rep.name, report, qd)
                 if rep.state == ReplicaState.READY:
@@ -630,7 +725,12 @@ class FleetRuntime:
                 for rid, toks in report.tokens.items():
                     # the TRUE first-token stamp: the tick the token was
                     # actually emitted, not inferred from the completion
-                    self._first_token_t.setdefault(rid, t + cfg.tick_s)
+                    if rid not in self._first_token_t:
+                        self._first_token_t[rid] = t + cfg.tick_s
+                        self.tracer.event("req.first_token",
+                                          t=t + cfg.tick_s, cat="req",
+                                          rid=rid, replica=rep.name,
+                                          tier=spec.name)
                     for sink in self._sinks:
                         sink.on_tokens(rid, toks, rep.name, t + cfg.tick_s)
                 for rid, toks in report.completed.items():
@@ -647,6 +747,12 @@ class FleetRuntime:
             if t < self._hold_until.get(spec.name, 0.0):
                 # crash-loop hold: keep what exists, provision nothing new
                 want = min(want, pool.ready + pool.inflight)
+            if want != self._last_want.get(spec.name):
+                self.tracer.event("ctl.scale", tier=spec.name, want=int(want),
+                                  prev=self._last_want.get(spec.name),
+                                  ready=int(pool.ready),
+                                  inflight=int(pool.inflight))
+                self._last_want[spec.name] = int(want)
             pool.request(t, want)
 
         # 8. metrics
@@ -691,6 +797,10 @@ class FleetRuntime:
         )
         self.request_log.append(rec)
         self.outputs.setdefault(rid, toks)
+        self.tracer.event("req.completed", t=complete_t, cat="req", rid=rid,
+                          replica=source.name, tier=source.tier,
+                          tokens=rec.tokens, ttft_s=rec.ttft_s,
+                          tpot_s=rec.tpot_s, retries=req.retries)
         self.telemetry.record_completion(source.tier, source.name,
                                          rec.ttft_s, rec.tpot_s, rec.tokens)
         completions_per_tier[spec.name] += 1
@@ -790,6 +900,7 @@ class FleetRuntime:
             wasted_tokens=self._wasted_tokens,
             kv_store=(self.kv_store.snapshot()
                       if self.kv_store is not None else None),
+            decisions=list(self.decisions),
         )
 
     def run(self) -> FleetReport:
@@ -874,6 +985,7 @@ def build_saturated_fleet(
     max_len: int = 64,
     mixed_step: bool = True,
     prefill_chunk: int = 64,
+    trace: bool = True,
     seed: int = 0,
 ) -> FleetRuntime:
     """A single-tier fleet fed its whole workload as one burst at t=0 —
@@ -894,7 +1006,7 @@ def build_saturated_fleet(
                     base_capacity=n_replicas, initial_replicas=n_replicas,
                     provision_delay_s=1.0, mixed_step=mixed_step,
                     prefill_chunk=prefill_chunk)
-    return FleetRuntime([tier], workload, FleetConfig(seed=seed))
+    return FleetRuntime([tier], workload, FleetConfig(seed=seed, trace=trace))
 
 
 def build_prefix_fleet(
@@ -1006,7 +1118,17 @@ def main(argv=None) -> int:
                     help="start:end control-loop seconds of cheap-tier outage")
     ap.add_argument("--paged", action="store_true",
                     help="serve with the paged KV cache (prefix reuse on)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the flight-recorder event trace (JSONL) here")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-run summary lines (warnings only)")
     args = ap.parse_args(argv)
+
+    # stdout + bare-message format keeps --smoke output byte-identical to
+    # the historical print() lines while routing through logging (so
+    # --quiet, or an embedding application's handlers, can filter it)
+    logging.basicConfig(stream=sys.stdout, format="%(message)s",
+                        level=logging.WARNING if args.quiet else logging.INFO)
 
     outage = None
     if args.outage:
@@ -1018,19 +1140,26 @@ def main(argv=None) -> int:
     report = rt.run()
     wall = time.perf_counter() - t0
     s = report.summary()
-    print("fleet summary:", {k: round(v, 3) for k, v in s.items()})
-    print(f"mode trace: {[(round(t, 1), m) for t, m in report.mode_trace]}")
+    logger.info("fleet summary: %s", {k: round(v, 3) for k, v in s.items()})
+    logger.info("mode trace: %s",
+                [(round(t, 1), m) for t, m in report.mode_trace])
     tel = {k: {kk: round(vv, 3) for kk, vv in v.items()}
            for k, v in report.telemetry.items()}
-    print(f"telemetry: {tel}")
-    print(f"wall: {wall:.1f}s for {report.ticks} ticks "
-          f"({report.goodput_tokens_per_s:.0f} goodput tok/s of decode wall)")
+    logger.info("telemetry: %s", tel)
+    logger.info("wall: %.1fs for %d ticks (%.0f goodput tok/s of decode wall)",
+                wall, report.ticks, report.goodput_tokens_per_s)
+    if args.trace_out:
+        n_ev = rt.tracer.dump_jsonl(args.trace_out)
+        logger.info("trace: %d events -> %s (%d dropped to ring wrap)",
+                    n_ev, args.trace_out, rt.tracer.dropped)
     if args.smoke:
         n_done = len(report.requests.records)
         assert n_done == args.requests, (
             f"smoke: {n_done}/{args.requests} requests completed")
         assert not report.requests.dropped, (
             f"smoke: {len(report.requests.dropped)} requests dropped")
+        assert all(d.explains() for d in report.decisions), (
+            "smoke: unexplainable controller decision in the audit log")
         print(f"fleet smoke OK: {n_done}/{args.requests} requests, 0 dropped")
     return 0
 

@@ -16,9 +16,13 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
+
 # per-tier rolling TTFT window: enough samples for a stable p99 without
 # letting ancient completions mask a fresh latency regression
 TTFT_WINDOW = 512
+# TPOT shares the window length: both tails feed the chunk-budget retune
+TPOT_WINDOW = 512
 
 
 class Ewma:
@@ -96,6 +100,9 @@ class TelemetryBus:
         self._ttft_window: Dict[str, Deque[float]] = {
             t: deque(maxlen=TTFT_WINDOW) for t in tiers
         }
+        self._tpot_window: Dict[str, Deque[float]] = {
+            t: deque(maxlen=TPOT_WINDOW) for t in tiers
+        }
         # paged-KV prefix cache effectiveness (stays at 0 for contiguous tiers)
         self.tier_cache_hit_rate: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_token_reuse: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
@@ -107,6 +114,26 @@ class TelemetryBus:
         self.tier_flush_s: Dict[str, float] = {t: 0.0 for t in tiers}
         self.tier_flush_tokens: Dict[str, int] = {t: 0 for t in tiers}
         self.tier_backoffs: Dict[str, int] = {t: 0 for t in tiers}  # crash-loop holds
+        # structured metrics: fixed-bucket histograms give the snapshot's
+        # EWMA levels a distribution (real p50/p90/p99, mergeable across
+        # runs) and the cumulative dicts above a Prometheus exposition
+        self.metrics = MetricsRegistry()
+        self._h_ttft = self.metrics.histogram(
+            "fleet_ttft_seconds", "time to first token", labels=("tier",))
+        self._h_tpot = self.metrics.histogram(
+            "fleet_tpot_seconds", "time per output token", labels=("tier",))
+        self._h_pump = self.metrics.histogram(
+            "fleet_pump_wall_seconds", "engine pump wall time", labels=("tier",))
+        self._c_completions = self.metrics.counter(
+            "fleet_completions_total", "completed requests", labels=("tier",))
+        self._c_tokens = self.metrics.counter(
+            "fleet_useful_tokens_total", "useful decoded tokens", labels=("tier",))
+        self._c_flush_tokens = self.metrics.counter(
+            "fleet_kv_flush_tokens_total", "tokens accepted by KV flushes",
+            labels=("tier",))
+        self._c_backoffs = self.metrics.counter(
+            "fleet_crash_backoffs_total", "crash-loop provisioning holds",
+            labels=("tier",))
 
     # -- ingestion ----------------------------------------------------------
     def signals_for(self, replica_name: str) -> ReplicaSignals:
@@ -124,6 +151,12 @@ class TelemetryBus:
         win.completions += len(report.completed)
         win.useful_tokens += report.useful_tokens
         win.wall_s += report.wall_s
+        if report.wall_s > 0:
+            self._h_pump.labels(tier).observe(report.wall_s)
+        if len(report.completed):
+            self._c_completions.labels(tier).inc(len(report.completed))
+        if report.useful_tokens:
+            self._c_tokens.labels(tier).inc(report.useful_tokens)
         if report.occupancy > 0:
             win.busy_replicas += 1
         # paged-KV channels (getattr: contiguous reports may predate them)
@@ -147,14 +180,26 @@ class TelemetryBus:
         sig.ttft_s.update(ttft_s)
         self.tier_ttft[tier].update(ttft_s)
         self._ttft_window[tier].append(float(ttft_s))
+        self._h_ttft.labels(tier).observe(ttft_s)
         if tokens > 1:
             sig.tpot_s.update(tpot_s)
             self.tier_tpot[tier].update(tpot_s)
+            self._tpot_window[tier].append(float(tpot_s))
+            self._h_tpot.labels(tier).observe(tpot_s)
 
     def ttft_p99(self, tier: str) -> float:
         """p99 TTFT over the tier's rolling completion window (0 until the
         first completion)."""
         win = self._ttft_window[tier]
+        if not win:
+            return 0.0
+        return float(np.percentile(np.asarray(win), 99.0))
+
+    def tpot_p99(self, tier: str) -> float:
+        """p99 TPOT over the tier's rolling completion window (0 until the
+        first multi-token completion) — the decode-smoothness tail that the
+        chunk budget trades TTFT against."""
+        win = self._tpot_window[tier]
         if not win:
             return 0.0
         return float(np.percentile(np.asarray(win), 99.0))
@@ -165,10 +210,12 @@ class TelemetryBus:
         the store (stale checkpoints count 0)."""
         self.tier_flush_s[tier] += float(wall_s)
         self.tier_flush_tokens[tier] += int(tokens)
+        self._c_flush_tokens.labels(tier).inc(int(tokens))
 
     def record_backoff(self, tier: str) -> None:
         """The crash-loop guard held this tier's re-provisioning back."""
         self.tier_backoffs[tier] += 1
+        self._c_backoffs.labels(tier).inc()
 
     def forget_replica(self, replica_name: str) -> None:
         self.replica.pop(replica_name, None)
@@ -222,6 +269,7 @@ class TelemetryBus:
                 "ttft_s": self.tier_ttft[tier].get(),
                 "ttft_p99_s": self.ttft_p99(tier),
                 "tpot_s": self.tier_tpot[tier].get(),
+                "tpot_p99_s": self.tpot_p99(tier),
                 "cache_hit_rate": self.tier_cache_hit_rate[tier].get(),
                 "token_reuse_rate": self.tier_token_reuse[tier].get(),
                 "page_occupancy": self.tier_page_occupancy[tier].get(),
@@ -233,3 +281,7 @@ class TelemetryBus:
             }
             for tier in self.tiers
         }
+
+    def exposition(self) -> str:
+        """Prometheus text exposition of the structured metric families."""
+        return self.metrics.exposition()

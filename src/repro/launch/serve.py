@@ -95,7 +95,16 @@ def main(argv=None):
                          "simulator")
     ap.add_argument("--requests", type=int, default=100,
                     help="--fleet: number of requests in the trace")
+    ap.add_argument("--trace-out", default="",
+                    help="--fleet: write the flight-recorder event trace "
+                         "(JSONL) here after the run")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress informational output")
     args = ap.parse_args(argv)
+
+    def say(*parts):
+        if not args.quiet:
+            print(*parts)
 
     if args.fleet:
         from repro.fleet.client import FleetClient
@@ -115,15 +124,18 @@ def main(argv=None):
         handles = client.adopt_workload()
         client.drain()
         report = rt.report()
-        print("fleet summary:",
-              {k: round(v, 4) for k, v in report.summary().items()})
-        print("mode trace:", [(round(t, 1), m) for t, m in report.mode_trace])
+        say("fleet summary:",
+            {k: round(v, 4) for k, v in report.summary().items()})
+        say("mode trace:", [(round(t, 1), m) for t, m in report.mode_trace])
         done = [h.record for h in handles if h.record is not None]
         if done:
             stream_p99 = float(np.percentile([r.ttft_s for r in done], 99.0))
             compl_p99 = float(np.percentile([r.latency_s for r in done], 99.0))
-            print(f"p99 TTFT: {stream_p99:.2f}s at the first streamed token "
-                  f"(a completion-only client would observe {compl_p99:.2f}s)")
+            say(f"p99 TTFT: {stream_p99:.2f}s at the first streamed token "
+                f"(a completion-only client would observe {compl_p99:.2f}s)")
+        if args.trace_out:
+            n_ev = client.export_trace(args.trace_out)
+            say(f"trace: {n_ev} events -> {args.trace_out}")
         return report
 
     from repro.configs.sd21 import paper_deployment_units

@@ -43,6 +43,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.metrics import RequestRecord
+from repro.obs import Tracer
 from repro.serving.engine import PumpReport, QueueSession, ServingEngine
 
 
@@ -220,13 +221,18 @@ class EngineClient:
     """
 
     def __init__(self, engine: ServingEngine, *, slots=None,
-                 session: Optional[QueueSession] = None):
+                 session: Optional[QueueSession] = None,
+                 tracer: Optional[Tracer] = None):
         self.engine = engine
         self.session = session if session is not None else QueueSession(
             engine, slots=slots)
         self.handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._clock = time.perf_counter
+        # flight recorder on the wall clock (fleet clients trace through
+        # the runtime's control-loop tracer instead); timestamps are passed
+        # explicitly so a shared tracer's own clock is never clobbered
+        self.tracer = tracer if tracer is not None else Tracer.disabled()
 
     # -- lifecycle ------------------------------------------------------------
     def submit(self, request: InferenceRequest, *,
@@ -244,22 +250,36 @@ class EngineClient:
             slo_class=request.slo_class, priority=request.priority,
             deadline_s=request.deadline_s,
         )
-        handle = RequestHandle(request, rid, self, self._clock())
+        now = self._clock()
+        handle = RequestHandle(request, rid, self, now)
         self.handles[rid] = handle
+        self.tracer.event("req.queued", t=now, cat="req", rid=rid,
+                          prompt_len=request.prompt_len,
+                          max_new=int(request.max_new),
+                          slo=request.slo_class)
         return handle
 
     def tick(self) -> PumpReport:
         """One engine cycle: pump the session, stream the deltas."""
         report = self.session.pump()
         now = self._clock()
+        self.tracer.event("engine.pump", t=now, cat="engine", sampled=True,
+                          wall_s=report.wall_s, admit_s=report.admit_s,
+                          dispatch_s=report.dispatch_s, sync_s=report.sync_s,
+                          occupancy=report.occupancy)
         for rid, toks in report.tokens.items():
             h = self.handles.get(rid)
             if h is not None:
+                if h.first_token_t is None and len(toks):
+                    self.tracer.event("req.first_token", t=now, cat="req",
+                                      rid=rid)
                 h._feed(toks, now)
         for rid, arr in report.completed.items():
             h = self.handles.get(rid)
             if h is not None:
                 h._finish(arr, now)
+                self.tracer.event("req.completed", t=now, cat="req", rid=rid,
+                                  tokens=int(np.asarray(arr).size))
         return report
 
     _drive = tick                     # what starved handle iterators call
@@ -270,7 +290,9 @@ class EngineClient:
             return False                  # unknown rid: nothing to cancel
         hit = self.session.cancel(h.rid)
         if hit:
-            h._cancelled(self._clock())
+            now = self._clock()
+            h._cancelled(now)
+            self.tracer.event("req.cancelled", t=now, cat="req", rid=h.rid)
         return hit
 
     # -- introspection --------------------------------------------------------

@@ -568,6 +568,13 @@ class PumpReport:
     recovered_tokens: int = 0         # KV tokens resumed from injected frontiers
     recomputed_prefill_tokens: int = 0  # retry prompt tokens re-run through
                                       # the model (zero on a store hit)
+    # per-pump phase walls (the observability breakdown of ``wall_s``):
+    # admission (queue pops + prefill setup/dispatch in legacy mode),
+    # dispatch (jitted mixed-step / chunk-scan launches), host sync
+    # (device->host token transfers + per-token host accounting)
+    admit_s: float = 0.0
+    dispatch_s: float = 0.0
+    sync_s: float = 0.0
 
 
 class QueueSession:
@@ -1112,6 +1119,7 @@ class QueueSession:
             slots.admit(int(s), rid, max_new)
             report.admitted.append(rid)
         self._emit_restored(report)
+        report.admit_s = time.perf_counter() - t0
 
         report.occupancy = slots.occupancy
         if self.paged:
@@ -1128,6 +1136,7 @@ class QueueSession:
             return report
 
         # decode one chunk for the whole slot batch
+        t_disp = time.perf_counter()
         active = jnp.asarray(slots.request_id >= 0)
         if self.paged:
             self.cache, self.tok, self.lens, self.key, toks = eng._chunk_paged(
@@ -1139,6 +1148,8 @@ class QueueSession:
                 eng.params, self.cache, self.tok, self.lens, active,
                 self.key, chunk
             )
+        t_sync = time.perf_counter()
+        report.dispatch_s = t_sync - t_disp
         toks_np = np.asarray(toks)                    # ONE transfer per chunk
         n_slots = slots.n_slots
         for t in range(chunk):
@@ -1164,6 +1175,7 @@ class QueueSession:
             # admission-time peak
             report.page_occupancy = self.allocator.occupancy
             report.cached_pages = self.allocator.cached_pages
+        report.sync_s = time.perf_counter() - t_sync
         report.chunk_steps = chunk
         self._drain_recovery(report)
         report.wall_s = time.perf_counter() - t0
@@ -1380,6 +1392,7 @@ class QueueSession:
                 self._admit_mixed(s, rid, inp, max_new)
             report.admitted.append(rid)
         self._emit_restored(report)
+        report.admit_s = time.perf_counter() - t0
 
         decode_active = slots.request_id >= 0
         report.occupancy = (
@@ -1424,6 +1437,7 @@ class QueueSession:
         # is never donated), so the steps pipeline with no per-step sync.
         deferred_emits: List[Tuple[Any, List[Tuple[int, int]]]] = []
         deferred_done: List[int] = []
+        t_disp = time.perf_counter()
         while sched:
             decode_active = slots.request_id >= 0
             Q = eng.chunk_quantum(self.token_budget)    # the one chunk width
@@ -1515,6 +1529,8 @@ class QueueSession:
 
         # flush the deferred emitted-token reads (one D2H per step, all
         # issued after the dispatches), then the completions they finish
+        t_sync = time.perf_counter()
+        report.dispatch_s += t_sync - t_disp
         for tok_dev, pairs in deferred_emits:
             vals = np.asarray(tok_dev)
             for s, rid in pairs:
@@ -1524,10 +1540,12 @@ class QueueSession:
                 report.tokens.setdefault(rid, []).append(val)
         for rid in deferred_done:
             _complete(rid)
+        report.sync_s += time.perf_counter() - t_sync
 
         # ---- the decode chunk scan ----------------------------------------
         decode_active = slots.request_id >= 0
         if decode_active.any():
+            t_disp = time.perf_counter()
             active_j = jnp.asarray(decode_active)
             lens_dev = jnp.asarray(self._lens_host, jnp.int32)
             if self.paged:
@@ -1543,6 +1561,8 @@ class QueueSession:
             self._lens_host[decode_active] = np.minimum(
                 self._lens_host[decode_active] + chunk, eng.cfg.max_len - 1
             )
+            t_sync = time.perf_counter()
+            report.dispatch_s += t_sync - t_disp
             toks_np = np.asarray(toks)                # ONE transfer per chunk
             for t in range(chunk):
                 active = np.nonzero(slots.request_id >= 0)[0]
@@ -1557,6 +1577,7 @@ class QueueSession:
                 for rid in slots.step():
                     _complete(rid)
             report.chunk_steps = chunk
+            report.sync_s += time.perf_counter() - t_sync
 
         _paged_report_tail()
         self._drain_recovery(report)

@@ -1,0 +1,161 @@
+#!/usr/bin/env python
+"""fleet_top: a terminal table over a flight-recorder trace.
+
+Aggregates the JSONL event stream ``repro.obs.Tracer.dump_jsonl`` writes
+into a per-replica serving table plus a control-plane summary — ``top``
+for the fleet:
+
+    python tools/fleet_top.py fleet.jsonl            # one-shot table
+    python tools/fleet_top.py fleet.jsonl --follow   # re-render as the
+                                                     # file grows
+
+Columns: replica, tier, lifecycle state (last ``replica.*`` transition),
+requests dispatched / completed / requeued-away, last pump occupancy, and
+cumulative pump phase walls (admit/dispatch/sync — sampled, so they are a
+lower bound at ``trace_sample < 1``).  The footer summarizes the control
+plane: current mode, mode switches, scale decisions, failures, preemption
+notices, KV flush/restore traffic.
+
+Stdlib only (no curses): ``--follow`` clears the screen with ANSI codes,
+so it degrades gracefully when piped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, List
+
+
+class FleetTop:
+    """Streaming aggregator: ``feed(event)`` folds one trace event in,
+    ``render()`` returns the current table as text."""
+
+    def __init__(self) -> None:
+        self.t = 0.0
+        self.replicas: Dict[str, Dict[str, Any]] = {}
+        self.mode = None
+        self.mode_switches = 0
+        self.scale_events = 0
+        self.failures = 0
+        self.preemptions = 0
+        self.kv_flush_tokens = 0
+        self.kv_restore_tokens = 0
+        self.completed = 0
+        self.requeued = 0
+        self.dropped = 0
+
+    def _rep(self, name: str, tier: str = "?") -> Dict[str, Any]:
+        if name not in self.replicas:
+            self.replicas[name] = {
+                "tier": tier, "state": "?", "dispatched": 0, "completed": 0,
+                "requeued": 0, "occupancy": 0.0,
+                "admit_s": 0.0, "dispatch_s": 0.0, "sync_s": 0.0,
+            }
+        rep = self.replicas[name]
+        if tier != "?":
+            rep["tier"] = tier
+        return rep
+
+    def feed(self, ev: Dict[str, Any]) -> None:
+        name = ev.get("name", "")
+        self.t = max(self.t, float(ev.get("t", 0.0)))
+        replica = str(ev.get("replica", ""))
+        tier = str(ev.get("tier", "?"))
+        if name.startswith("replica."):
+            self._rep(replica, tier)["state"] = name.split(".", 1)[1]
+        elif name == "req.dispatched" or name == "req.hedged":
+            self._rep(replica, tier)["dispatched"] += 1
+        elif name == "req.completed":
+            self.completed += 1
+            if replica:
+                self._rep(replica, tier)["completed"] += 1
+        elif name == "req.requeued":
+            self.requeued += 1
+            if replica:
+                self._rep(replica, tier)["requeued"] += 1
+        elif name == "req.failed":
+            self.dropped += 1
+        elif name == "engine.pump" and replica:
+            rep = self._rep(replica, tier)
+            rep["occupancy"] = float(ev.get("occupancy", 0.0))
+            for k in ("admit_s", "dispatch_s", "sync_s"):
+                rep[k] += float(ev.get(k, 0.0))
+        elif name == "ctl.mode_switch":
+            self.mode = ev.get("mode")
+            self.mode_switches += 1
+        elif name == "ctl.scale":
+            self.scale_events += 1
+        elif name in ("ctl.replica_fail", "ctl.wedge_death"):
+            self.failures += 1
+        elif name in ("ctl.preempt_notice",):
+            self.preemptions += 1
+        elif name == "ctl.kv_flush":
+            self.kv_flush_tokens += int(ev.get("tokens", 0))
+        elif name == "ctl.kv_restore":
+            self.kv_restore_tokens += int(ev.get("tokens", 0))
+
+    def render(self) -> str:
+        cols = ["replica", "tier", "state", "disp", "done", "requeued",
+                "occ", "admit_s", "disp_s", "sync_s"]
+        rows: List[List[str]] = []
+        for name in sorted(self.replicas):
+            r = self.replicas[name]
+            rows.append([name, r["tier"], r["state"], str(r["dispatched"]),
+                         str(r["completed"]), str(r["requeued"]),
+                         f"{r['occupancy']:.2f}", f"{r['admit_s']:.3f}",
+                         f"{r['dispatch_s']:.3f}", f"{r['sync_s']:.3f}"])
+        widths = [max(len(c), *(len(row[i]) for row in rows))
+                  if rows else len(c) for i, c in enumerate(cols)]
+        lines = [f"fleet_top @ t={self.t:.1f}s — "
+                 f"{self.completed} completed, {self.requeued} requeued, "
+                 f"{self.dropped} dropped"]
+        lines.append("  ".join(c.ljust(w) for c, w in zip(cols, widths)))
+        lines.append("  ".join("-" * w for w in widths))
+        for row in rows:
+            lines.append("  ".join(v.ljust(w) for v, w in zip(row, widths)))
+        mode = {0: "cost", 1: "capacity"}.get(self.mode, "?")
+        lines.append(
+            f"control: mode={mode} switches={self.mode_switches} "
+            f"scale={self.scale_events} failures={self.failures} "
+            f"preemptions={self.preemptions} "
+            f"kv_flush={self.kv_flush_tokens}tok "
+            f"kv_restore={self.kv_restore_tokens}tok")
+        return "\n".join(lines)
+
+
+def _feed_lines(top: FleetTop, lines: List[str]) -> None:
+    for line in lines:
+        line = line.strip()
+        if line:
+            top.feed(json.loads(line))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("trace", help="JSONL trace from Tracer.dump_jsonl")
+    ap.add_argument("--follow", action="store_true",
+                    help="keep tailing the file, re-rendering on growth")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="--follow poll interval in seconds")
+    args = ap.parse_args(argv)
+
+    top = FleetTop()
+    with open(args.trace) as f:
+        _feed_lines(top, f.readlines())
+        print(top.render())
+        if not args.follow:
+            return 0
+        while True:
+            time.sleep(args.interval)
+            new = f.readlines()
+            if not new:
+                continue
+            _feed_lines(top, new)
+            sys.stdout.write("\x1b[2J\x1b[H" if sys.stdout.isatty() else "\n")
+            print(top.render())
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
