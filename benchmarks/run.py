@@ -26,6 +26,7 @@ MODULES = [
     ("beyond", "benchmarks.beyond_paper"),
     ("kernels", "benchmarks.kernels"),
     ("fleet", "benchmarks.fleet"),
+    ("economics", "benchmarks.economics"),
 ]
 
 

@@ -1,14 +1,14 @@
 """Fleet serving demo: the paper's control loop closed over LIVE replicas.
 
-A heterogeneous 2-tier fleet (cheap small-batch replicas vs premium
-large-batch replicas, same reduced qwen3-0.6b weights) serves a Poisson
-request trace while the control loop runs on MEASURED signals — EWMA
-per-replica throughput, queue depth, TTFT/TPOT from the telemetry bus —
-instead of the analytic Table-1 constants.  Mid-run, the cheap tier's
-capacity pool is pinned to zero (the Fig.-7 outage): its replicas are
-killed mid-decode, their in-flight requests requeue onto the premium tier,
-the controller flips to capacity-optimized on the measured shortfall, and
-flips back after recovery.
+Default drill — a heterogeneous 2-tier fleet (cheap small-batch replicas
+vs premium large-batch replicas, same reduced qwen3-0.6b weights) serves a
+Poisson request trace while the control loop runs on MEASURED signals —
+EWMA per-replica throughput, queue depth, TTFT/TPOT from the telemetry
+bus — instead of the analytic Table-1 constants.  Mid-run, the cheap
+tier's capacity pool is pinned to zero (the Fig.-7 outage): its replicas
+are killed mid-decode, their in-flight requests requeue onto the premium
+tier, the controller flips to capacity-optimized on the measured
+shortfall, and flips back after recovery.
 
 Driven through the STREAMING client API (``FleetClient``): every trace
 request becomes a live ``RequestHandle`` whose tokens arrive per tick —
@@ -23,8 +23,16 @@ The run asserts the PR's acceptance criteria:
   * handle-observed (first-token) p99 TTFT no worse than what a
     completion-only client would observe.
 
-    PYTHONPATH=src python examples/fleet_serving.py
+``--day`` runs the capacity-economics drill instead (docs/economics.md):
+the same miniature day-cycle A/B as ``benchmarks/economics.py`` — a
+spot-class tier plus a serverless-class burst tier over two compressed
+diurnal cycles with hard zero-traffic nights — once with reactive EWMA
+autoscaling and once with the forecast-aware controller, then prints the
+cost/SLO comparison table.
+
+    PYTHONPATH=src python examples/fleet_serving.py [--day]
 """
+import argparse
 import sys
 import time
 
@@ -36,7 +44,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import policy
 from repro.fleet.client import FleetClient
-from repro.fleet.runtime import build_demo_fleet
+from repro.fleet.runtime import build_day_fleet, build_demo_fleet
 from repro.models import Model
 from repro.serving import EngineConfig, ServingEngine
 from repro.serving.api import RequestStatus
@@ -45,98 +53,158 @@ N_REQUESTS = 80
 RATE = 2.0
 OUTAGE = (10.0, 25.0)
 
-print(f"fleet: 2 tiers (cheap x2 slots, premium x4 slots), "
-      f"{N_REQUESTS} requests @ {RATE}/s, cheap-tier outage t={OUTAGE}")
-rt = build_demo_fleet(n_requests=N_REQUESTS, rate=RATE, outage=OUTAGE)
-requests = list(rt.workload)
-client = FleetClient(rt)
-handles = client.adopt_workload()
-t0 = time.perf_counter()
-client.drain()
-wall = time.perf_counter() - t0
-report = rt.report()
-
-s = report.summary()
-print("\nper-request ledger:")
-print(f"  completed {int(s['requests_completed'])}/{N_REQUESTS}, "
-      f"dropped {int(s['requests_dropped'])}, "
-      f"retries after replica kills: {int(s['total_retries'])}")
-print(f"  p50 TTFT {s['p50_ttft_s']:.2f}s  p95 TTFT {s['p95_ttft_s']:.2f}s  "
-      f"mean TPOT {s['mean_tpot_s']:.3f}s")
-print(f"  accrued cost ${s['total_cost_usd']:.4f} over {report.ticks} ticks")
-tier_counts = report.requests.per_tier_counts()
-print(f"  served per tier: {tier_counts}")
-
-print("\ncontroller mode trace (0=cost-optimized, 1=capacity-optimized):")
-print(" ", [(round(t, 1), m) for t, m in report.mode_trace])
-seq = report.mode_sequence()
-
 
 def has_subsequence(seq, pattern):
     it = iter(seq)
     return all(any(x == want for x in it) for want in pattern)
 
 
-assert int(s["requests_dropped"]) == 0, "requests were lost!"
-assert int(s["requests_completed"]) == N_REQUESTS
-assert has_subsequence(seq, [policy.COST_OPTIMIZED,
-                             policy.CAPACITY_OPTIMIZED,
-                             policy.COST_OPTIMIZED]), seq
-assert seq[0] == policy.COST_OPTIMIZED
+def main_outage() -> None:
+    print(f"fleet: 2 tiers (cheap x2 slots, premium x4 slots), "
+          f"{N_REQUESTS} requests @ {RATE}/s, cheap-tier outage t={OUTAGE}")
+    rt = build_demo_fleet(n_requests=N_REQUESTS, rate=RATE, outage=OUTAGE)
+    requests = list(rt.workload)
+    client = FleetClient(rt)
+    handles = client.adopt_workload()
+    t0 = time.perf_counter()
+    client.drain()
+    wall = time.perf_counter() - t0
+    report = rt.report()
 
-# -- streaming handles: every request completed, TTFT observed at token 1 ---
-assert all(h.status is RequestStatus.COMPLETED for h in handles)
-recs = [h.record for h in handles]
-stream_p99 = float(np.percentile([r.ttft_s for r in recs], 99.0))
-compl_p99 = float(np.percentile([r.latency_s for r in recs], 99.0))
-print(f"\nstreaming: p99 TTFT {stream_p99:.2f}s at the first emitted token "
-      f"(a completion-only client observes {compl_p99:.2f}s)")
-assert stream_p99 <= compl_p99
+    s = report.summary()
+    print("\nper-request ledger:")
+    print(f"  completed {int(s['requests_completed'])}/{N_REQUESTS}, "
+          f"dropped {int(s['requests_dropped'])}, "
+          f"retries after replica kills: {int(s['total_retries'])}")
+    print(f"  p50 TTFT {s['p50_ttft_s']:.2f}s  p95 TTFT {s['p95_ttft_s']:.2f}s  "
+          f"mean TPOT {s['mean_tpot_s']:.3f}s")
+    print(f"  accrued cost ${s['total_cost_usd']:.4f} over {report.ticks} ticks")
+    tier_counts = report.requests.per_tier_counts()
+    print(f"  served per tier: {tier_counts}")
 
-# -- token-exactness: streamed handles == ONE bare engine, same requests ----
-cfg = get_config("qwen3-0.6b").reduce()
-model = Model(cfg)
-params = model.init(jax.random.key(0))
-bare = ServingEngine(model, params,
-                     EngineConfig(max_len=64, decode_batch=4, decode_chunk=4))
-batch = [(r.prompt, r.max_new) for r in requests]
-ref = bare.serve_queue(batch)
-by_rid = {h.rid: h for h in handles}
-mismatch = sum(
-    0 if (np.array_equal(report.outputs[r.rid], ref[i])
-          and np.array_equal(by_rid[r.rid].result(), ref[i])) else 1
-    for i, r in enumerate(requests)
-)
-assert mismatch == 0, f"{mismatch} requests decoded differently"
-print(f"token-exact: {len(requests)}/{len(requests)} streamed handles match "
-      f"the bare engine (through {int(s['total_retries'])} retries)")
+    print("\ncontroller mode trace (0=cost-optimized, 1=capacity-optimized):")
+    print(" ", [(round(t, 1), m) for t, m in report.mode_trace])
+    seq = report.mode_sequence()
 
-# -- goodput at EQUAL replica count -----------------------------------------
-# one fleet replica vs one bare engine, same slots, same saturating burst:
-# isolates the runtime's bookkeeping overhead from occupancy effects
-from repro.fleet.runtime import build_saturated_fleet
+    assert int(s["requests_dropped"]) == 0, "requests were lost!"
+    assert int(s["requests_completed"]) == N_REQUESTS
+    assert has_subsequence(seq, [policy.COST_OPTIMIZED,
+                                 policy.CAPACITY_OPTIMIZED,
+                                 policy.COST_OPTIMIZED]), seq
+    assert seq[0] == policy.COST_OPTIMIZED
 
-sat = build_saturated_fleet(n_requests=40, n_replicas=1, decode_batch=4)
-sat_reqs = [(r.prompt, r.max_new) for r in sat.workload]
-sat_report = sat.run()
-fleet_goodput = sat_report.goodput_tokens_per_s
+    # -- streaming handles: every request completed, TTFT at token 1 --------
+    assert all(h.status is RequestStatus.COMPLETED for h in handles)
+    recs = [h.record for h in handles]
+    stream_p99 = float(np.percentile([r.ttft_s for r in recs], 99.0))
+    compl_p99 = float(np.percentile([r.latency_s for r in recs], 99.0))
+    print(f"\nstreaming: p99 TTFT {stream_p99:.2f}s at the first emitted token "
+          f"(a completion-only client observes {compl_p99:.2f}s)")
+    assert stream_p99 <= compl_p99
 
-bare.serve_queue(sat_reqs[:2])                   # warm this shape
-t0 = time.perf_counter()
-ref2 = bare.serve_queue(sat_reqs)
-bare_wall = time.perf_counter() - t0
-bare_goodput = sum(v.size for v in ref2.values()) / bare_wall
+    # -- token-exactness: streamed handles == ONE bare engine ----------------
+    cfg = get_config("qwen3-0.6b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    bare = ServingEngine(model, params,
+                         EngineConfig(max_len=64, decode_batch=4, decode_chunk=4))
+    batch = [(r.prompt, r.max_new) for r in requests]
+    ref = bare.serve_queue(batch)
+    by_rid = {h.rid: h for h in handles}
+    mismatch = sum(
+        0 if (np.array_equal(report.outputs[r.rid], ref[i])
+              and np.array_equal(by_rid[r.rid].result(), ref[i])) else 1
+        for i, r in enumerate(requests)
+    )
+    assert mismatch == 0, f"{mismatch} requests decoded differently"
+    print(f"token-exact: {len(requests)}/{len(requests)} streamed handles match "
+          f"the bare engine (through {int(s['total_retries'])} retries)")
 
-print(f"goodput @ 1 replica, saturating burst: fleet {fleet_goodput:.0f} "
-      f"tok/s vs bare serve_queue {bare_goodput:.0f} tok/s "
-      f"({fleet_goodput / bare_goodput:.2f}x)")
-assert fleet_goodput * 2.0 >= bare_goodput, (
-    f"fleet goodput {fleet_goodput:.0f} not within 2x of bare "
-    f"{bare_goodput:.0f}")
+    # -- goodput at EQUAL replica count --------------------------------------
+    # one fleet replica vs one bare engine, same slots, same saturating
+    # burst: isolates the runtime's bookkeeping overhead from occupancy
+    from repro.fleet.runtime import build_saturated_fleet
 
-print(f"\nmeasured telemetry at end of run:")
-for tier, sig in report.telemetry.items():
-    print(f"  {tier}: {sig['rate_per_replica']:.2f} req/s/replica, "
-          f"occupancy {sig['occupancy']:.2f}, "
-          f"TTFT {sig['ttft_s']:.2f}s, TPOT {sig['tpot_s']:.3f}s")
-print(f"\nwall: {wall:.1f}s  |  fleet_serving OK")
+    sat = build_saturated_fleet(n_requests=40, n_replicas=1, decode_batch=4)
+    sat_reqs = [(r.prompt, r.max_new) for r in sat.workload]
+    sat_report = sat.run()
+    fleet_goodput = sat_report.goodput_tokens_per_s
+
+    bare.serve_queue(sat_reqs[:2])                   # warm this shape
+    t0 = time.perf_counter()
+    ref2 = bare.serve_queue(sat_reqs)
+    bare_wall = time.perf_counter() - t0
+    bare_goodput = sum(v.size for v in ref2.values()) / bare_wall
+
+    print(f"goodput @ 1 replica, saturating burst: fleet {fleet_goodput:.0f} "
+          f"tok/s vs bare serve_queue {bare_goodput:.0f} tok/s "
+          f"({fleet_goodput / bare_goodput:.2f}x)")
+    assert fleet_goodput * 2.0 >= bare_goodput, (
+        f"fleet goodput {fleet_goodput:.0f} not within 2x of bare "
+        f"{bare_goodput:.0f}")
+
+    print(f"\nmeasured telemetry at end of run:")
+    for tier, sig in report.telemetry.items():
+        print(f"  {tier}: {sig['rate_per_replica']:.2f} req/s/replica, "
+              f"occupancy {sig['occupancy']:.2f}, "
+              f"TTFT {sig['ttft_s']:.2f}s, TPOT {sig['tpot_s']:.3f}s")
+    print(f"\nwall: {wall:.1f}s  |  fleet_serving OK")
+
+
+def main_day() -> None:
+    print("capacity-economics drill: spot + serverless tiers, 2 compressed "
+          "day cycles\n(hard zero-traffic nights), reactive vs "
+          "forecast-aware autoscaling")
+    engines = {}
+    results = {}
+    for forecast in (False, True):
+        arm = "forecast" if forecast else "reactive"
+        rt = build_day_fleet(n_days=2, forecast=forecast, seed=0)
+        rt._engines.update(engines)      # one compile, both arms
+        t0 = time.perf_counter()
+        report = rt.run()
+        wall = time.perf_counter() - t0
+        engines.update(rt._engines)
+        assert not report.requests.dropped, f"{arm} arm dropped requests"
+        econ = report.economics()
+        results[arm] = {
+            "cost_usd": report.total_cost_usd,
+            "usd_per_1k_tokens": report.usd_per_1k_tokens,
+            "slo_attainment": report.slo_attainment(),
+            "completed": len(report.requests.records),
+            "cold_starts": int(sum(e["cold_starts"] for e in econ.values())),
+            "warm_promotions": int(sum(e["warm_promotions"]
+                                       for e in econ.values())),
+            "billable_replica_s": sum(e["billable_replica_s"]
+                                      for e in econ.values()),
+            "wall_s": wall,
+        }
+        print(f"  {arm}: {results[arm]['completed']} requests in "
+              f"{wall:.1f}s wall")
+
+    print(f"\n{'':<22}{'reactive':>12}{'forecast':>12}")
+    rows = [
+        ("requests completed", "completed", "{:d}"),
+        ("accrued cost ($)", "cost_usd", "{:.4f}"),
+        ("$/1k tokens", "usd_per_1k_tokens", "{:.4f}"),
+        ("SLO attainment", "slo_attainment", "{:.4f}"),
+        ("billable replica-s", "billable_replica_s", "{:.0f}"),
+        ("cold starts", "cold_starts", "{:d}"),
+    ]
+    for label, key, fmt in rows:
+        a, b = results["reactive"][key], results["forecast"][key]
+        print(f"{label:<22}{fmt.format(a):>12}{fmt.format(b):>12}")
+    saving = 1.0 - (results["forecast"]["usd_per_1k_tokens"]
+                    / results["reactive"]["usd_per_1k_tokens"])
+    print(f"\nforecast arm: {saving:.1%} cheaper per delivered token at "
+          f"SLO {results['forecast']['slo_attainment']:.4f} vs "
+          f"{results['reactive']['slo_attainment']:.4f}  |  day drill OK")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--day", action="store_true",
+                    help="run the day-cycle economics drill instead of the "
+                         "outage drill")
+    args = ap.parse_args()
+    main_day() if args.day else main_outage()

@@ -22,6 +22,11 @@ class AutoscalerConfig:
     max_replicas: int = 10_000
     scale_down_stabilization_s: float = 120.0
     scale_up_step: int = 64           # max replicas added per decision
+    scale_to_zero_eps: float = 0.0    # demand at/below this is ZERO demand:
+                                      # ceil() would otherwise pin one
+                                      # replica forever on the decaying tail
+                                      # of an EWMA that never quite reaches
+                                      # 0 (0.0 keeps that legacy behavior)
 
 
 @dataclass
@@ -36,7 +41,10 @@ class Autoscaler:
 
     def desired(self, t: float, assigned_rps: float) -> int:
         """Replica target for the RPS share routed to this DU."""
-        raw = ceil(assigned_rps / max(self.target_metric_value, 1e-9))
+        if assigned_rps <= self.config.scale_to_zero_eps:
+            raw = 0
+        else:
+            raw = ceil(assigned_rps / max(self.target_metric_value, 1e-9))
         raw = max(self.config.min_replicas, min(self.config.max_replicas, raw))
         if raw >= self.current:
             step = min(raw, self.current + self.config.scale_up_step)
@@ -50,6 +58,22 @@ class Autoscaler:
                 self._last_high_water = raw
                 self._high_water_time = t
             # else keep self.current
+        return self.current
+
+    def track(self, t: float, assigned_rps: float) -> int:
+        """Follow the signal directly, WITHOUT the scale-down stabilization
+        hold — for callers whose signal is already smooth (a seasonal
+        forecaster): the hold exists to damp reactive noise, and applying
+        it on top of a forecast just re-adds the lag the forecast removed.
+        Scale-up stepping and min/max clamps still apply."""
+        if assigned_rps <= self.config.scale_to_zero_eps:
+            raw = 0
+        else:
+            raw = ceil(assigned_rps / max(self.target_metric_value, 1e-9))
+        raw = max(self.config.min_replicas, min(self.config.max_replicas, raw))
+        self.current = min(raw, self.current + self.config.scale_up_step)
+        self._last_high_water = self.current
+        self._high_water_time = t
         return self.current
 
 

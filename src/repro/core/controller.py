@@ -46,6 +46,9 @@ class SwitchDecision:
     supply_possible: float = 0.0         # sum(pool * t_max)
     hold_supply: float = 0.0             # sum(min(requested, pool) * t_max)
     prev_mode: int = 0                   # mode before this evaluation
+    cost_rate: float = 0.0               # $/s the fleet was accruing at the
+                                         # evaluation (audit context only —
+                                         # the step does not branch on it)
 
 
 class ModeController:
@@ -78,6 +81,7 @@ class ModeController:
         requested: np.ndarray,
         pool: np.ndarray,
         measured_t_max: Optional[np.ndarray] = None,
+        cost_rate: float = 0.0,
     ) -> SwitchDecision:
         """Evaluate the binary step for one tick.
 
@@ -159,4 +163,5 @@ class ModeController:
             supply_possible=supply_possible,
             hold_supply=hold_supply,
             prev_mode=prev,
+            cost_rate=float(cost_rate),
         )

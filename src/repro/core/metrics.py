@@ -189,6 +189,23 @@ class RequestLog:
         vals = [r.tpot_s for r in self.records if r.tokens > 1]
         return float(np.mean(vals)) if vals else 0.0
 
+    def slo_attainment(self, targets: Dict[str, object]) -> float:
+        """Fraction of requests meeting BOTH their class's TTFT and
+        end-to-end latency targets (``targets`` maps class name to an
+        ``SLOClass``-shaped object; ``fleet.workload.SLO_TARGETS`` is the
+        canonical one).  Dropped requests count as misses; classes absent
+        from ``targets`` count as met (no target means no promise)."""
+        total = len(self.records) + len(self.dropped)
+        if total == 0:
+            return 1.0
+        met = 0
+        for r in self.records:
+            c = targets.get(r.slo_class)
+            if c is None or (r.ttft_s <= c.ttft_target_s
+                             and r.latency_s <= c.latency_target_s):
+                met += 1
+        return met / total
+
     def per_tier_counts(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
         for r in self.records:

@@ -18,15 +18,19 @@ retried on replica death, and accounted individually (``RequestLog``).
 """
 from repro.fleet.client import FleetClient  # noqa: F401
 from repro.fleet.dispatcher import Dispatcher  # noqa: F401
+from repro.fleet.forecast import SeasonalForecaster  # noqa: F401
 from repro.fleet.kv_store import KVStore, KVStoreStats  # noqa: F401
 from repro.fleet.replica import Replica, ReplicaState  # noqa: F401
 from repro.fleet.runtime import (  # noqa: F401
+    TIER_CLASSES,
     FailureEvent,
     FleetConfig,
     FleetReport,
     FleetRuntime,
     PreemptionEvent,
+    TierClassSpec,
     TierSpec,
+    build_day_fleet,
     build_demo_fleet,
     build_recovery_fleet,
 )
@@ -34,7 +38,10 @@ from repro.fleet.telemetry import Ewma, TelemetryBus  # noqa: F401
 from repro.fleet.workload import (  # noqa: F401
     BATCH,
     INTERACTIVE,
+    SLO_TARGETS,
     Request,
     SLOClass,
+    day_cycle_rate,
+    day_cycle_trace,
     poisson_trace,
 )

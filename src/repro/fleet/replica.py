@@ -113,6 +113,20 @@ class Replica:
         self.tracer.event("replica.wedged", cat="ctl",
                           replica=self.name, tier=self.tier)
 
+    def release(self) -> None:
+        """Instant clean termination of an IDLE replica — the path a spot
+        reclaim takes when its victim is a warm-pool standby (WARMING) or
+        ready with zero live requests: nothing to drain, nothing to
+        requeue, nothing to flush, so no ``PreemptionEvent`` machinery and
+        no ``req.requeued`` traces.  The node just goes away."""
+        assert self.load == 0, f"release() on loaded replica {self.name}"
+        self.preempt_deadline = None
+        self.state = ReplicaState.TERMINATED
+        self.session = None
+        self._trace_state()
+        if self._hb is not None and self._hb_id is not None:
+            self._hb.forget(self._hb_id)
+
     def fail(self) -> List[int]:
         """Kill mid-decode (spot reclaim / crash): the session dies with the
         replica; every incomplete rid is returned for requeueing."""

@@ -56,6 +56,45 @@ from repro.serving.engine import EngineConfig, ServingEngine
 logger = logging.getLogger(__name__)
 
 
+@dataclass(frozen=True)
+class TierClassSpec:
+    """Capacity economics of one procurement class: how a node of this
+    class is priced, how long it takes to appear, and whether the provider
+    can take it back.
+
+    ``cold_start_median_s = 0`` means "inherit the tier's flat
+    ``provision_delay_s``" (the legacy deterministic path); a positive
+    ``cold_start_sigma`` makes the delay lognormal around the median
+    (sampled per replica from a seeded RNG).  ``preemption_rate`` is the
+    expected reclaims per billable replica per MINUTE; reclaims arrive as
+    notices with ``preempt_notice_s`` of drain warning, feeding the durable
+    KV drain path (``docs/resilience.md``)."""
+
+    name: str
+    cost_multiplier: float = 1.0
+    cold_start_median_s: float = 0.0
+    cold_start_sigma: float = 0.0
+    preemption_rate: float = 0.0
+    preempt_notice_s: float = 2.0
+
+
+# the three procurement classes of the elastic-capacity model
+# (docs/economics.md): on-demand is the legacy behavior bit-for-bit —
+# flat price, flat provision delay, never reclaimed
+TIER_CLASSES: Dict[str, TierClassSpec] = {
+    "on_demand": TierClassSpec("on_demand"),
+    # serverless-like: fast, narrow cold starts; you pay for the privilege
+    "serverless": TierClassSpec("serverless", cost_multiplier=2.5,
+                                cold_start_median_s=1.0,
+                                cold_start_sigma=0.25),
+    # spot-like: deep discount, slow heavy-tailed starts, reclaims with
+    # notice (the PreemptionEvent drain path fires stochastically)
+    "spot": TierClassSpec("spot", cost_multiplier=0.35,
+                          cold_start_median_s=4.0, cold_start_sigma=0.5,
+                          preemption_rate=0.05, preempt_notice_s=2.0),
+}
+
+
 @dataclass
 class TierSpec:
     """One heterogeneous tier: the (arch, hardware-ish, engine-config)
@@ -85,6 +124,54 @@ class TierSpec:
                                       # cost-mode budget): admission-heavy
                                       # load trades TPOT for TTFT when the
                                       # controller is buying throughput
+    # -- capacity economics (docs/economics.md) -----------------------------
+    tier_class: str = "on_demand"     # TIER_CLASSES key: on_demand /
+                                      # serverless / spot
+    cold_start_s: Optional[float] = None      # median override (None =>
+                                              # class default, which itself
+                                              # falls back to
+                                              # provision_delay_s)
+    cold_start_sigma: Optional[float] = None  # lognormal spread override
+    preemption_rate: Optional[float] = None   # reclaims/replica/minute
+    preempt_notice_s: Optional[float] = None  # drain warning on reclaim
+    warm_pool: int = 0                # standby replicas kept pre-warmed
+                                      # (billable, instant promotion)
+    min_replicas: int = 0             # floor under the autoscaler (0 keeps
+                                      # scale-to-zero, the default)
+
+    def economics(self) -> TierClassSpec:
+        """The resolved procurement class: ``tier_class`` defaults with
+        this spec's per-field overrides applied, and a zero cold-start
+        median resolved to the flat ``provision_delay_s``."""
+        try:
+            base = TIER_CLASSES[self.tier_class]
+        except KeyError:
+            raise ValueError(
+                f"unknown tier_class {self.tier_class!r} for tier "
+                f"{self.name!r}; known: {sorted(TIER_CLASSES)}") from None
+        med = self.cold_start_s if self.cold_start_s is not None \
+            else (base.cold_start_median_s or self.provision_delay_s)
+        return TierClassSpec(
+            name=base.name,
+            cost_multiplier=base.cost_multiplier,
+            cold_start_median_s=med,
+            cold_start_sigma=(self.cold_start_sigma
+                              if self.cold_start_sigma is not None
+                              else base.cold_start_sigma),
+            preemption_rate=(self.preemption_rate
+                             if self.preemption_rate is not None
+                             else base.preemption_rate),
+            preempt_notice_s=(self.preempt_notice_s
+                              if self.preempt_notice_s is not None
+                              else base.preempt_notice_s),
+        )
+
+    @property
+    def effective_cost_per_hour(self) -> float:
+        """$/hr a billable replica actually accrues: the tier's base price
+        times its procurement class's multiplier."""
+        return self.cost_per_hour * TIER_CLASSES[self.tier_class].cost_multiplier \
+            if self.tier_class in TIER_CLASSES else self.cost_per_hour
 
     def profile(self) -> DUProfile:
         return DUProfile(
@@ -92,7 +179,7 @@ class TierSpec:
             model=self.arch,
             hardware=self.name,
             framework="jax-fleet",
-            cost_per_hour=self.cost_per_hour,
+            cost_per_hour=self.effective_cost_per_hour,
             t_max=self.nominal_t_max,
             latency_s=self.latency_s,
         )
@@ -146,6 +233,17 @@ class FleetConfig:
                                       # crashes (crash-loop guard)
     crash_backoff_max_s: float = 30.0
     crash_window_s: float = 20.0      # crashes older than this don't count
+    # -- forecast-aware autoscaling (docs/economics.md) ---------------------
+    forecast: bool = False            # A/B switch: provision ahead of the
+                                      # diurnal ramp instead of reacting
+    forecast_period_s: float = 0.0    # seasonal cycle length (required > 0
+                                      # when forecast=True)
+    forecast_buckets: int = 48        # phase resolution of the profile
+    forecast_margin: float = 1.15     # provision headroom over prediction
+    forecast_lead_s: float = 0.0      # how far ahead to read the profile
+                                      # (0 => per tier: cold-start median
+                                      # + one tick — exactly the lag a
+                                      # provision decision pays)
     # -- flight recorder ----------------------------------------------------
     trace: bool = True                # structured event tracing (obs.Tracer)
     trace_capacity: int = 1 << 16     # event ring size (oldest fall off)
@@ -183,6 +281,38 @@ class FleetReport:
     def mode_sequence(self) -> List[int]:
         return [m for _, m in self.mode_trace]
 
+    # -- capacity economics (docs/economics.md) -----------------------------
+    @property
+    def total_cost_usd(self) -> float:
+        """Class-priced cost integrated over billable replica-seconds."""
+        return self.metrics.total_cost()
+
+    @property
+    def usd_per_1k_tokens(self) -> float:
+        """The economics bench's headline: dollars per 1000 DELIVERED
+        tokens (inf when nothing was delivered)."""
+        toks = self.requests.goodput_tokens()
+        return 1000.0 * self.total_cost_usd / toks if toks else float("inf")
+
+    def slo_attainment(self, targets: Optional[Dict[str, object]] = None) -> float:
+        """Fraction of requests meeting their class's TTFT + latency
+        targets (``fleet.workload.SLO_TARGETS`` by default); dropped
+        requests count as misses."""
+        if targets is None:
+            from repro.fleet.workload import SLO_TARGETS
+            targets = SLO_TARGETS
+        return self.requests.slo_attainment(targets)
+
+    def economics(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier cost/elasticity totals (the telemetry snapshot's
+        economics slice): cost_usd, billable_replica_s, cold_starts,
+        cold_start_s, warm_promotions, preemptions, idle_released."""
+        keys = ("cost_usd", "billable_replica_s", "cold_starts",
+                "cold_start_s", "warm_promotions", "preemptions",
+                "idle_released")
+        return {tier: {k: v.get(k, 0.0) for k in keys}
+                for tier, v in self.telemetry.items()}
+
     def summary(self) -> Dict[str, float]:
         s = self.requests.summary()
         s.update(
@@ -191,6 +321,8 @@ class FleetReport:
             wasted_tokens=float(self.wasted_tokens),
             mode_changes=float(max(0, len(self.mode_trace) - 1)),
             total_cost_usd=self.metrics.total_cost(),
+            usd_per_1k_tokens=self.usd_per_1k_tokens,
+            slo_attainment=self.slo_attainment(),
             recovered_tokens=float(sum(
                 v.get("recovered_tokens", 0.0) for v in self.telemetry.values())),
             recomputed_prefill_tokens=float(sum(
@@ -217,14 +349,52 @@ class FleetRuntime:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tier names: {names}")
 
+        if self.cfg.forecast and self.cfg.forecast_period_s <= 0:
+            raise ValueError(
+                "FleetConfig.forecast=True requires forecast_period_s > 0")
+
+        # capacity economics: resolved procurement class per tier, plus the
+        # seeded RNGs behind sampled cold starts and stochastic reclaims
+        self._econ: Dict[str, TierClassSpec] = {
+            t.name: t.economics() for t in self.tiers}
+        self._preempt_rng: Dict[str, np.random.Generator] = {}
+        self._cost_rate = 0.0         # $/s accruing (updated every tick)
+
         self.pools: Dict[str, CapacityPool] = {}
-        for spec in self.tiers:
+        for i, spec in enumerate(self.tiers):
             pool = CapacityPool(base_capacity=spec.base_capacity,
                                 provision_delay_s=spec.provision_delay_s)
+            econ = self._econ[spec.name]
+            if (econ.cold_start_sigma > 0
+                    or econ.cold_start_median_s != spec.provision_delay_s):
+                # cold-start model: one sampled delay per replica, drawn
+                # from a per-tier seeded RNG and metered into telemetry at
+                # sample time; the flat-delay tiers keep the legacy
+                # grouped-pending path bit-for-bit
+                pool.delay_sampler = self._make_cold_start_sampler(spec, i)
+            if econ.preemption_rate > 0:
+                self._preempt_rng[spec.name] = np.random.default_rng(
+                    [self.cfg.seed, 13, i])
             pool.ready = min(spec.initial_replicas, spec.base_capacity)
             if pool_events and spec.name in pool_events:
                 pool.events.extend(pool_events[spec.name])
             self.pools[spec.name] = pool
+
+        # forecast-aware arm: one seasonal forecaster over the arrival EWMA,
+        # read ``lead_s`` ahead per tier (cold-start median + one tick, the
+        # exact lag a provisioning decision pays)
+        self.forecaster = None
+        self._lead_s: Dict[str, float] = {}
+        if self.cfg.forecast:
+            from repro.fleet.forecast import SeasonalForecaster
+
+            self.forecaster = SeasonalForecaster(
+                self.cfg.forecast_period_s, buckets=self.cfg.forecast_buckets)
+            for spec in self.tiers:
+                self._lead_s[spec.name] = (
+                    self.cfg.forecast_lead_s
+                    or self._econ[spec.name].cold_start_median_s
+                    + self.cfg.tick_s)
 
         self.controller = ModeController([t.profile() for t in self.tiers],
                                          self.cfg.controller)
@@ -376,6 +546,28 @@ class FleetRuntime:
             )
         return self._engines[spec.name]
 
+    def _make_cold_start_sampler(self, spec: TierSpec, idx: int):
+        """Per-tier cold-start delay sampler (deterministic: seeded from
+        ``(cfg.seed, tier index)``).  Each draw is one replica's
+        provisioning delay — lognormal around the class median, degenerate
+        when sigma is 0 — metered into telemetry and the flight recorder
+        at sample time (when the provision DECISION is made)."""
+        econ = self._econ[spec.name]
+        rng = np.random.default_rng([self.cfg.seed, 11, idx])
+        log_med = float(np.log(max(econ.cold_start_median_s, 1e-9)))
+
+        def sample() -> float:
+            if econ.cold_start_sigma > 0:
+                d = float(rng.lognormal(log_med, econ.cold_start_sigma))
+            else:
+                d = float(econ.cold_start_median_s)
+            self.telemetry.record_cold_start(spec.name, d)
+            self.tracer.event("replica.cold_start", cat="ctl",
+                              tier=spec.name, delay_s=d, klass=econ.name)
+            return d
+
+        return sample
+
     def _new_replica(self, spec: TierSpec) -> Replica:
         self._replica_counter += 1
         rep = Replica(f"{spec.name}/r{self._replica_counter}", spec.name,
@@ -472,6 +664,39 @@ class FleetRuntime:
                               tokens=accepted,
                               preempting=bool(rep.preempting))
 
+    def _preempt(self, spec: TierSpec, rep: Replica, deadline_t: float) -> None:
+        """One spot reclaim against ``rep`` (scripted ``PreemptionEvent``s
+        and the stochastic per-tick hazard share this path).
+
+        A victim carrying live requests gets the full notice machinery:
+        drain to the deadline, KV flush every pump, proactive pool
+        re-provision.  An IDLE victim — a warm-pool standby (WARMING) or a
+        ready replica with zero live requests — has nothing to drain: it
+        releases its node immediately, with no ``ctl.preempt_notice``, no
+        KV flush, and no ``req.requeued`` traces (there are no requests to
+        requeue, so emitting any would corrupt the request chains)."""
+        pool = self.pools[spec.name]
+        idle = rep.state == ReplicaState.WARMING or rep.load == 0
+        self.telemetry.record_preemption(spec.name, idle=idle)
+        if idle:
+            if rep.state == ReplicaState.READY:
+                pool.ready = max(0, pool.ready - 1)
+            elif pool.release_standby(1) == 0:
+                # a warming replica that is NOT standby stock mirrors an
+                # in-flight provision — cancel the newest cold start so the
+                # pipeline stays consistent with the replica set
+                pool.cancel_pending(1)
+            self.tracer.event("ctl.preempt_idle", tier=spec.name,
+                              replica=rep.name, state=rep.state.value)
+            rep.release()
+            self.telemetry.forget_replica(rep.name)
+            return
+        self.tracer.event("ctl.preempt_notice", tier=spec.name,
+                          replica=rep.name, deadline=deadline_t)
+        rep.preempt(deadline_t)
+        self._flush_replica(spec.name, rep)
+        pool.ready = max(0, pool.ready - 1)
+
     # -- pool<->replica reconciliation ---------------------------------------
     def _reconcile(self, spec: TierSpec) -> None:
         pool = self.pools[spec.name]
@@ -479,15 +704,18 @@ class FleetRuntime:
         reps[:] = [r for r in reps if r.state not in
                    (ReplicaState.FAILED, ReplicaState.TERMINATED)]
 
-        # warming set mirrors the pool's provisioning pipeline
+        # warming set mirrors the pool's provisioning pipeline PLUS the
+        # warm standby stock (a standby holds a node — billable — without
+        # taking traffic, which is exactly the WARMING state)
         warming = [r for r in reps if r.state in
                    (ReplicaState.PROVISIONING, ReplicaState.WARMING)]
-        while len(warming) < pool.inflight:
+        warm_target = pool.inflight + pool.warm + pool.warm_inflight
+        while len(warming) < warm_target:
             rep = self._new_replica(spec)
             rep.warm()
             warming.append(rep)
             reps.append(rep)
-        while len(warming) > pool.inflight:
+        while len(warming) > warm_target:
             victim = warming.pop()        # newest request cancelled first
             victim.drain()                # warming drain == terminate
 
@@ -568,19 +796,36 @@ class FleetRuntime:
         # 2b. preemption notices: victim drains with a deadline; its KV
         # flushes to the store at notice and on every pump until the kill.
         # pool.ready drops NOW so the autoscaler re-provisions proactively —
-        # the whole point of a notice.
+        # the whole point of a notice.  (Idle victims skip the machinery
+        # and just release — see _preempt.)
+        specs = {s.name: s for s in self.tiers}
         while self.preemptions and self.preemptions[0].t <= t:
             ev = self.preemptions.pop(0)
             victims = [r for r in self.replicas[ev.tier]
                        if r.state == ReplicaState.READY][-ev.count:]
             for rep in victims:
-                self.tracer.event("ctl.preempt_notice", tier=ev.tier,
-                                  replica=rep.name,
-                                  deadline=t + ev.deadline_s)
-                rep.preempt(t + ev.deadline_s)
-                self._flush_replica(ev.tier, rep)
-                pool = self.pools[ev.tier]
-                pool.ready = max(0, pool.ready - 1)
+                self._preempt(specs[ev.tier], rep, t + ev.deadline_s)
+
+        # 2b'. stochastic spot reclaims: every up node of a spot-class tier
+        # (ready replicas + warm standbys) faces an independent per-tick
+        # hazard of preemption_rate/min, drawn from a per-tier seeded RNG —
+        # the deterministic-under-seed model of a provider taking its
+        # discount hardware back
+        for spec in self.tiers:
+            rng = self._preempt_rng.get(spec.name)
+            if rng is None:
+                continue
+            econ = self._econ[spec.name]
+            p = min(1.0, econ.preemption_rate / 60.0 * cfg.tick_s)
+            reps = self.replicas[spec.name]
+            candidates = [r for r in reps
+                          if r.state == ReplicaState.READY and not r.preempting]
+            candidates += [r for r in reps
+                           if r.state == ReplicaState.WARMING
+                           ][:self.pools[spec.name].warm]
+            for rep in candidates:
+                if float(rng.random()) < p:
+                    self._preempt(spec, rep, t + econ.preempt_notice_s)
 
         # 2c. expired preemption deadlines: final flush, then the node is
         # gone — whatever didn't finish draining dies like a crash (but its
@@ -626,7 +871,8 @@ class FleetRuntime:
                              dtype=np.int64)
         measured = self.telemetry.measured_t_max(self._nominal)
         decision = self.controller.step(t, demand, requested, pool_cap,
-                                        measured_t_max=measured)
+                                        measured_t_max=measured,
+                                        cost_rate=self._cost_rate)
         if not self.mode_trace or self.mode_trace[-1][1] != decision.mode:
             self.mode_trace.append((t, decision.mode))
             # audit: the mode changed (or was first set) — record the full
@@ -646,6 +892,7 @@ class FleetRuntime:
                 hold_supply=float(decision.hold_supply),
                 hysteresis_margin=float(self.cfg.controller.hysteresis_margin),
                 weights=tuple(float(x) for x in decision.weights),
+                cost_rate=float(decision.cost_rate),
             )
             self.decisions.append(rec)
             self.tracer.event("ctl.mode_switch", mode=rec.mode,
@@ -738,11 +985,44 @@ class FleetRuntime:
                                    completions_per_tier, latency_sum)
         self.telemetry.roll(cfg.tick_s)
 
-        # 7. autoscaling toward the weighted share of measured demand
+        # 7. autoscaling toward the weighted share of measured demand — or,
+        # in the forecast arm, of the seasonal prediction read one
+        # provisioning-lag ahead (so replicas are READY when the ramp
+        # arrives, not requested when it is already here)
+        if self.forecaster is not None:
+            self.forecaster.observe(t, self._demand.get())
+            self.tracer.event("ctl.forecast",
+                              observed=round(self._demand.get(), 4),
+                              predicted=round(self.forecaster.peek(t), 4),
+                              ready=self.forecaster.ready)
         for i, spec in enumerate(self.tiers):
             a = self.autoscalers[spec.name]
             a.target_metric_value = max(0.8 * float(measured[i]), 1e-6)
-            want = a.desired(t, float(decision.weights[i]) * demand)
+            share = float(decision.weights[i])
+            # provision for the WORST of the lead window, not a point read:
+            # capacity bought now covers [now, now+lead], and a point read
+            # would scale down into every local dip of the profile
+            pred = (self.forecaster.predict_max(t, t + self._lead_s[spec.name])
+                    if self.forecaster is not None else None)
+            if pred is not None:
+                # provision for predicted arrivals (with headroom) or the
+                # LIVE demand signal, whichever is larger: the forecast
+                # only ever adds capacity ahead of the ramp, never starves
+                # real queued work below what reactive scaling would buy.
+                # The floor signal is already smooth where it matters, so
+                # the reactive stabilization hold would only re-add the
+                # scale-down lag the forecast exists to remove.  Backlog and
+                # recovery pressure (demand minus the bare arrival EWMA) ride
+                # ON TOP of the prediction: queued work is real even when the
+                # profile says the hour should be quiet
+                pressure = demand - self._demand.get()
+                eff = max(cfg.forecast_margin * pred + pressure, demand)
+                want = a.track(t, share * eff)
+            else:
+                # reactive arm (and the forecast arm's whole first cycle,
+                # before the profile exists)
+                want = a.desired(t, share * demand)
+            want = max(want, spec.min_replicas)
             pool = self.pools[spec.name]
             if t < self._hold_until.get(spec.name, 0.0):
                 # crash-loop hold: keep what exists, provision nothing new
@@ -753,7 +1033,20 @@ class FleetRuntime:
                                   ready=int(pool.ready),
                                   inflight=int(pool.inflight))
                 self._last_want[spec.name] = int(want)
-            pool.request(t, want)
+            promoted = pool.request(t, want)
+            if promoted:
+                # warm standbys answered the scale-up instantly (no cold
+                # start) — the TTFT the warm pool's standby cost bought
+                self.telemetry.record_warm_promotion(spec.name, promoted)
+                self.tracer.event("ctl.warm_pool", tier=spec.name,
+                                  action="promote", n=int(promoted),
+                                  warm=int(pool.warm))
+            started = pool.stock_warm(t, spec.warm_pool)
+            if started:
+                self.tracer.event("ctl.warm_pool", tier=spec.name,
+                                  action="stock", n=int(started),
+                                  warm=int(pool.warm),
+                                  warm_inflight=int(pool.warm_inflight))
 
         # 8. metrics
         names = [s.name for s in self.tiers]
@@ -768,9 +1061,13 @@ class FleetRuntime:
                          for n in names])
         billable = np.array([sum(1 for r in self.replicas[n] if r.billable)
                              for n in names])
-        cost_rate = float(np.sum(
-            billable * np.array([s.cost_per_hour for s in self.tiers])
-        ) / 3600.0)
+        rates = np.array([s.effective_cost_per_hour for s in self.tiers])
+        cost_rate = float(np.sum(billable * rates) / 3600.0)
+        self._cost_rate = cost_rate
+        for i, n in enumerate(names):
+            self.telemetry.record_cost(
+                n, int(billable[i]),
+                float(billable[i] * rates[i]) / 3600.0, cfg.tick_s)
         self.metrics.append(TickRecord(
             t=t, demand_rps=demand, mode=int(decision.mode),
             weights=decision.weights.copy(), ready=ready, served_rps=served,
@@ -1093,7 +1390,13 @@ def build_recovery_fleet(
                     initial_replicas=n_replicas,
                     provision_delay_s=2.0, paged_kv=True,
                     page_size=page_size, num_pages=num_pages,
-                    prefill_chunk=64)
+                    prefill_chunk=64,
+                    # spot-CLASS pricing and notice semantics, but with the
+                    # stochastic hazard off and the cold start pinned flat:
+                    # the drill's kills/preemptions stay fully scripted and
+                    # its timing byte-identical to the pre-economics runs
+                    tier_class="spot", cold_start_s=2.0, cold_start_sigma=0.0,
+                    preemption_rate=0.0)
     failures = [FailureEvent(t=kt, tier="spot") for kt in kill_ts]
     preemptions = ([PreemptionEvent(t=preempt_t, tier="spot",
                                     deadline_s=preempt_deadline_s)]
@@ -1104,6 +1407,76 @@ def build_recovery_fleet(
                     max_retries=8),
         failures=failures,
         preemptions=preemptions,
+    )
+
+
+def build_day_fleet(
+    *,
+    arch: str = "qwen3-0.6b",
+    n_days: int = 2,
+    period_s: float = 120.0,
+    base_rps: float = 0.6,
+    peak_rps: float = 3.0,
+    night_frac: float = 0.3,
+    forecast: bool = False,
+    warm_pool: int = 0,
+    spot_cold_start_s: float = 5.0,
+    preemption_rate: float = 0.0,
+    seed: int = 0,
+) -> FleetRuntime:
+    """The capacity-economics A/B fleet: a cheap spot-class tier (slow cold
+    starts) plus an expensive serverless-class tier (fast starts), fed
+    ``n_days`` compressed diurnal cycles with hard zero-traffic nights.
+
+    Build it twice — ``forecast=False`` (reactive EWMA autoscaling) and
+    ``forecast=True`` (seasonal provisioning one cold-start ahead) — on the
+    same seed and the arms see the identical trace; the difference in
+    ``usd_per_1k_tokens`` / ``slo_attainment()`` is pure controller.
+    ``preemption_rate=0`` keeps the A/B deterministic; turn it up to also
+    exercise the stochastic spot-reclaim drain path.
+    """
+    from repro.configs import get_config
+    from repro.fleet.workload import day_cycle_trace
+
+    vocab = get_config(arch).reduce().vocab_size
+    workload = day_cycle_trace(
+        n_days, vocab_size=vocab, period_s=period_s, base_rps=base_rps,
+        peak_rps=peak_rps, night_frac=night_frac,
+        prompt_len=(8, 8), max_new=(4, 12), seed=seed,
+    )
+    tiers = [
+        # spot class: 0.35x multiplier makes this the cost-mode workhorse;
+        # the price is a slow provision (the morning-ramp trap the
+        # forecast arm exists to avoid)
+        TierSpec(name="spot", arch=arch, tier_class="spot",
+                 cost_per_hour=3.0, nominal_t_max=1.0, latency_s=2.0,
+                 decode_batch=2, decode_chunk=4, queue_limit=6,
+                 base_capacity=6, initial_replicas=1,
+                 cold_start_s=spot_cold_start_s, cold_start_sigma=0.0,
+                 preemption_rate=preemption_rate, warm_pool=warm_pool,
+                 page_size=8),
+        # serverless class: 2.5x multiplier, near-instant starts — the
+        # burst absorber the controller spills to when spot lags
+        TierSpec(name="burst", arch=arch, tier_class="serverless",
+                 cost_per_hour=3.0, nominal_t_max=2.0, latency_s=1.0,
+                 decode_batch=4, decode_chunk=4, queue_limit=8,
+                 base_capacity=4, initial_replicas=0,
+                 cold_start_s=1.0, cold_start_sigma=0.0,
+                 page_size=8),
+    ]
+    return FleetRuntime(
+        tiers, workload,
+        FleetConfig(
+            seed=seed,
+            forecast=forecast, forecast_period_s=period_s,
+            controller=ControllerConfig(hysteresis_margin=0.25,
+                                        min_dwell_s=4.0),
+            # true scale-to-zero on the hard night gaps: without the
+            # epsilon, ceil() of the decaying arrival EWMA pins one
+            # replica per tier all night and the idle window bills anyway
+            autoscaler=AutoscalerConfig(scale_down_stabilization_s=10.0,
+                                        scale_to_zero_eps=0.05),
+        ),
     )
 
 

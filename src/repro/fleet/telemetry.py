@@ -114,6 +114,16 @@ class TelemetryBus:
         self.tier_flush_s: Dict[str, float] = {t: 0.0 for t in tiers}
         self.tier_flush_tokens: Dict[str, int] = {t: 0 for t in tiers}
         self.tier_backoffs: Dict[str, int] = {t: 0 for t in tiers}  # crash-loop holds
+        # capacity economics: cumulative cost/elasticity totals per tier
+        # (exact counts the economics bench and the scale-to-zero regression
+        # assert on — not EWMAs)
+        self.tier_cost_usd: Dict[str, float] = {t: 0.0 for t in tiers}
+        self.tier_billable_s: Dict[str, float] = {t: 0.0 for t in tiers}
+        self.tier_cold_starts: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_cold_start_s: Dict[str, float] = {t: 0.0 for t in tiers}
+        self.tier_warm_promotions: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_preemptions: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_idle_released: Dict[str, int] = {t: 0 for t in tiers}
         # structured metrics: fixed-bucket histograms give the snapshot's
         # EWMA levels a distribution (real p50/p90/p99, mergeable across
         # runs) and the cumulative dicts above a Prometheus exposition
@@ -133,6 +143,21 @@ class TelemetryBus:
             labels=("tier",))
         self._c_backoffs = self.metrics.counter(
             "fleet_crash_backoffs_total", "crash-loop provisioning holds",
+            labels=("tier",))
+        self._c_cost = self.metrics.counter(
+            "fleet_cost_usd_total", "accrued replica cost (USD)",
+            labels=("tier",))
+        self._c_billable = self.metrics.counter(
+            "fleet_billable_replica_seconds_total",
+            "replica-seconds holding a node", labels=("tier",))
+        self._c_cold_starts = self.metrics.counter(
+            "fleet_cold_starts_total", "replica cold starts begun",
+            labels=("tier",))
+        self._c_warm_promotions = self.metrics.counter(
+            "fleet_warm_promotions_total",
+            "warm standbys promoted to serving", labels=("tier",))
+        self._c_preemptions = self.metrics.counter(
+            "fleet_preemptions_total", "spot preemption notices delivered",
             labels=("tier",))
 
     # -- ingestion ----------------------------------------------------------
@@ -217,6 +242,37 @@ class TelemetryBus:
         self.tier_backoffs[tier] += 1
         self._c_backoffs.labels(tier).inc()
 
+    # -- capacity economics -------------------------------------------------
+    def record_cost(self, tier: str, billable: int, cost_rate: float,
+                    tick_s: float) -> None:
+        """One tick of accrual: ``billable`` replicas holding nodes at
+        ``cost_rate`` $/s for ``tick_s`` seconds of control-loop time."""
+        self.tier_billable_s[tier] += billable * tick_s
+        self.tier_cost_usd[tier] += cost_rate * tick_s
+        if billable:
+            self._c_billable.labels(tier).inc(billable * tick_s)
+        if cost_rate > 0:
+            self._c_cost.labels(tier).inc(cost_rate * tick_s)
+
+    def record_cold_start(self, tier: str, delay_s: float) -> None:
+        """A replica cold start began, paying ``delay_s`` before ready."""
+        self.tier_cold_starts[tier] += 1
+        self.tier_cold_start_s[tier] += float(delay_s)
+        self._c_cold_starts.labels(tier).inc()
+
+    def record_warm_promotion(self, tier: str, n: int = 1) -> None:
+        """``n`` warm standbys promoted to serving (cold start skipped)."""
+        self.tier_warm_promotions[tier] += int(n)
+        self._c_warm_promotions.labels(tier).inc(int(n))
+
+    def record_preemption(self, tier: str, *, idle: bool) -> None:
+        """A spot reclaim hit this tier; ``idle`` victims (standby or
+        no live work) released without the drain machinery."""
+        self.tier_preemptions[tier] += 1
+        self._c_preemptions.labels(tier).inc()
+        if idle:
+            self.tier_idle_released[tier] += 1
+
     def forget_replica(self, replica_name: str) -> None:
         self.replica.pop(replica_name, None)
 
@@ -278,6 +334,13 @@ class TelemetryBus:
                 "kv_flush_s": self.tier_flush_s[tier],
                 "kv_flush_tokens": float(self.tier_flush_tokens[tier]),
                 "crash_backoffs": float(self.tier_backoffs[tier]),
+                "cost_usd": self.tier_cost_usd[tier],
+                "billable_replica_s": self.tier_billable_s[tier],
+                "cold_starts": float(self.tier_cold_starts[tier]),
+                "cold_start_s": self.tier_cold_start_s[tier],
+                "warm_promotions": float(self.tier_warm_promotions[tier]),
+                "preemptions": float(self.tier_preemptions[tier]),
+                "idle_released": float(self.tier_idle_released[tier]),
             }
             for tier in self.tiers
         }

@@ -32,6 +32,10 @@ INTERACTIVE = SLOClass("interactive", ttft_target_s=2.0,
 BATCH = SLOClass("batch", ttft_target_s=30.0,
                  latency_target_s=120.0, weight=0.3)
 
+# class-name -> SLOClass, the targets ``RequestLog.slo_attainment`` scores
+# against (the economics bench's SLO axis)
+SLO_TARGETS = {c.name: c for c in (INTERACTIVE, BATCH)}
+
 
 @dataclass
 class Request:
@@ -115,13 +119,15 @@ def poisson_trace(
     classes: Sequence[SLOClass] = (INTERACTIVE, BATCH),
     seed: int = 0,
     n_max: Optional[int] = None,
+    max_rate: Optional[float] = None,
 ) -> List[Request]:
     """Sample a full request trace: Poisson arrivals + per-request shapes.
 
     ``prompt_len``/``max_new`` are inclusive [lo, hi] ranges; SLO classes
     are drawn by ``weight``.  Deterministic for a given seed.
     """
-    times = poisson_arrival_times(rate_fn, duration_s, seed=seed)
+    times = poisson_arrival_times(rate_fn, duration_s, seed=seed,
+                                  max_rate=max_rate)
     if n_max is not None:
         times = times[:n_max]
     rng = np.random.default_rng(seed + 1)
@@ -136,6 +142,58 @@ def poisson_trace(
         reqs.append(Request(rid=rid, arrival_t=float(t), prompt=prompt,
                             max_new=new, slo_class=cls.name))
     return reqs
+
+
+def day_cycle_rate(
+    base_rps: float,
+    peak_rps: float,
+    *,
+    period_s: float = 86400.0,
+    night_frac: float = 0.25,
+) -> Callable[[float], float]:
+    """One simulated day, repeating: a HARD zero-traffic night window over
+    the first ``night_frac`` of each period (the scale-to-zero opportunity),
+    then a sin² daytime hump ramping base → peak → base.
+
+    Unlike ``core.simulator.diurnal_cycle`` (which never touches zero), the
+    night gap here is exactly 0 RPS — the workload where releasing every
+    replica is the right answer and holding one is pure standby cost.
+    """
+    if not 0.0 < night_frac < 1.0:
+        raise ValueError(f"night_frac must be in (0, 1), got {night_frac}")
+
+    def rate(t: float) -> float:
+        phase = (t % period_s) / period_s
+        if phase < night_frac:
+            return 0.0
+        x = (phase - night_frac) / (1.0 - night_frac)
+        return base_rps + (peak_rps - base_rps) * float(np.sin(np.pi * x)) ** 2
+
+    return rate
+
+
+def day_cycle_trace(
+    n_days: int,
+    *,
+    vocab_size: int,
+    period_s: float = 240.0,
+    base_rps: float = 0.5,
+    peak_rps: float = 4.0,
+    night_frac: float = 0.25,
+    prompt_len: Tuple[int, int] = (8, 16),
+    max_new: Tuple[int, int] = (4, 16),
+    classes: Sequence[SLOClass] = (INTERACTIVE, BATCH),
+    seed: int = 0,
+) -> List[Request]:
+    """``n_days`` compressed diurnal cycles of Poisson arrivals over
+    ``day_cycle_rate`` — zero-traffic night gaps included, deterministic
+    under ``seed`` (the forecast-vs-reactive A/B runs the SAME trace)."""
+    rate = day_cycle_rate(base_rps, peak_rps,
+                          period_s=period_s, night_frac=night_frac)
+    return poisson_trace(rate, n_days * period_s, vocab_size=vocab_size,
+                         prompt_len=prompt_len, max_new=max_new,
+                         classes=classes, seed=seed,
+                         max_rate=peak_rps * 1.05)
 
 
 def shared_prefix_trace(

@@ -42,6 +42,10 @@ class DecisionRecord:
     hold_supply: float                # sum(min(requested, pool) * t_max)
     hysteresis_margin: float
     weights: Tuple[float, ...] = ()
+    cost_rate: float = 0.0            # $/s accruing at the evaluation —
+                                      # audit context (the step never
+                                      # branches on it, so ``explains()``
+                                      # ignores it by construction)
 
     def signals(self) -> Dict[str, object]:
         """The signal vector as a flat dict (what the tracer logs)."""
@@ -54,6 +58,7 @@ class DecisionRecord:
             "cap_violated": self.cap_violated,
             "supply_possible": self.supply_possible,
             "hold_supply": self.hold_supply,
+            "cost_rate": self.cost_rate,
         }
 
     def explains(self) -> bool:

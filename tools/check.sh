@@ -16,6 +16,9 @@ fi
 echo "== API-surface drift gate (repro.serving / repro.fleet) =="
 python tools/api_surface.py --check
 
+echo "== docs gate (links resolve, snippets compile, index complete) =="
+python tools/check_docs.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Docs hygiene gate (CI fast lane; also in ``tools/check.sh``).
+
+Three checks over ``docs/*.md`` (plus ``README.md`` for snippets):
+
+1. **Links resolve** — every relative markdown link target exists on
+   disk (resolved against the linking file's directory, fragments
+   stripped).  External links (``http(s)://``, ``mailto:``) are ignored;
+   a doc page is not the place to gate the internet.
+2. **Python snippets compile** — every fenced ```` ```python ```` block
+   must ``ast.parse``.  Snippets are allowed to *elide* (``...`` is
+   valid Python); they are not allowed to be syntactically wrong, which
+   is how example code rots.
+3. **Index completeness** — ``docs/index.md`` links every file that
+   lives in ``docs/`` (the map stays the map).
+
+Exit 0 when clean, 1 with one line per violation otherwise.
+
+    python tools/check_docs.py [--root /path/to/repo]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must resolve too
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def extract_links(text: str) -> list:
+    """Relative link targets, fragments stripped, externals dropped."""
+    out = []
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue                  # code blocks aren't hypertext
+        for target in _LINK_RE.findall(line):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            out.append(target.split("#", 1)[0])
+    return out
+
+
+def extract_snippets(text: str) -> list:
+    """(first_line_number, source) for every fenced ```python block."""
+    snippets = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if m and m.group(1) == "python":
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            snippets.append((start + 1, "\n".join(body)))
+        i += 1
+    return snippets
+
+
+def check(root: Path) -> list:
+    docs = root / "docs"
+    errors = []
+    pages = sorted(docs.glob("*.md"))
+    if not pages:
+        return [f"{docs}: no markdown files found (wrong --root?)"]
+
+    for page in pages + [root / "README.md"]:
+        if not page.exists():
+            continue
+        text = page.read_text()
+        rel = page.relative_to(root)
+        for target in extract_links(text):
+            resolved = (page.parent / target).resolve()
+            if not resolved.is_relative_to(root.resolve()):
+                # escapes the checkout (e.g. GitHub's ../../actions/...
+                # badge URLs) — not an intra-repo link, not ours to gate
+                continue
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+        for lineno, src in extract_snippets(text):
+            try:
+                ast.parse(src)
+            except SyntaxError as exc:
+                errors.append(
+                    f"{rel}:{lineno}: python snippet does not compile: {exc}")
+
+    index = docs / "index.md"
+    if not index.exists():
+        errors.append("docs/index.md: missing (the map must exist)")
+    else:
+        linked = {Path(t).name for t in extract_links(index.read_text())}
+        for f in sorted(docs.iterdir()):
+            if f.name == "index.md" or not f.is_file():
+                continue
+            if f.name not in linked:
+                errors.append(f"docs/index.md: does not link docs/{f.name}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(Path(__file__).resolve().parent.parent),
+                    help="repo root (default: the checkout containing this file)")
+    args = ap.parse_args(argv)
+    errors = check(Path(args.root))
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    n_pages = len(list((Path(args.root) / 'docs').glob('*.md')))
+    if not errors:
+        print(f"check_docs: OK ({n_pages} pages)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
