@@ -51,6 +51,24 @@ class SwitchDecision:
                                          # the step does not branch on it)
 
 
+def speculation_k(mode: int, spec_k: int, accept_rate: Optional[float],
+                  accept_floor: float = 0.3) -> int:
+    """The speculative-decode depth the mode controller grants a tier.
+
+    Speculation trades compute for latency: drafted-but-rejected tokens
+    burn step capacity that capacity-optimized mode needs for admission,
+    and a tier whose measured acceptance EWMA sits under ``accept_floor``
+    is paying the wide verify dispatch for nothing.  Either condition
+    drives k to 0 — goodput is never spent on a losing bet.  ``None``
+    acceptance (no drafted round measured yet) grants the configured k:
+    the signal has to come from somewhere."""
+    if spec_k <= 0 or mode == policy.CAPACITY_OPTIMIZED:
+        return 0
+    if accept_rate is not None and accept_rate < accept_floor:
+        return 0
+    return int(spec_k)
+
+
 class ModeController:
     """Stateful wrapper around the jittable policy math."""
 

@@ -59,6 +59,10 @@ class Replica:
         # flight recorder (runtime-owned; disabled stub when standalone so
         # every transition site emits unconditionally)
         self.tracer: Tracer = Tracer.disabled()
+        # controller-commanded speculative depth, remembered across the
+        # session-less window (None = never commanded: the session keeps
+        # the engine-config default)
+        self._spec_k_cmd: Optional[int] = None
 
     def _trace_state(self) -> None:
         self.tracer.event(f"replica.{self.state.value}", cat="ctl",
@@ -71,6 +75,12 @@ class Replica:
     def warm(self) -> None:
         assert self.state == ReplicaState.PROVISIONING, self.state
         self.session = QueueSession(self.engine)
+        if self._spec_k_cmd is not None:
+            # the controller commanded a depth before this session existed
+            # (tick 0, or a replica provisioned mid-run): a session born
+            # under capacity pressure must not speculate at the config
+            # ceiling until the next controller edge
+            self.session.spec_k = self._spec_k_cmd
         self.state = ReplicaState.WARMING
         self._trace_state()
 
@@ -163,6 +173,16 @@ class Replica:
         bucket.  No-op while the replica holds no session."""
         if self.session is not None:
             self.session.token_budget = max(1, int(budget))
+
+    def set_speculation(self, k: int) -> None:
+        """Retune the speculative-decode draft depth on the live session —
+        the controller's compute-for-latency knob, live like
+        ``set_chunk_budget`` (traces key on the pow-2 spec quantum, so no
+        recompilation).  k=0 disables drafting entirely; remembered while
+        the replica holds no session and applied when one is created."""
+        self._spec_k_cmd = max(0, int(k))
+        if self.session is not None:
+            self.session.spec_k = self._spec_k_cmd
 
     @property
     def live(self) -> bool:

@@ -41,7 +41,8 @@ import numpy as np
 from repro.core import policy
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig
 from repro.core.capacity import CapacityEvent, CapacityPool, synthetic_outage
-from repro.core.controller import ControllerConfig, ModeController
+from repro.core.controller import (ControllerConfig, ModeController,
+                                   speculation_k)
 from repro.core.deployment import DUProfile
 from repro.core.metrics import MetricsLog, RequestLog, RequestRecord, TickRecord
 from repro.distributed.fault_tolerance import HeartbeatMonitor
@@ -124,6 +125,19 @@ class TierSpec:
                                       # cost-mode budget): admission-heavy
                                       # load trades TPOT for TTFT when the
                                       # controller is buying throughput
+    spec_k: int = 0                   # speculative draft depth (0 = off);
+                                      # the CONFIGURED ceiling — the mode
+                                      # controller retunes the live value
+                                      # between 0 and this every tick
+    spec_accept_floor: float = 0.3    # tier acceptance EWMA below which
+                                      # the controller drives k -> 0
+    model_overrides: Optional[Dict[str, object]] = None
+                                      # ModelConfig field overrides applied
+                                      # on top of get_config(arch).reduce()
+                                      # (dataclasses.replace) — the decode-
+                                      # bound benches size the model so the
+                                      # wide verify step has real compute
+                                      # to amortize
     # -- capacity economics (docs/economics.md) -----------------------------
     tier_class: str = "on_demand"     # TIER_CLASSES key: on_demand /
                                       # serverless / spot
@@ -450,6 +464,7 @@ class FleetRuntime:
         self._crash_t: Dict[str, List[float]] = {}
         self._hold_until: Dict[str, float] = {}
         self._last_want: Dict[str, int] = {}   # autoscale-change edge detect
+        self._spec_k_live: Dict[str, int] = {}  # speculation-change edge detect
         self._backoff_rng = np.random.default_rng(self.cfg.seed + 7)
         # (replica, rid) -> frontier length at last checkpoint (the
         # incremental-flush cursor)
@@ -524,9 +539,15 @@ class FleetRuntime:
             from repro.configs import get_config
             from repro.models import Model
 
-            mkey = (spec.arch, spec.param_seed)
+            overrides = dict(spec.model_overrides or {})
+            mkey = (spec.arch, spec.param_seed,
+                    tuple(sorted(overrides.items())))
             if mkey not in self._model_cache:
+                import dataclasses
+
                 cfg = get_config(spec.arch).reduce()
+                if overrides:
+                    cfg = dataclasses.replace(cfg, **overrides)
                 model = Model(cfg)
                 params = model.init(jax.random.key(spec.param_seed))
                 self._model_cache[mkey] = (model, params)
@@ -542,7 +563,8 @@ class FleetRuntime:
                              paged_kv=spec.paged_kv,
                              page_size=spec.page_size,
                              num_pages=spec.num_pages,
-                             prefix_reuse=spec.prefix_reuse),
+                             prefix_reuse=spec.prefix_reuse,
+                             spec_k=spec.spec_k),
             )
         return self._engines[spec.name]
 
@@ -912,6 +934,32 @@ class FleetRuntime:
             for rep in self.replicas[spec.name]:
                 rep.set_chunk_budget(budget)
 
+        # 4c. mode + measured acceptance drive the speculation depth:
+        # capacity mode (or an acceptance EWMA under the tier floor) means
+        # rejected drafts would burn step capacity admission needs, so the
+        # controller shrinks k to 0 — speculation never costs goodput under
+        # pressure.  Live retune like the chunk budget (pow-2 spec-quantum
+        # trace buckets, no recompilation).
+        for spec in self.tiers:
+            if not spec.mixed_step:
+                continue
+            accept = self.telemetry.tier_spec_accept[spec.name].value
+            k = speculation_k(decision.mode, spec.spec_k, accept,
+                              spec.spec_accept_floor)
+            # a spec-disabled tier is still COMMANDED k=0 every tick: its
+            # sessions may ride an engine whose config carries a nonzero
+            # default (benches share one compiled engine across A/B arms),
+            # and the controller owns the knob either way
+            if spec.spec_k > 0 and self._spec_k_live.get(spec.name) != k:
+                self._spec_k_live[spec.name] = k
+                self.tracer.event(
+                    "ctl.speculation", cat="ctl", tier=spec.name, k=k,
+                    mode=int(decision.mode),
+                    accept_rate=(round(accept, 4)
+                                 if accept is not None else None))
+            for rep in self.replicas[spec.name]:
+                rep.set_speculation(k)
+
         # 5. request-granularity dispatch
         self.dispatcher.dispatch(decision.weights, self.replicas, now=t)
         # requests the dispatcher dropped as unfittable (they fit no live
@@ -964,6 +1012,16 @@ class FleetRuntime:
                                   sync_s=report.sync_s,
                                   occupancy=report.occupancy,
                                   completed=len(report.completed))
+                if getattr(report, "spec_rounds", 0):
+                    # speculation audit rides next to the pump it happened
+                    # in: drafted/accepted per replica-tick is the raw
+                    # series behind the tier acceptance EWMA
+                    self.tracer.event("engine.speculate", cat="engine",
+                                      sampled=True, replica=rep.name,
+                                      tier=spec.name,
+                                      drafted=report.drafted_tokens,
+                                      accepted=report.accepted_tokens,
+                                      rounds=report.spec_rounds)
                 qd = rep.load
                 self.telemetry.record_pump(spec.name, rep.name, report, qd)
                 if rep.state == ReplicaState.READY:
@@ -1120,6 +1178,12 @@ class FleetRuntime:
             eng = self._engine_for(spec)
             vocab = eng.model.cfg.vocab_size
             sess = QueueSession(eng)
+            # warm with speculation OFF so the plain chunk scan compiles
+            # here: the controller drives live k between 0 and the tier
+            # ceiling, so a spec tier's first k=0 pump must not pay the
+            # scan compile mid-run (the k>0 verify grid is warmed by
+            # warm_spec_traces below)
+            sess.spec_k = 0
             for i, plen in enumerate(plens):
                 # a distinct first token per length keeps these prompts from
                 # prefix-hitting EACH OTHER on a paged engine — every length
@@ -1156,6 +1220,11 @@ class FleetRuntime:
                 budgets = [spec.prefill_chunk,
                            spec.capacity_prefill_chunk or 4 * spec.prefill_chunk]
                 eng.warm_mixed_traces(budgets)
+                if spec.spec_k > 0:
+                    # the speculative verify dispatch is its own jit (all-
+                    # position logits + verdict reduction): warm its
+                    # (spec-quantum, window) grid too
+                    eng.warm_spec_traces([spec.spec_k])
             if eng.paged and self.kv_store is not None:
                 # precompile the frontier-restore scatter: injects are padded
                 # to pow-2 block buckets, so one trace per bucket covers
@@ -1282,6 +1351,9 @@ def build_saturated_fleet(
     max_len: int = 64,
     mixed_step: bool = True,
     prefill_chunk: int = 64,
+    spec_k: int = 0,
+    model_overrides: Optional[Dict[str, object]] = None,
+    param_seed: int = 0,
     trace: bool = True,
     seed: int = 0,
 ) -> FleetRuntime:
@@ -1289,11 +1361,16 @@ def build_saturated_fleet(
     the saturating configuration for apples-to-apples goodput against a
     bare ``ServingEngine.serve_queue`` at equal replica count, and (with
     long prompts + ``mixed_step`` toggled) the A/B for the mixed-batch
-    engine's TTFT/goodput acceptance row."""
+    engine's TTFT/goodput acceptance row.  ``spec_k`` turns on speculative
+    decoding; ``model_overrides`` resizes the reduced model (the decode-
+    bound spec bench needs enough compute per dispatch for the fused
+    verify step to amortize)."""
     from repro.configs import get_config
     from repro.fleet.workload import burst_of
 
     vocab = get_config(arch).reduce().vocab_size
+    if model_overrides and "vocab_size" in model_overrides:
+        vocab = int(model_overrides["vocab_size"])
     workload = burst_of(n_requests, vocab_size=vocab, prompt_len=prompt_len,
                         max_new=max_new, seed=seed)
     tier = TierSpec(name="flat", arch=arch, cost_per_hour=1.0,
@@ -1302,7 +1379,8 @@ def build_saturated_fleet(
                     decode_chunk=4, queue_limit=2 * decode_batch,
                     base_capacity=n_replicas, initial_replicas=n_replicas,
                     provision_delay_s=1.0, mixed_step=mixed_step,
-                    prefill_chunk=prefill_chunk)
+                    prefill_chunk=prefill_chunk, spec_k=spec_k,
+                    model_overrides=model_overrides, param_seed=param_seed)
     return FleetRuntime([tier], workload, FleetConfig(seed=seed, trace=trace))
 
 

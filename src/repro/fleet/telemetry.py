@@ -74,6 +74,9 @@ class _TierWindow:
     prefix_misses: int = 0
     reused_tokens: int = 0
     prefilled_tokens: int = 0
+    drafted_tokens: int = 0     # speculative-decode proposals this tick
+    accepted_tokens: int = 0    # ... of which the verify step kept
+    spec_rounds: int = 0
 
 
 class TelemetryBus:
@@ -107,6 +110,13 @@ class TelemetryBus:
         self.tier_cache_hit_rate: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_token_reuse: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
         self.tier_page_occupancy: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        # speculative decoding: acceptance EWMA (the controller's k->0
+        # signal; None until the tier's first drafted round) + cumulative
+        # draft/accept totals (the counter-audit tests pin exact counts)
+        self.tier_spec_accept: Dict[str, Ewma] = {t: Ewma(alpha) for t in tiers}
+        self.tier_drafted: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_accepted: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_spec_rounds: Dict[str, int] = {t: 0 for t in tiers}
         # durable-KV recovery: cumulative totals (not EWMAs — the drills
         # assert exact counts, "zero recomputed prefill tokens" especially)
         self.tier_recovered: Dict[str, int] = {t: 0 for t in tiers}
@@ -159,6 +169,13 @@ class TelemetryBus:
         self._c_preemptions = self.metrics.counter(
             "fleet_preemptions_total", "spot preemption notices delivered",
             labels=("tier",))
+        self._c_drafted = self.metrics.counter(
+            "fleet_drafted_tokens_total", "speculative draft tokens proposed",
+            labels=("tier",))
+        self._c_accepted = self.metrics.counter(
+            "fleet_accepted_tokens_total",
+            "speculative draft tokens accepted by verification",
+            labels=("tier",))
 
     # -- ingestion ----------------------------------------------------------
     def signals_for(self, replica_name: str) -> ReplicaSignals:
@@ -192,6 +209,19 @@ class TelemetryBus:
         self.tier_recovered[tier] += getattr(report, "recovered_tokens", 0)
         self.tier_recomputed[tier] += getattr(
             report, "recomputed_prefill_tokens", 0)
+        # speculative-decode channels (getattr: non-spec reports count 0)
+        drafted = getattr(report, "drafted_tokens", 0)
+        accepted = getattr(report, "accepted_tokens", 0)
+        win.drafted_tokens += drafted
+        win.accepted_tokens += accepted
+        win.spec_rounds += getattr(report, "spec_rounds", 0)
+        self.tier_drafted[tier] += drafted
+        self.tier_accepted[tier] += accepted
+        self.tier_spec_rounds[tier] += getattr(report, "spec_rounds", 0)
+        if drafted:
+            self._c_drafted.labels(tier).inc(drafted)
+        if accepted:
+            self._c_accepted.labels(tier).inc(accepted)
         # unconditional: a drained pool must decay the EWMA back toward 0
         # (contiguous tiers just keep it pinned at 0)
         self.tier_page_occupancy[tier].update(getattr(report, "page_occupancy", 0.0))
@@ -296,6 +326,11 @@ class TelemetryBus:
             prompt_tokens = win.reused_tokens + win.prefilled_tokens
             if prompt_tokens > 0:
                 self.tier_token_reuse[tier].update(win.reused_tokens / prompt_tokens)
+            if win.drafted_tokens > 0:
+                # acceptance only moves on ticks that actually drafted: an
+                # idle (or k=0) tier must not decay the controller's signal
+                self.tier_spec_accept[tier].update(
+                    win.accepted_tokens / win.drafted_tokens)
             self._window[tier] = _TierWindow()
 
     # -- the live t_max -----------------------------------------------------
@@ -329,6 +364,10 @@ class TelemetryBus:
                 "cache_hit_rate": self.tier_cache_hit_rate[tier].get(),
                 "token_reuse_rate": self.tier_token_reuse[tier].get(),
                 "page_occupancy": self.tier_page_occupancy[tier].get(),
+                "spec_accept_rate": self.tier_spec_accept[tier].get(),
+                "drafted_tokens": float(self.tier_drafted[tier]),
+                "accepted_tokens": float(self.tier_accepted[tier]),
+                "spec_rounds": float(self.tier_spec_rounds[tier]),
                 "recovered_tokens": float(self.tier_recovered[tier]),
                 "recomputed_prefill_tokens": float(self.tier_recomputed[tier]),
                 "kv_flush_s": self.tier_flush_s[tier],

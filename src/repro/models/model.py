@@ -135,7 +135,8 @@ class Model:
         return logits, new_cache
 
     def step_mixed(self, params, tokens, cache, cache_lens, new_lens,
-                   fused=None, page_table=None, attn_window=None):
+                   fused=None, page_table=None, attn_window=None,
+                   all_logits=False):
         """One mixed-batch engine step: each slot advances by its own
         ragged suffix ``tokens[b, :new_lens[b]]`` starting at cache
         position ``cache_lens[b]`` — decode steps (new_len 1) and prefill
@@ -146,6 +147,12 @@ class Model:
         new_cache): logits are taken at column ``max(new_lens - 1, 0)`` —
         a decode slot's next-token logits, a finishing prompt's first-token
         logits (rows with new_len 0 return garbage the engine discards).
+
+        ``all_logits=True`` returns (B, Q, V) logits at EVERY suffix
+        position instead — position j is the next-token distribution after
+        consuming ``tokens[b, :j+1]``, which is exactly what speculative-
+        decode verification needs (each draft column checked against the
+        distribution its prefix induces, all in this one dispatch).
 
         Transformer families with full attention only (the paged-KV
         constraint): SSM/RWKV decode state cannot replay multi-token
@@ -160,6 +167,9 @@ class Model:
             params, x, cache.k, cache.v, cache_lens, new_lens, cfg, self.mesh,
             fused=fused, page_table=page_table, attn_window=attn_window,
         )
+        if all_logits:
+            logits = transformer.logits_from_hidden(params, x, cfg, self.mesh)
+            return logits, DecoderKVCache(k=nk, v=nv)
         last = jnp.maximum(jnp.asarray(new_lens, jnp.int32) - 1, 0)
         x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)
         logits = transformer.logits_from_hidden(params, x_last, cfg, self.mesh)[:, 0]

@@ -19,9 +19,13 @@ Event taxonomy (the ``cat`` field):
 * ``ctl``    — control plane: ``ctl.mode_switch`` (with the full signal
   vector), ``ctl.scale``, ``ctl.replica_fail``, ``ctl.preempt_notice``,
   ``ctl.preempt_deadline``, ``ctl.wedge_death``, ``ctl.crash_backoff``,
-  ``ctl.kv_flush``, ``ctl.kv_restore``, ``replica.*`` state transitions.
+  ``ctl.kv_flush``, ``ctl.kv_restore``, ``ctl.speculation`` (the mode
+  controller retuned a tier's speculative draft depth k),
+  ``replica.*`` state transitions.
 * ``engine`` — data plane: ``engine.pump`` (admission/dispatch/host-sync
-  phase walls), ``engine.compile`` (a jit trace-cache miss).
+  phase walls), ``engine.speculate`` (drafted/accepted token counts for
+  the pump's speculative rounds — rides next to the pump it happened in),
+  ``engine.compile`` (a jit trace-cache miss).
 * ``kv``     — fleet KV store traffic (``kv.put``/``kv.hit``/``kv.evict``).
 
 Timestamps are whatever clock the owner installs — the fleet runtime uses

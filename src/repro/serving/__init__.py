@@ -14,6 +14,12 @@ from repro.serving.engine import (  # noqa: F401
     QueueSession,
     ServingEngine,
 )
+from repro.serving.spec import (  # noqa: F401
+    Drafter,
+    NgramDrafter,
+    spec_quantum,
+    verify_tokens,
+)
 from repro.serving.paged_kv import (  # noqa: F401
     TRASH_PAGE,
     BlockAllocator,

@@ -75,6 +75,9 @@ class InferenceRequest:
     slo_class: str = "interactive"
     priority: int = 0                 # higher admits first within a class
     deadline_s: Optional[float] = None
+    speculate: bool = True            # opt-out of speculative drafting for
+                                      # this request (it still rides spec
+                                      # dispatches, contributing 1 token)
 
     def prompt_2d(self) -> np.ndarray:
         p = np.asarray(self.prompt)
@@ -248,7 +251,7 @@ class EngineClient:
         self.session.submit(
             rid, request.prompt_2d(), request.max_new,
             slo_class=request.slo_class, priority=request.priority,
-            deadline_s=request.deadline_s,
+            deadline_s=request.deadline_s, speculate=request.speculate,
         )
         now = self._clock()
         handle = RequestHandle(request, rid, self, now)
@@ -267,6 +270,11 @@ class EngineClient:
                           wall_s=report.wall_s, admit_s=report.admit_s,
                           dispatch_s=report.dispatch_s, sync_s=report.sync_s,
                           occupancy=report.occupancy)
+        if report.spec_rounds:
+            self.tracer.event("engine.speculate", t=now, cat="engine",
+                              sampled=True, drafted=report.drafted_tokens,
+                              accepted=report.accepted_tokens,
+                              rounds=report.spec_rounds)
         for rid, toks in report.tokens.items():
             h = self.handles.get(rid)
             if h is not None:

@@ -84,6 +84,12 @@ from jax import lax
 
 from repro.models.model import Model
 from repro.serving.paged_kv import TRASH_PAGE, BlockAllocator, KVFrontier
+from repro.serving.spec import (
+    Drafter,
+    NgramDrafter,
+    spec_quantum,
+    verify_tokens,
+)
 
 
 @dataclass
@@ -110,6 +116,13 @@ class EngineConfig:
                                     # live set: the slack is what lets finished
                                     # prompts stay cached for prefix reuse
     prefix_reuse: bool = True       # cross-request prompt-prefix sharing
+    # -- speculative decoding (mixed-step sessions only) ---------------------
+    spec_k: int = 0                 # draft tokens per decode round (0 = off);
+                                    # sessions can retune it live (the
+                                    # controller's goodput-protection knob)
+    spec_ngram: int = 3             # n-gram length of the default prompt-
+                                    # lookup drafter (engine.drafter swaps in
+                                    # any Drafter implementation)
 
 
 @dataclass
@@ -137,10 +150,22 @@ class EngineTelemetry:
     # durable-KV recovery (zero when no frontiers are restored)
     recovered_tokens: int = 0        # KV tokens resumed from injected frontiers
     recomputed_prefill_tokens: int = 0  # retry prefill re-run through the model
+    # speculative decoding (zero when spec_k is 0).  ONLY accepted tokens
+    # count toward useful_tokens / tokens_per_s — a rejected draft is paid
+    # compute, not delivered output, so goodput and $/1k-tokens never
+    # inflate under low acceptance.
+    drafted_tokens: int = 0          # draft tokens dispatched for verification
+    accepted_tokens: int = 0         # drafts that survived verification
+    spec_rounds: int = 0             # fused verify dispatches (>=1 draft in)
 
     @property
     def tokens_per_s(self) -> float:
         return self.useful_tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+    @property
+    def spec_accept_rate(self) -> float:
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
 
     @property
     def efficiency(self) -> float:
@@ -179,6 +204,16 @@ class ServingEngine:
         )
         self._mixed_paged = jax.jit(
             self._mixed_step_paged_fn, static_argnums=(8,), donate_argnums=(1,)
+        )
+        # -- speculative decoding --------------------------------------------
+        # the pluggable drafter (spec.Drafter protocol); sessions read it
+        # per round, so swapping in a draft model is one attribute write
+        self.drafter: Drafter = NgramDrafter(max(1, cfg.spec_ngram))
+        self._spec = jax.jit(
+            self._spec_step_fn, static_argnums=(8,), donate_argnums=(1,)
+        )
+        self._spec_paged = jax.jit(
+            self._spec_step_paged_fn, static_argnums=(9,), donate_argnums=(1,)
         )
         # -- paged-KV resolution (sessions consult these) --------------------
         if cfg.paged_kv and not model.supports_paged_kv:
@@ -381,6 +416,91 @@ class ServingEngine:
         )
         return logits, pool, lens + new_lens
 
+    # -- speculative-decode jitted bodies -------------------------------------
+    def _spec_step_fn(self, params, cache, chunks, tok, lens, new_lens,
+                      is_decode, key, attn_window: int):
+        """ONE fused verify dispatch: every decoding slot advances by its
+        carried token plus its draft columns (``new_lens`` = 1 + d, ragged
+        per row) through the SAME mixed-step machinery a prompt chunk
+        rides, and the (B, Q, V) all-position logits reduce on device to
+        the (3, B, Q) accept/replacement/bonus verdict — O(B·Q) comes back
+        to the host, never the vocab axis.  Rejected columns DO write KV;
+        the caller simply never advances its length mirror past the
+        accepted frontier, so the garbage sits beyond every unmasked
+        position until real writes overwrite it (the exact invariant the
+        ragged chunk scan already relies on for idle slots)."""
+        self.mixed_traces += 1
+        fused = self.model.fused_decode_weights(params)
+        tokens = self._mixed_tokens(chunks, tok, is_decode)
+        logits, cache = self.model.step_mixed(
+            params, tokens, cache, lens, new_lens, fused=fused,
+            attn_window=attn_window, all_logits=True,
+        )
+        # drafts sit in token columns 1..d: column j's logits judge the
+        # token in column j+1 (the shifted view; last column is padding)
+        drafts = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        verdict, key = verify_tokens(logits, drafts, key,
+                                     self.cfg.temperature)
+        return verdict, cache, key
+
+    def _spec_step_paged_fn(self, params, pool, tables, chunks, tok, lens,
+                            new_lens, is_decode, key, attn_window: int):
+        self.mixed_traces += 1
+        fused = self.model.fused_decode_weights(params)
+        tokens = self._mixed_tokens(chunks, tok, is_decode)
+        logits, pool = self.model.step_mixed(
+            params, tokens, pool, lens, new_lens, fused=fused,
+            page_table=tables, attn_window=attn_window, all_logits=True,
+        )
+        drafts = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        verdict, key = verify_tokens(logits, drafts, key,
+                                     self.cfg.temperature)
+        return verdict, pool, key
+
+    def warm_spec_traces(self, ks: Sequence[int]) -> int:
+        """Pre-compile the spec-verify trace grid: for each draft depth's
+        pow-2 column quantum, every pow-2 attention-window bucket up to
+        max_len — the same enumeration discipline as ``warm_mixed_traces``
+        so controller retunes of ``spec_k`` never compile mid-pump."""
+        if not self.mixed:
+            return 0
+        n = self.cfg.decode_batch
+        before = self.mixed_traces
+        qs = sorted({spec_quantum(k) for k in ks if k > 0})
+        for Q in qs:
+            chunks = jnp.zeros((n, Q), jnp.int32)
+            tok = jnp.zeros((n,), jnp.int32)
+            lens = jnp.zeros((n,), jnp.int32)
+            new_lens = jnp.ones((n,), jnp.int32)
+            isd = jnp.ones((n,), bool)
+            key = jax.random.key(self.cfg.seed)
+            aw = Q
+            while True:
+                aw_b = min(aw, self.cfg.max_len)
+                if self.paged:
+                    pool = self.model.empty_page_pool(
+                        self.num_pages, self.cfg.page_size
+                    )
+                    tables = jnp.full((n, self.max_blocks), TRASH_PAGE,
+                                      jnp.int32)
+                    out = self._spec_paged(
+                        self.params, pool, tables, chunks, tok, lens,
+                        new_lens, isd, key, aw_b,
+                    )
+                else:
+                    cache = self.model.empty_cache(n, self.cfg.max_len)
+                    out = self._spec(
+                        self.params, cache, chunks, tok, lens, new_lens,
+                        isd, key, aw_b,
+                    )
+                jax.block_until_ready(out[0])
+                if aw_b >= self.cfg.max_len:
+                    break
+                aw *= 2
+        return self.mixed_traces - before
+
     def chunk_quantum(self, token_budget: int) -> int:
         """The FIXED q-chunk width a budget implies: pow2(budget / slots).
         Every mixed step uses exactly this Q (tail chunks ride the same
@@ -568,6 +688,11 @@ class PumpReport:
     recovered_tokens: int = 0         # KV tokens resumed from injected frontiers
     recomputed_prefill_tokens: int = 0  # retry prompt tokens re-run through
                                       # the model (zero on a store hit)
+    # speculative decoding this pump (zero when spec_k is 0); only ACCEPTED
+    # drafts ever reach emitted/tokens/useful_tokens
+    drafted_tokens: int = 0           # draft tokens dispatched for verification
+    accepted_tokens: int = 0          # drafts that survived verification
+    spec_rounds: int = 0              # fused verify dispatches (>=1 draft in)
     # per-pump phase walls (the observability breakdown of ``wall_s``):
     # admission (queue pops + prefill setup/dispatch in legacy mode),
     # dispatch (jitted mixed-step / chunk-scan launches), host sync
@@ -629,6 +754,17 @@ class QueueSession:
         # fleet controller can retune it tick-by-tick without recompiling —
         # jit traces key on the pow-2 chunk bucket, not the budget.
         self.token_budget = max(1, engine.cfg.prefill_chunk)
+        # -- speculative decoding --------------------------------------------
+        # the second live knob, retuned tick-by-tick like token_budget:
+        # draft depth per decode round (0 disables speculation without
+        # recompiling — spec traces key on the pow-2 column quantum)
+        self.spec_k = max(0, int(engine.cfg.spec_k))
+        # rids that opted out of speculation (InferenceRequest.speculate)
+        self._no_spec: set = set()
+        # per-session acceptance-rate EWMA over verify rounds (None until
+        # the first drafted round); pumps fold it into PumpReport for the
+        # fleet telemetry bus
+        self.spec_accept_ewma: Optional[float] = None
         # slot -> in-progress prompt ingestion (admitted, not yet decoding)
         self._prefilling: Dict[int, Dict[str, Any]] = {}
         # host mirror of per-slot cache lengths: every advance is host-
@@ -656,11 +792,18 @@ class QueueSession:
                slo_class: str = "interactive", priority: int = 0,
                deadline_s: Optional[float] = None,
                recompute: bool = False,
-               frontier: Optional[KVFrontier] = None) -> None:
+               frontier: Optional[KVFrontier] = None,
+               speculate: bool = True) -> None:
         """Queue a request.  ``slo_class``/``priority``/``deadline_s`` set
         its admission order (interactive before batch, higher priority
         first, soonest deadline first, then FIFO); defaults reproduce the
         legacy FIFO admission exactly.
+
+        ``speculate=False`` opts this request out of speculative decoding:
+        its slot is never drafted, it decodes one token per round even
+        while the rest of the batch speculates (greedy outputs are token-
+        exact either way; the opt-out exists for temperature>0 callers who
+        want the plain carried-key sample stream).
 
         ``frontier`` resumes a previously checkpointed request: admission
         injects its KV pages and continues decode from its token frontier
@@ -715,6 +858,8 @@ class QueueSession:
         self._slo[rid] = slo_order_key(slo_class, priority, deadline_at,
                                        self._seq)
         self._seq += 1
+        if not speculate:
+            self._no_spec.add(rid)
         self._out[rid] = []
         self.queue.append((rid, inp, max_new))
 
@@ -730,6 +875,7 @@ class QueueSession:
         self._prompt_of.pop(rid, None)
         self._frontiers.pop(rid, None)
         self._recompute.discard(rid)
+        self._no_spec.discard(rid)
 
     def cancel(self, rid: int) -> bool:
         """Abandon a request (hedge loser): drop it from the queue or free
@@ -1211,6 +1357,9 @@ class QueueSession:
         chunks; NO dispatch happens here — the prompt rides the next mixed
         steps alongside the ongoing decodes."""
         self._lens_host[s] = 0
+        # the drafter needs the prompt history even without paging (paged
+        # admissions record it for frontier extraction already)
+        self._prompt_of[rid] = tuple(int(t) for t in np.asarray(inp)[0])
         self._prefilling[s] = dict(
             rid=rid, rem=np.asarray(inp)[0].astype(np.int64),
             plen=int(inp.shape[1]), max_new=int(max_new), akey=self._akey(),
@@ -1542,9 +1691,14 @@ class QueueSession:
             _complete(rid)
         report.sync_s += time.perf_counter() - t_sync
 
-        # ---- the decode chunk scan ----------------------------------------
+        # ---- the decode phase ---------------------------------------------
         decode_active = slots.request_id >= 0
-        if decode_active.any():
+        if decode_active.any() and self.spec_k > 0:
+            # speculative rounds replace the chunk scan: each round is one
+            # fused draft-verify dispatch advancing every decoding slot by
+            # 1 + accepted tokens (>= the scan's 1 token per step)
+            self._decode_speculative(report, chunk, _complete)
+        elif decode_active.any():
             t_disp = time.perf_counter()
             active_j = jnp.asarray(decode_active)
             lens_dev = jnp.asarray(self._lens_host, jnp.int32)
@@ -1598,7 +1752,138 @@ class QueueSession:
         tel.prefilled_tokens += report.prefilled_tokens
         tel.recovered_tokens += report.recovered_tokens
         tel.recomputed_prefill_tokens += report.recomputed_prefill_tokens
+        tel.drafted_tokens += report.drafted_tokens
+        tel.accepted_tokens += report.accepted_tokens
+        tel.spec_rounds += report.spec_rounds
         return report
+
+    # -- speculative decode rounds -------------------------------------------
+    def _decode_speculative(self, report: PumpReport, rounds: int,
+                            complete: Callable[[int], None]) -> None:
+        """The decode phase with speculation on: up to ``rounds`` draft +
+        fused-verify rounds instead of the ragged chunk scan.
+
+        Per round: the drafter proposes up to ``spec_k`` continuation
+        tokens per decoding slot from its full token history (prompt +
+        generated + carried token, all host-known); drafts ride token
+        columns 1..d of ONE spec mixed step (``new_len = 1 + d``, ragged
+        per row — opted-out or fully-emitted slots just run d = 0); the
+        device returns the (3, B, Q) verdict and the host emits the carry
+        plus the longest accepted prefix.  The per-round host sync is
+        inherent to speculation — the next round's drafts need this
+        round's accepted tokens — but each synced dispatch now yields up
+        to ``spec_k + 1`` tokens per slot instead of the scan's 1.
+
+        Rollback is the write-then-trim contract: rejected draft columns
+        already wrote KV at positions >= the accepted frontier, but
+        ``_lens_host`` (the single source of truth for cache lengths, and
+        what ``extract_frontier`` derives its page count from) only ever
+        advances by 1 + accepted, so those positions stay masked garbage
+        until the next round's real writes land on them.  Contiguous
+        stripes need nothing else; paged pools need no allocator calls
+        either, because every page at or beyond a slot's write frontier
+        is slot-exclusive by the admission COW invariant — shared
+        prefix-cache pages are never scribbled on."""
+        eng, slots = self.eng, self.slots
+        n_slots = slots.n_slots
+        Qs = spec_quantum(self.spec_k)
+        drafter = eng.drafter
+        # ONE initial carry sync; afterwards the verdicts keep it host-known
+        carry = np.asarray(self.tok).astype(np.int64).copy()
+        executed = 0
+        for _ in range(rounds):
+            active = np.nonzero(slots.request_id >= 0)[0]
+            if len(active) == 0:
+                break
+            t_draft = time.perf_counter()
+            chunks_np = np.zeros((n_slots, Qs), np.int32)
+            new_lens = np.zeros((n_slots,), np.int32)
+            d_of = np.zeros((n_slots,), np.int64)
+            for s in active:
+                rid = int(slots.request_id[s])
+                d = 0
+                # never draft past the request's budget: emitting carry +
+                # accepted <= remaining keeps completions exact and the
+                # write frontier inside the allocated pages
+                k = min(self.spec_k, int(slots.remaining[s]) - 1, Qs - 1)
+                if k > 0 and rid not in self._no_spec:
+                    ctx = list(self._prompt_of.get(rid, ()))
+                    ctx += self._out[rid]
+                    ctx.append(int(carry[s]))
+                    drafts = drafter.propose(ctx, k)[:k]
+                    d = len(drafts)
+                    if d:
+                        chunks_np[s, 1:1 + d] = drafts
+                d_of[s] = d
+                new_lens[s] = 1 + d
+            # attention window: same pow-2 bucket rule as the mixed loop,
+            # floored at the spec column quantum so (Qs, aw) pairs stay on
+            # the warm_spec_traces grid
+            need = int(np.max(self._lens_host[active] + new_lens[active]))
+            aw = max(1 << (max(1, need) - 1).bit_length(), Qs)
+            aw = min(aw, eng.cfg.max_len)
+            is_decode = jnp.asarray(slots.request_id >= 0)
+            lens_dev = jnp.asarray(self._lens_host, jnp.int32)
+            tok_dev = jnp.asarray(carry.astype(np.int32))
+            t_disp = time.perf_counter()
+            if self.paged:
+                verdict, self.cache, self.key = eng._spec_paged(
+                    eng.params, self.cache, jnp.asarray(self.tables),
+                    jnp.asarray(chunks_np), tok_dev, lens_dev,
+                    jnp.asarray(new_lens), is_decode, self.key, aw,
+                )
+            else:
+                verdict, self.cache, self.key = eng._spec(
+                    eng.params, self.cache, jnp.asarray(chunks_np), tok_dev,
+                    lens_dev, jnp.asarray(new_lens), is_decode, self.key, aw,
+                )
+            t_sync = time.perf_counter()
+            v = np.asarray(verdict)           # ONE (3, B, Q) transfer/round
+            counts = np.zeros(n_slots, np.int64)
+            round_drafted = 0
+            round_accepted = 0
+            for s in active:
+                rid = int(slots.request_id[s])
+                d = int(d_of[s])
+                a = 0
+                while a < d and v[0, s, a]:
+                    a += 1
+                vals = [int(carry[s])]
+                vals += [int(chunks_np[s, 1 + j]) for j in range(a)]
+                self._out[rid].extend(vals)
+                report.emitted[rid] = report.emitted.get(rid, 0) + len(vals)
+                report.tokens.setdefault(rid, []).extend(vals)
+                # next carry: the replacement at the first rejection, or
+                # the bonus token after a fully accepted draft run
+                carry[s] = int(v[1, s, a]) if a < d else int(v[2, s, d])
+                self._lens_host[s] += len(vals)
+                counts[s] = len(vals)
+                round_drafted += d
+                round_accepted += a
+            report.useful_tokens += int(counts.sum())
+            # rejected drafts are paid-for, undelivered compute — wasted,
+            # exactly like the scan's idle-slot tokens
+            report.wasted_tokens += (n_slots - len(active))
+            report.wasted_tokens += round_drafted - round_accepted
+            report.drafted_tokens += round_drafted
+            report.accepted_tokens += round_accepted
+            if round_drafted:
+                report.spec_rounds += 1
+                rate = round_accepted / round_drafted
+                self.spec_accept_ewma = (
+                    rate if self.spec_accept_ewma is None
+                    else 0.3 * rate + 0.7 * self.spec_accept_ewma)
+            executed += 1
+            t_done = time.perf_counter()
+            report.dispatch_s += t_sync - t_disp
+            report.sync_s += (t_disp - t_draft) + (t_done - t_sync)
+            for rid in slots.advance(counts):
+                complete(rid)
+        # re-sync the device-side mirrors once for whoever reads them next
+        # (legacy-path admissions, introspection); _lens_host stayed exact
+        self.tok = jnp.asarray(carry.astype(np.int32))
+        self.lens = jnp.asarray(self._lens_host.astype(np.int32))
+        report.chunk_steps = executed
 
 
 class DecodeSlots:
@@ -1630,6 +1915,18 @@ class DecodeSlots:
         """Advance one decode step; returns request ids that finished."""
         active = self.request_id >= 0
         self.remaining[active] -= 1
+        done = np.nonzero(active & (self.remaining <= 0))[0]
+        finished = self.request_id[done].tolist()
+        self.request_id[done] = -1
+        return finished
+
+    def advance(self, counts: np.ndarray) -> list:
+        """Variable-width step (speculative rounds): every active slot
+        advances by its own ``counts[slot]`` emitted tokens; returns
+        request ids that finished.  ``step()`` is ``advance(ones)``."""
+        active = self.request_id >= 0
+        c = np.asarray(counts, np.int64)
+        self.remaining[active] -= c[active]
         done = np.nonzero(active & (self.remaining <= 0))[0]
         finished = self.request_id[done].tolist()
         self.request_id[done] = -1

@@ -25,6 +25,18 @@ pool plus per-slot (n_blocks,) block tables.  Everything that makes paging
 The allocator is deliberately engine-agnostic: it never touches device
 memory.  The engine performs the actual page writes/copies and tells the
 allocator what it decided.
+
+Speculative decoding (``repro.serving.spec``) needs no allocator support:
+a drafted slot's verify dispatch writes KV for ALL k+1 tokens it carried,
+and rollback of rejected drafts is **write-then-trim** — the host length
+mirror advances only past the accepted prefix, so the rejected positions
+are garbage sitting beyond the slot's frontier, overwritten by the next
+dispatch before attention ever unmasks them.  Those positions always land
+in pages the slot owns exclusively (admission COW-breaks any shared page
+before the first generated-token write), so shared/cached prefix pages
+are never dirtied by a rejected draft, and frontiers/``extract_kv``
+checkpoints (which copy only up to the frontier) stay byte-exact through
+speculation.
 """
 from __future__ import annotations
 

@@ -1,0 +1,156 @@
+"""Speculative decoding: drafters + the fused verification rule.
+
+Speculation on this engine has two halves, split host/device:
+
+* **Drafting** (host, free): a ``Drafter`` proposes up to k candidate
+  continuation tokens for a decoding slot from its full token history
+  (prompt + generated so far + the carried next token).  The default
+  ``NgramDrafter`` is prompt-lookup decoding — no second model, no extra
+  weights: match the last n tokens of the history against an earlier
+  occurrence and propose the tokens that followed it.  The protocol is
+  deliberately tiny so a small draft *model* can slot in later.
+* **Verification** (device, fused): the drafted tokens ride the SAME
+  mixed-batch dispatch the engine already runs — a drafted slot simply
+  contributes ``new_len = 1 + d`` tokens (carry + d drafts) instead of 1,
+  and ``step_mixed(all_logits=True)`` returns the next-token distribution
+  at every draft position.  ``verify_tokens`` reduces those (B, Q, V)
+  logits to a (3, B, Q) int32 verdict on device, so the per-round
+  host↔device transfer stays O(B·Q), never O(B·Q·V).
+
+Acceptance rule (``verify_tokens``):
+
+* greedy (``temperature <= 0``): accept draft j iff it equals the argmax
+  of position j's logits — longest-matching-prefix acceptance, token-
+  exact with the non-speculative engine by construction (the argmax at
+  the first rejected position is also exactly the token the plain decode
+  loop would have emitted there).
+* ``temperature > 0``: standard speculative rejection sampling with a
+  point-mass proposal (the drafter is deterministic): accept draft t
+  with probability ``p(t)``; on rejection sample from the residual —
+  ``p`` with the draft index zeroed, renormalized; on full acceptance
+  sample the bonus token from the plain distribution.  The marginal of
+  every emitted token is exactly ``p`` (``tests/test_spec_decode.py``
+  pins this empirically).
+
+The verdict layout host code consumes, for a row whose draft count was d
+(drafts sat in token columns 1..d, so column j's logits judge draft j+1):
+
+* ``verdict[0, b, j]`` — 1 iff draft j (token column j+1) was accepted;
+* ``verdict[1, b, j]`` — the REPLACEMENT token if j is the first
+  rejected position (greedy: the argmax; temp: the residual sample);
+* ``verdict[2, b, j]`` — the BONUS token if all d drafts were accepted
+  and j == d (greedy: the argmax; temp: a plain sample).
+
+The host walks the accept flags to the first 0, emits carry + accepted
+drafts, and picks the next carried token from row 1 or row 2.  Rejected
+draft positions already wrote KV — rollback is simply not advancing the
+host length mirror past the accepted frontier (see docs/serving.md,
+"Speculative decoding": the write-then-trim contract).
+"""
+from __future__ import annotations
+
+from typing import List, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Anything that proposes draft tokens from a slot's token history."""
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        """Up to ``k`` candidate continuations of ``context`` (may return
+        fewer, or [] when it has nothing credible to say — a miss costs
+        nothing, the slot just decodes normally that round)."""
+        ...
+
+
+class NgramDrafter:
+    """Prompt-lookup drafting: match the last n tokens of the history
+    against an earlier occurrence, propose what followed it.
+
+    Tries the longest n-gram first (``n`` down to ``min_n``) and takes the
+    most recent earlier match — recency matters because generation loops
+    (and prompts quoted back) are the dominant source of hits.  A match at
+    offset i implies the history is locally periodic with period
+    ``p = (L - n) - i``, so the proposal extrapolates that period for the
+    FULL k tokens instead of stopping where the matched continuation runs
+    off the end of the history.  Always drafting to depth k on a hit is
+    deliberate: the verify dispatch's cost is fixed by the pow-2 column
+    quantum, so a short draft pays the same compute as a full one — extra
+    columns are free upside, and rejections only cost what was already
+    paid.  O(n · len) python per call on a few-hundred-token history:
+    noise next to a model dispatch.
+    """
+
+    def __init__(self, n: int = 3, min_n: int = 1):
+        if n < 1:
+            raise ValueError(f"ngram n must be >= 1, got {n}")
+        self.n = int(n)
+        self.min_n = max(1, min(int(min_n), self.n))
+
+    def propose(self, context: Sequence[int], k: int) -> List[int]:
+        ctx = list(context)
+        L = len(ctx)
+        if k <= 0 or L < self.min_n + 1:
+            return []
+        for n in range(min(self.n, L - 1), self.min_n - 1, -1):
+            suffix = ctx[-n:]
+            # most recent earlier occurrence: scan right-to-left, excluding
+            # the trivial match at the very end
+            for i in range(L - n - 1, -1, -1):
+                if ctx[i:i + n] == suffix:
+                    p = (L - n) - i           # implied local period, >= 1
+                    out: List[int] = []
+                    for j in range(k):
+                        idx = L + j - p
+                        out.append(ctx[idx] if idx < L else out[idx - L])
+                    return out
+        return []
+
+
+def spec_quantum(k: int) -> int:
+    """The pow-2 token-column width a draft depth implies: k drafts plus
+    the carried token, padded up — the ONE chunk width spec rounds ever
+    dispatch, so speculation adds a single (Q, attention-window) trace
+    column to the mixed-step grid instead of a per-depth explosion."""
+    if k <= 0:
+        return 1
+    return 1 << int(k).bit_length()
+
+
+def verify_tokens(logits, drafts, key, temperature: float):
+    """Reduce all-position logits to the (3, B, Q) acceptance verdict.
+
+    ``logits``: (B, Q, V) from ``step_mixed(all_logits=True)``;
+    ``drafts``: (B, Q) i32 with ``drafts[b, j]`` = the token in column
+    j+1 (the candidate judged by position j's logits; the last column is
+    padding — its accept flag is meaningless and the host never reads
+    past d-1).  Returns (verdict, key): verdict rows are (accept flag,
+    replacement token, bonus token) per the module docstring; ``key`` is
+    the carried PRNG key (split only when temperature > 0, so greedy
+    sessions stay bit-identical with the non-speculative key stream).
+    """
+    drafts = jnp.asarray(drafts, jnp.int32)
+    if temperature <= 0.0:
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        accept = (pred == drafts).astype(jnp.int32)
+        # greedy rejection at j means pred[j] != draft[j], so zeroing the
+        # draft index cannot move the argmax: replacement == bonus == pred
+        return jnp.stack([accept, pred, pred]), key
+    key, k_u, k_resid, k_bonus = jax.random.split(key, 4)
+    scaled = logits / temperature
+    p = jax.nn.softmax(scaled, axis=-1)
+    p_draft = jnp.take_along_axis(p, drafts[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(k_u, drafts.shape)
+    accept = (u < p_draft).astype(jnp.int32)
+    # residual: p with the draft index removed, renormalized — categorical
+    # over masked logits IS that distribution, no explicit renorm needed
+    V = logits.shape[-1]
+    draft_mask = drafts[..., None] == jnp.arange(V, dtype=jnp.int32)
+    resid = jax.random.categorical(
+        k_resid, jnp.where(draft_mask, -jnp.inf, scaled)
+    ).astype(jnp.int32)
+    bonus = jax.random.categorical(k_bonus, scaled).astype(jnp.int32)
+    return jnp.stack([accept, resid, bonus]), key

@@ -1,0 +1,394 @@
+"""Speculative decoding: drafters, the fused verify rule, and the
+acceptance-aware control plumbing.
+
+The acceptance bar is exactness: a speculating session (greedy, same
+seeds) must be token-exact with the plain scan decode on both the
+contiguous and paged paths — through prefix hits, a mid-decode session
+kill + requeue, and a cancel between verify rounds.  Plus the issue
+checklist: the n-gram drafter units, the temperature>0 rejection-sampling
+marginal, the counter audit (only ACCEPTED tokens are delivered output),
+the per-request opt-out, and the controller's acceptance-aware k
+(``speculation_k`` + the replica/fleet wiring that carries it to live
+sessions).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import (
+    Drafter,
+    EngineConfig,
+    NgramDrafter,
+    QueueSession,
+    ServingEngine,
+    spec_quantum,
+    verify_tokens,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    # 16-token vocab: greedy streams on a random-init model loop quickly,
+    # so the prompt-lookup drafter actually lands hits and the verify
+    # path is exercised with real acceptances, not just misses
+    cfg = dataclasses.replace(get_config("qwen3-0.6b").reduce(),
+                              vocab_size=16)
+    model = Model(cfg)
+    params = model.init(jax.random.key(1))
+    return cfg, model, params
+
+
+def _engine(model, params, *, paged=False, spec_k=4, batch=3, max_len=64,
+            temperature=0.0):
+    return ServingEngine(model, params, EngineConfig(
+        max_len=max_len, decode_batch=batch, temperature=temperature,
+        decode_chunk=4, mixed_step=True, prefill_chunk=8,
+        paged_kv=paged, spec_k=spec_k))
+
+
+def _drain(sess):
+    while not sess.idle:
+        sess.pump()
+    return sess.results
+
+
+def _run(eng, reqs, *, spec_k, rid_base=0):
+    """One fresh session over ``eng`` at the given draft depth."""
+    sess = QueueSession(eng)
+    sess.spec_k = spec_k
+    for i, (inp, n) in enumerate(reqs):
+        sess.submit(rid_base + i, inp, n)
+    _drain(sess)
+    return {i: sess.results[rid_base + i] for i in range(len(reqs))}
+
+
+# ---------------------------------------------------------------------------
+# drafter units
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_extrapolates_period():
+    d = NgramDrafter(n=3)
+    # period-3 history: the last 3-gram [1,2,3] matched 3 back implies
+    # p=3, and the proposal extends that period for the FULL k
+    ctx = [1, 2, 3, 1, 2, 3]
+    assert d.propose(ctx, 5) == [1, 2, 3, 1, 2]
+    # period 1 (greedy loop on one token): k copies of it
+    assert d.propose([7, 9, 9, 9], 4) == [9, 9, 9, 9]
+
+
+def test_ngram_drafter_miss_and_degenerate_inputs():
+    d = NgramDrafter(n=3, min_n=2)
+    assert d.propose([1, 2, 3, 4, 5], 4) == []     # nothing repeats
+    assert d.propose([1, 2, 1, 2], 0) == []        # k=0 never drafts
+    assert d.propose([1], 4) == []                 # too short for min_n
+    assert NgramDrafter(n=3).propose([], 4) == []
+    with pytest.raises(ValueError):
+        NgramDrafter(n=0)
+
+
+def test_ngram_drafter_prefers_recent_match():
+    # suffix [5] occurs at i=0 and i=2; recency picks i=2 => period 1
+    d = NgramDrafter(n=1)
+    assert d.propose([5, 8, 5, 5], 3) == [5, 5, 5]
+    # protocol: the default drafter satisfies the pluggable interface
+    assert isinstance(d, Drafter)
+
+
+def test_spec_quantum_pow2_buckets():
+    assert spec_quantum(0) == 1
+    assert spec_quantum(-2) == 1
+    assert spec_quantum(1) == 2
+    assert spec_quantum(3) == 4
+    assert spec_quantum(4) == 8        # 4 drafts + carry = 5 -> 8
+    assert spec_quantum(7) == 8
+    assert spec_quantum(15) == 16
+
+
+# ---------------------------------------------------------------------------
+# verify_tokens: greedy rule + rejection-sampling marginal
+# ---------------------------------------------------------------------------
+
+
+def test_verify_greedy_longest_prefix():
+    V, B, Q = 8, 2, 4
+    # row 0: argmax stream [3, 5, 1, 2]; drafts match the first two
+    # row 1: argmax stream [0, 0, 0, 0]; drafts match everything
+    argmax = np.array([[3, 5, 1, 2], [0, 0, 0, 0]])
+    logits = np.full((B, Q, V), -10.0, np.float32)
+    for b in range(B):
+        for j in range(Q):
+            logits[b, j, argmax[b, j]] = 10.0
+    drafts = np.array([[3, 5, 7, 7], [0, 0, 0, 0]], np.int32)
+    key = jax.random.key(0)
+    verdict, key_out = verify_tokens(jnp.asarray(logits), drafts, key, 0.0)
+    v = np.asarray(verdict)
+    np.testing.assert_array_equal(v[0], [[1, 1, 0, 0], [1, 1, 1, 1]])
+    np.testing.assert_array_equal(v[1], argmax)     # replacement == argmax
+    np.testing.assert_array_equal(v[2], argmax)     # bonus == argmax
+    # greedy never consumes entropy: the carried key is bit-identical,
+    # which is what keeps spec sessions exact with the plain key stream
+    assert (jax.random.key_data(key_out)
+            == jax.random.key_data(key)).all()
+
+
+def test_verify_rejection_sampling_marginal():
+    """temperature>0: the emitted token (draft if accepted, else the
+    residual sample) must be marginally distributed exactly as the plain
+    softmax — the standard speculative-sampling guarantee."""
+    temp = 0.7
+    logits = jnp.asarray(
+        np.array([0.9, -0.3, 0.5, -1.1, 0.0], np.float32))[None, None, :]
+    drafts = jnp.full((1, 1), 2, jnp.int32)         # a credible draft
+    p = np.asarray(jax.nn.softmax(logits[0, 0] / temp))
+
+    def emit(key):
+        verdict, _ = verify_tokens(logits, drafts, key, temp)
+        return jnp.where(verdict[0, 0, 0] == 1, drafts[0, 0],
+                         verdict[1, 0, 0])
+
+    n = 8000
+    toks = np.asarray(jax.vmap(emit)(jax.random.split(jax.random.key(7), n)))
+    emp = np.bincount(toks, minlength=5) / n
+    np.testing.assert_allclose(emp, p, atol=0.03)
+
+
+# ---------------------------------------------------------------------------
+# greedy A/B: speculative == scan decode, token-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_token_exact_with_prefix_hit(tiny, paged):
+    """Spec on vs off over ONE engine (sessions share every compiled
+    trace): byte-identical outputs, including a full-prompt prefix hit
+    on the paged path (second submission of the same prompt)."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(0)
+    eng = _engine(model, params, paged=paged, spec_k=4)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 6 + 2 * i)), 20)
+            for i in range(3)]
+    reqs.append((reqs[0][0], 12))       # paged: full-prompt hit
+    ref = _run(eng, reqs, spec_k=0)
+    out = _run(eng, reqs, spec_k=4, rid_base=100)
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(out[i], ref[i])
+    assert eng.telemetry.drafted_tokens > 0, "drafter never fired"
+    assert eng.telemetry.accepted_tokens > 0, "nothing accepted"
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_spec_kill_and_requeue_token_exact(tiny, paged):
+    """Kill a speculating session mid-decode, requeue the recovered rids
+    on a fresh session — outputs byte-identical to an undisturbed
+    spec-off run."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(1)
+    eng = _engine(model, params, paged=paged, spec_k=4)
+    reqs = {rid: (rng.integers(0, cfg.vocab_size, (1, 8 + rid)), 16 + rid)
+            for rid in range(4)}
+    ref = _run(eng, [reqs[r] for r in sorted(reqs)], spec_k=0)
+
+    sess = QueueSession(eng)
+    sess.spec_k = 4
+    for rid, (inp, n) in reqs.items():
+        sess.submit(rid, inp, n)
+    sess.pump()                         # at least one spec round in
+    done = dict(sess.results)
+    lost = sess.inflight_rids()
+    assert lost                         # the kill recovered work
+    sess2 = QueueSession(eng)
+    sess2.spec_k = 4
+    for rid in lost:
+        sess2.submit(rid, *reqs[rid])
+    _drain(sess2)
+    for i, rid in enumerate(sorted(reqs)):
+        got = done.get(rid, sess2.results.get(rid))
+        np.testing.assert_array_equal(got, ref[i])
+
+
+def test_spec_cancel_mid_round_releases_pages(tiny):
+    """Cancel between verify rounds on the paged path: the cancelled
+    slot's pages release, survivors stay token-exact, and the drained
+    session leaks nothing."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(2)
+    eng = _engine(model, params, paged=True, spec_k=4, batch=2)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 8)), 24),
+            (rng.integers(0, cfg.vocab_size, (1, 10)), 24)]
+    ref = _run(eng, reqs, spec_k=0)
+
+    sess = QueueSession(eng)
+    sess.spec_k = 4
+    for rid, (inp, n) in enumerate(reqs):
+        sess.submit(rid, inp, n)
+    sess.pump()                         # both decoding, spec rounds ran
+    live_before = sess.allocator.live_pages
+    assert live_before > 0
+    assert sess.cancel(0)               # active, mid-spec-round
+    assert sess.allocator.live_pages < live_before
+    _drain(sess)
+    assert 0 not in sess.results
+    np.testing.assert_array_equal(sess.results[1], ref[1])
+    assert sess.allocator.live_pages == 0
+
+
+def test_spec_exactness_property(tiny):
+    """Randomized prompt lengths / output budgets / draft depths: the
+    speculating session equals the scan decode, token-exact, and the
+    paged pool drains clean.  Uses hypothesis when available; otherwise
+    a fixed adversarial sweep (depths straddling the pow-2 quantum,
+    budgets that end mid-round) so the property is exercised on
+    hypothesis-less boxes too."""
+    cfg, model, params = tiny
+    engines = {}
+
+    def check(plens, news, k, seed):
+        rng = np.random.default_rng(seed)
+        reqs = [(rng.integers(0, cfg.vocab_size, (1, p)), n)
+                for p, n in zip(plens, news)]
+        if k not in engines:            # one engine per depth: reuse jits
+            engines[k] = _engine(model, params, paged=True, spec_k=k,
+                                 batch=2)
+        eng = engines[k]
+        ref = _run(eng, reqs, spec_k=0, rid_base=1000)
+        out = _run(eng, reqs, spec_k=k)
+        for i in range(len(reqs)):
+            np.testing.assert_array_equal(out[i], ref[i])
+        # write-then-trim never leaks: both sessions drained all pages
+        assert eng.telemetry.useful_tokens >= 0
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        for case in [
+            ([6, 13], [17, 3], 1, 0),       # k=1: quantum 2, tiny drafts
+            ([8, 8], [19, 19], 3, 1),       # k+1 == quantum exactly
+            ([5, 21], [23, 2], 4, 2),       # quantum 8, ragged budgets
+            ([9], [31], 8, 3),              # deep drafts, lone slot
+        ]:
+            check(*case)
+        return
+
+    settings(max_examples=6, deadline=None)(given(
+        plens=st.lists(st.integers(2, 21), min_size=1, max_size=2),
+        news=st.lists(st.integers(1, 24), min_size=2, max_size=2),
+        k=st.sampled_from([1, 3, 4, 8]),
+        seed=st.integers(0, 3),
+    )(check))()
+
+
+# ---------------------------------------------------------------------------
+# counter audit + opt-out
+# ---------------------------------------------------------------------------
+
+
+def test_spec_counters_only_accepted_are_delivered(tiny):
+    """Only ACCEPTED tokens count as delivered output: useful_tokens is
+    exactly the emitted streams, drafted/accepted/spec_rounds carry the
+    speculation ledger, and a rejected draft shows up as wasted — never
+    as goodput."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(3)
+    eng = _engine(model, params, paged=True, spec_k=4, batch=2)
+    sess = QueueSession(eng)
+    sess.submit(0, rng.integers(0, cfg.vocab_size, (1, 8)), 24)
+    reports = []
+    while not sess.idle:
+        reports.append(sess.pump())
+    tel = eng.telemetry
+    assert tel.spec_rounds >= 1
+    assert 0 < tel.accepted_tokens <= tel.drafted_tokens
+    assert tel.spec_accept_rate == pytest.approx(
+        tel.accepted_tokens / tel.drafted_tokens)
+    # emitted == delivered, drafts notwithstanding
+    assert sess.results[0].size == 24
+    assert tel.useful_tokens == 24
+    # the per-pump ledger folds up to the engine totals
+    assert sum(r.drafted_tokens for r in reports) == tel.drafted_tokens
+    assert sum(r.accepted_tokens for r in reports) == tel.accepted_tokens
+    assert sum(r.spec_rounds for r in reports) == tel.spec_rounds
+    # acceptance EWMA materialized for the fleet telemetry bus
+    assert sess.spec_accept_ewma is not None
+    assert 0.0 <= sess.spec_accept_ewma <= 1.0
+
+
+def test_spec_per_request_opt_out(tiny):
+    """``submit(speculate=False)`` pins a request to plain decode: with
+    every request opted out the drafter never fires, and outputs equal
+    the spec-off run exactly."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(4)
+    eng = _engine(model, params, spec_k=4, batch=2)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 7)), 16),
+            (rng.integers(0, cfg.vocab_size, (1, 9)), 16)]
+    ref = _run(eng, reqs, spec_k=0)
+    sess = QueueSession(eng)            # engine default spec_k=4 stays on
+    assert sess.spec_k == 4
+    for rid, (inp, n) in enumerate(reqs):
+        sess.submit(rid, inp, n, speculate=False)
+    _drain(sess)
+    drafted_before = eng.telemetry.drafted_tokens
+    for rid in range(len(reqs)):
+        np.testing.assert_array_equal(sess.results[rid], ref[rid])
+    assert eng.telemetry.drafted_tokens == drafted_before == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance-aware control: speculation_k + replica/fleet wiring
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_k_policy():
+    from repro.core import policy
+    from repro.core.controller import speculation_k
+
+    COST, CAP = policy.COST_OPTIMIZED, policy.CAPACITY_OPTIMIZED
+    assert speculation_k(COST, 8, None) == 8       # no signal yet: grant
+    assert speculation_k(COST, 8, 0.9) == 8
+    assert speculation_k(COST, 8, 0.1) == 0        # acceptance collapse
+    assert speculation_k(COST, 8, 0.1, accept_floor=0.05) == 8
+    assert speculation_k(CAP, 8, 0.9) == 0         # capacity mode: never
+    assert speculation_k(COST, 0, 0.9) == 0        # disabled tier stays off
+
+
+def test_replica_speculation_knob(tiny):
+    from repro.fleet.replica import Replica
+
+    cfg, model, params = tiny
+    eng = _engine(model, params, spec_k=4, batch=2)
+    rep = Replica("t/r1", "t", eng)
+    rep.set_speculation(2)              # commanded before any session
+    rep.activate(0.0)
+    assert rep.session.spec_k == 2      # remembered across warm()
+    rep.set_speculation(7)              # live retune
+    assert rep.session.spec_k == 7
+    rep.set_speculation(-3)             # clamped
+    assert rep.session.spec_k == 0
+    # a never-commanded replica keeps the engine-config default
+    rep2 = Replica("t/r2", "t", eng)
+    rep2.activate(0.0)
+    assert rep2.session.spec_k == 4
+
+
+def test_controller_drives_spec_k_to_zero_under_capacity():
+    """The fleet drill at unit scale: a saturating t=0 burst opens the
+    mode controller in capacity mode, which must command k=0 on the spec
+    tier (``ctl.speculation`` with mode=CAPACITY) — and the live sessions
+    must actually hold the commanded depth."""
+    from repro.fleet.runtime import build_saturated_fleet
+
+    rt = build_saturated_fleet(n_requests=12, n_replicas=1, decode_batch=4,
+                               spec_k=2, seed=6)
+    report = rt.run()
+    assert len(report.requests.records) == 12
+    ev = [e for e in rt.tracer.events if e["name"] == "ctl.speculation"]
+    assert ev, "spec tier never traced a ctl.speculation command"
+    assert any(e["k"] == 0 and e["mode"] == 1 for e in ev), (
+        "capacity mode never drove k to 0: "
+        f"{[(e['t'], e['k'], e['mode']) for e in ev]}")

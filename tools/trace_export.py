@@ -18,7 +18,8 @@ Layout:
   replica lifecycle, preemptions, KV flushes/restores as instant events
   (``i``) on per-category threads, plus mode as a counter track;
 * engine pump phase walls (admit/dispatch/sync) become counter events on
-  the replica that reported them.
+  the replica that reported them, as do per-pump speculative-decode
+  drafted/accepted token counts (``engine.speculate``).
 
 A request that migrated (kill -> requeue -> re-dispatch) renders as one
 serve slice per replica visited — the gap between them is exactly the
@@ -55,8 +56,10 @@ _CTL_TRACKS = {
     "ctl.crash_backoff": 3,
     "ctl.kv_flush": 4,
     "ctl.kv_restore": 4,
+    "ctl.speculation": 5,
 }
-_CTL_TRACK_NAMES = {1: "mode", 2: "autoscale", 3: "failures", 4: "kv"}
+_CTL_TRACK_NAMES = {1: "mode", 2: "autoscale", 3: "failures", 4: "kv",
+                    5: "speculation"}
 FLEET_PID = 0
 
 
@@ -161,6 +164,15 @@ def convert(events: List[Dict[str, Any]]) -> Dict[str, Any]:
                         "ts": _us(ev["t"]),
                         "args": {k: ev.get(k, 0.0)
                                  for k in ("admit_s", "dispatch_s", "sync_s")}})
+        elif cat == "engine" and name == "engine.speculate":
+            # speculation rides the replica that reported it: a counter
+            # track of drafted vs accepted tokens per pump, so acceptance
+            # collapse is visible on the timeline next to the pump phases
+            rep = str(ev.get("replica", "?"))
+            out.append({"ph": "C", "pid": pid_of(rep), "name": "speculation",
+                        "ts": _us(ev["t"]),
+                        "args": {k: ev.get(k, 0)
+                                 for k in ("drafted", "accepted")}})
     return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 
