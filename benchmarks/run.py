@@ -27,6 +27,7 @@ MODULES = [
     ("kernels", "benchmarks.kernels"),
     ("fleet", "benchmarks.fleet"),
     ("economics", "benchmarks.economics"),
+    ("multimodel", "benchmarks.multimodel"),
 ]
 
 

@@ -41,6 +41,41 @@ def get_config(arch: str) -> ModelConfig:
     return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
 
 
+# Serving arches that are NOT token LMs: they resolve to a job-engine
+# descriptor (the paper's Table-1 deployment units) instead of a
+# ``ModelConfig``.  ``resolve_serving_arch`` is the one lookup the fleet
+# uses to validate ``TierSpec.arch`` up front.
+JOB_ARCHES: Tuple[str, ...] = ("sd21",)
+
+
+def resolve_serving_arch(arch: str):
+    """name -> what serves it: a ``ModelConfig`` for token-LM arches, or
+    the DU-profile tuple for diffusion-style job arches (``sd21``).
+
+    This is the fleet's fail-fast registry: an unknown ``TierSpec.arch``
+    raises here, at fleet construction, with the full known-name list —
+    instead of a deep ``KeyError`` inside lazy engine builds.
+    """
+    if arch in JOB_ARCHES:
+        mod = importlib.import_module(f"repro.configs.{arch}")
+        return mod.paper_deployment_units()
+    try:
+        return get_config(arch)
+    except KeyError:
+        known = sorted(_ARCH_MODULES) + sorted(JOB_ARCHES)
+        raise KeyError(
+            f"unknown serving arch {arch!r}; known: {known}"
+        ) from None
+
+
+def serving_family(arch: str) -> str:
+    """Model family string for a serving arch (``"job"`` for job-engine
+    arches like sd21) — what model-compatibility routing keys on."""
+    if arch in JOB_ARCHES:
+        return "job"
+    return get_config(arch).family
+
+
 def all_configs() -> Dict[str, ModelConfig]:
     return {a: get_config(a) for a in ARCH_IDS}
 
@@ -65,11 +100,14 @@ __all__ = [
     "TRAIN_4K",
     "HardwareTier",
     "InputShape",
+    "JOB_ARCHES",
     "ModelConfig",
     "TIERS",
     "TPU_V5E",
     "all_configs",
     "get_config",
     "grid_cells",
+    "resolve_serving_arch",
+    "serving_family",
     "shape_grid",
 ]

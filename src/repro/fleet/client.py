@@ -65,6 +65,7 @@ class FleetClient:
             rid=rid, arrival_t=self.runtime.t, prompt=request.prompt_2d(),
             max_new=int(request.max_new), slo_class=request.slo_class,
             priority=request.priority, deadline_s=request.deadline_s,
+            model=request.model,
         ))
         handle = RequestHandle(request, rid, self, self.runtime.t)
         self.handles[rid] = handle
@@ -81,7 +82,7 @@ class FleetClient:
             ireq = InferenceRequest(
                 prompt=wreq.prompt, max_new=wreq.max_new,
                 slo_class=wreq.slo_class, priority=wreq.priority,
-                deadline_s=wreq.deadline_s,
+                deadline_s=wreq.deadline_s, model=wreq.model,
             )
             handle = RequestHandle(ireq, wreq.rid, self, wreq.arrival_t)
             self.handles[wreq.rid] = handle

@@ -50,8 +50,14 @@ from repro.serving.api import slo_order_key
 class Dispatcher:
     def __init__(self, tiers: Sequence[str], *, max_retries: int = 16,
                  hedge_fraction: float = 0.0, prefix_affinity: bool = True,
-                 min_affinity_tokens: int = 16):
+                 min_affinity_tokens: int = 16,
+                 arch_of: Optional[Dict[str, str]] = None):
         self.tiers = list(tiers)
+        # tier name -> arch it serves (model-aware routing): a request with
+        # a nonempty ``model`` is only ever placed on tiers whose arch
+        # matches.  Tiers absent from the map accept anything (legacy
+        # single-model construction).
+        self.arch_of: Dict[str, str] = dict(arch_of or {})
         # flight recorder (runtime-owned; disabled stub when standalone)
         self.tracer: Tracer = Tracer.disabled()
         self.max_retries = max_retries
@@ -77,6 +83,14 @@ class Dispatcher:
         return not self.backlog and not self.inflight
 
     # -- placement ----------------------------------------------------------
+    def _compatible(self, req: Request, tier: str) -> bool:
+        """Model-aware routing gate: a request that names a model may only
+        land on tiers serving that arch.  Empty ``model`` (single-model
+        fleets, legacy traces) and unmapped tiers accept everything."""
+        if not req.model:
+            return True
+        return self.arch_of.get(tier, req.model) == req.model
+
     @staticmethod
     def _masked_weights(weights: np.ndarray, has_room: np.ndarray) -> np.ndarray:
         """The one place the weighted policy masks/normalizes: weights of
@@ -132,6 +146,8 @@ class Dispatcher:
         # (backlogged requests are re-scored every tick)
         toks = req.token_key()
         for ti, tier in enumerate(self.tiers):
+            if not self._compatible(req, tier):
+                continue      # affinity never crosses a model boundary
             for rep in replicas_by_tier.get(tier, []):
                 if not rep.accepting or not rep.fits(req):
                     continue
@@ -181,7 +197,9 @@ class Dispatcher:
         while self.backlog:
             req = self.backlog[0]
             has_room = np.array(
-                [self._best_replica(replicas_by_tier.get(t, []), req) is not None
+                [self._compatible(req, t)
+                 and self._best_replica(replicas_by_tier.get(t, []), req)
+                 is not None
                  for t in self.tiers]
             )
             affinity = self._affinity_replica(req, replicas_by_tier)
@@ -197,8 +215,9 @@ class Dispatcher:
                     # (engine max_len / page budget too small): rotate it to
                     # the back so it cannot head-of-line block the backlog,
                     # and drop it after max_retries failed placements.
-                    live = [r for reps in replicas_by_tier.values()
-                            for r in reps if r.live]
+                    live = [r for t in self.tiers
+                            if self._compatible(req, t)
+                            for r in replicas_by_tier.get(t, []) if r.live]
                     if live and not any(r.fits(req) for r in live):
                         self.backlog.popleft()
                         if req.rid in rotated:
@@ -234,7 +253,7 @@ class Dispatcher:
             self.tracer.event("req.dispatched", t=now, cat="req", rid=req.rid,
                               tier=tier, replica=rep.name, load=rep.load,
                               affinity=affinity is not None,
-                              retries=req.retries)
+                              retries=req.retries, model=req.model)
             if hedge is not None:
                 self.tracer.event("req.hedged", t=now, cat="req", rid=req.rid,
                                   tier=hedge.tier, replica=hedge.name)
@@ -257,7 +276,7 @@ class Dispatcher:
         if self._hedge_debt < 1.0:
             return None
         for ti, tier in enumerate(self.tiers):
-            if ti == primary_ti:
+            if ti == primary_ti or not self._compatible(req, tier):
                 continue
             rep = self._best_replica(replicas_by_tier.get(tier, []), req)
             if rep is not None and rep.submit(req):
@@ -329,7 +348,7 @@ class Dispatcher:
                 requeued.append(retried)
                 self.tracer.event("req.requeued", cat="req", rid=rid,
                                   replica=victim.name, tier=victim.tier,
-                                  retries=retried.retries)
+                                  retries=retried.retries, model=req.model)
         # oldest work to the front so retried requests cut the line
         for req in reversed(requeued):
             self.backlog.appendleft(req)

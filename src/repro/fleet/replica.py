@@ -74,7 +74,7 @@ class Replica:
     # -- lifecycle ----------------------------------------------------------
     def warm(self) -> None:
         assert self.state == ReplicaState.PROVISIONING, self.state
-        self.session = QueueSession(self.engine)
+        self.session = self.engine.new_session()
         if self._spec_k_cmd is not None:
             # the controller commanded a depth before this session existed
             # (tick 0, or a replica provisioned mid-run): a session born
@@ -219,9 +219,10 @@ class Replica:
         self._hb_id = hb_id
 
     def checkpoint_frontiers(self):
-        """Every decoding request's ``KVFrontier`` (the flush unit the
-        runtime pushes into the fleet KV store)."""
-        if self.session is None or not self.session.paged:
+        """Every decoding request's frontier — ``KVFrontier`` on paged
+        sessions, ``StateFrontier`` on scan-state sessions — the flush unit
+        the runtime pushes into the fleet KV store."""
+        if self.session is None or not self.session.supports_frontiers:
             return []
         return self.session.extract_frontiers()
 

@@ -258,6 +258,10 @@ class FleetConfig:
                                       # (0 => per tier: cold-start median
                                       # + one tick — exactly the lag a
                                       # provision decision pays)
+    # -- cross-model capacity trading (docs/multimodel.md) ------------------
+    capacity_trading: bool = False    # let a hot model family borrow pool
+                                      # ceiling from an idle one (traced as
+                                      # ctl.capacity_trade decisions)
     # -- flight recorder ----------------------------------------------------
     trace: bool = True                # structured event tracing (obs.Tracer)
     trace_capacity: int = 1 << 16     # event ring size (oldest fall off)
@@ -363,6 +367,12 @@ class FleetRuntime:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tier names: {names}")
 
+        # fail fast on unknown arches (registry lookup raises with the known
+        # list) instead of deep inside the first lazy _engine_for call
+        from repro.configs import resolve_serving_arch
+        for spec in self.tiers:
+            resolve_serving_arch(spec.arch)
+
         if self.cfg.forecast and self.cfg.forecast_period_s <= 0:
             raise ValueError(
                 "FleetConfig.forecast=True requires forecast_period_s > 0")
@@ -429,7 +439,9 @@ class FleetRuntime:
             if self.cfg.trace else Tracer.disabled())
         self.decisions: List[DecisionRecord] = []
         self.dispatcher = Dispatcher(names, max_retries=self.cfg.max_retries,
-                                     hedge_fraction=self.cfg.hedge_fraction)
+                                     hedge_fraction=self.cfg.hedge_fraction,
+                                     arch_of={t.name: t.arch
+                                              for t in self.tiers})
         self.dispatcher.tracer = self.tracer
         # durable KV: the fleet-global frontier store (None = feature off)
         self.kv_store: Optional[KVStore] = (
@@ -464,6 +476,11 @@ class FleetRuntime:
         self._crash_t: Dict[str, List[float]] = {}
         self._hold_until: Dict[str, float] = {}
         self._last_want: Dict[str, int] = {}   # autoscale-change edge detect
+        # cross-model capacity trading: the model families present (tier
+        # arches + "" for model-agnostic traffic) and the live leases —
+        # (receiver_tier, donor_tier) -> replica-ceiling units on loan
+        self._models: List[str] = sorted({t.arch for t in self.tiers} | {""})
+        self._leases: Dict[Tuple[str, str], int] = {}
         self._spec_k_live: Dict[str, int] = {}  # speculation-change edge detect
         self._backoff_rng = np.random.default_rng(self.cfg.seed + 7)
         # (replica, rid) -> frontier length at last checkpoint (the
@@ -534,6 +551,19 @@ class FleetRuntime:
     # -- engines / replicas --------------------------------------------------
     def _engine_for(self, spec: TierSpec) -> ServingEngine:
         if spec.name not in self._engines:
+            from repro.configs import JOB_ARCHES
+
+            if spec.arch in JOB_ARCHES:
+                # diffusion-style job tier: whole-output DUs behind the same
+                # session/pump surface, no KV cache, no token streaming
+                from repro.serving.diffusion import (DiffusionConfig,
+                                                     DiffusionEngine)
+
+                self._engines[spec.name] = DiffusionEngine(DiffusionConfig(
+                    batch=spec.decode_batch, max_len=spec.max_len,
+                    seed=spec.param_seed))
+                return self._engines[spec.name]
+
             import jax
 
             from repro.configs import get_config
@@ -789,13 +819,29 @@ class FleetRuntime:
         for req in arrived:
             self.tracer.event("req.queued", t=req.arrival_t, cat="req",
                               rid=req.rid, prompt_len=req.prompt_len,
-                              max_new=req.max_new, slo=req.slo_class)
+                              max_new=req.max_new, slo=req.slo_class,
+                              model=req.model)
         self.dispatcher.submit(arrived)
         arrival_rate = len(arrived) / cfg.tick_s
         backlog_pressure = len(self.dispatcher.backlog) / (
             cfg.backlog_drain_ticks * cfg.tick_s
         )
         demand = self._demand.update(arrival_rate) + backlog_pressure
+        # per-model demand signals (arrivals + backlog attributed to the
+        # arch a request targets; "" = model-agnostic) — what the capacity
+        # trader reads to decide which family is idle and which is hot
+        arrived_by_model: Dict[str, int] = {}
+        for req in arrived:
+            arrived_by_model[req.model] = arrived_by_model.get(req.model, 0) + 1
+        backlog_by_model: Dict[str, int] = {}
+        for req in self.dispatcher.backlog:
+            backlog_by_model[req.model] = backlog_by_model.get(req.model, 0) + 1
+        for m in self._models:
+            self.telemetry.record_model_demand(
+                m,
+                arrived_by_model.get(m, 0) / cfg.tick_s
+                + backlog_by_model.get(m, 0)
+                / (cfg.backlog_drain_ticks * cfg.tick_s))
         # recovery pressure: requeued work is demand the arrival EWMA never
         # saw — fold it in so the controller buys capacity for retries too
         recovery = self._recovery_rate.update(self._requeue_pressure / cfg.tick_s)
@@ -1053,6 +1099,7 @@ class FleetRuntime:
                               observed=round(self._demand.get(), 4),
                               predicted=round(self.forecaster.peek(t), 4),
                               ready=self.forecaster.ready)
+        wants: Dict[str, int] = {}
         for i, spec in enumerate(self.tiers):
             a = self.autoscalers[spec.name]
             a.target_metric_value = max(0.8 * float(measured[i]), 1e-6)
@@ -1085,6 +1132,14 @@ class FleetRuntime:
             if t < self._hold_until.get(spec.name, 0.0):
                 # crash-loop hold: keep what exists, provision nothing new
                 want = min(want, pool.ready + pool.inflight)
+            wants[spec.name] = int(want)
+        if cfg.capacity_trading:
+            # cross-model capacity trading: move pool ceiling from an idle
+            # model family to one scaling into its cap (docs/multimodel.md)
+            self._trade_capacity(t, wants)
+        for i, spec in enumerate(self.tiers):
+            want = wants[spec.name]
+            pool = self.pools[spec.name]
             if want != self._last_want.get(spec.name):
                 self.tracer.event("ctl.scale", tier=spec.name, want=int(want),
                                   prev=self._last_want.get(spec.name),
@@ -1135,6 +1190,84 @@ class FleetRuntime:
         self.t += cfg.tick_s
         self.ticks += 1
 
+    def _trade_capacity(self, t: float, wants: Dict[str, int]) -> None:
+        """Cross-model capacity trading: lease pool-ceiling units from a
+        tier whose model family is idle to a tier of ANOTHER family that is
+        scaling into its cap (a diffusion burst borrowing nodes from the
+        overnight-idle LLM pool, and vice versa).
+
+        A lease moves ``base_capacity`` between pools — the fleet's total
+        obtainable-replica budget is conserved — and is RETURNED as soon as
+        the receiver no longer needs the headroom, so each family's
+        nominal ceiling is a steady-state invariant, not a ratchet.  Trades
+        branch on the per-model demand EWMAs the telemetry bus aggregates
+        (a donor must be measurably colder than the receiver), and every
+        lease/return is traced as a ``ctl.capacity_trade`` decision."""
+        arch = {s.name: s.arch for s in self.tiers}
+
+        def spare(name: str) -> int:
+            # ceiling units a tier provably is not using and will not use
+            # this tick: cap minus the larger of its want and its up/in-
+            # flight node count (so shrinking by `spare` never clips a
+            # live replica into a forced reclaim)
+            p = self.pools[name]
+            used = max(wants.get(name, 0),
+                       p.ready + p.inflight + p.warm + p.warm_inflight)
+            return p.capacity_at(t) - used
+
+        # 1. return leases the receiver no longer needs (LIFO per lease)
+        for (recv, donor), n in list(self._leases.items()):
+            back = min(n, spare(recv))
+            if back <= 0:
+                continue
+            self.pools[recv].base_capacity -= back
+            self.pools[donor].base_capacity += back
+            left = n - back
+            if left:
+                self._leases[(recv, donor)] = left
+            else:
+                del self._leases[(recv, donor)]
+            self.telemetry.record_trade(donor, recv, -back)
+            self.tracer.event("ctl.capacity_trade", action="return",
+                              tier=recv, donor=donor, n=int(back),
+                              model=arch[recv], donor_model=arch[donor])
+
+        # 2. new borrows: deficit tiers take from the coldest other-model
+        # donor first
+        for spec in self.tiers:
+            pr = self.pools[spec.name]
+            if pr.capacity_at(t) < pr.base_capacity:
+                continue      # externally capped (outage/limit event) —
+                              # extra base ceiling could not be used anyway
+            deficit = wants[spec.name] - pr.capacity_at(t)
+            if deficit <= 0:
+                continue
+            my_demand = self.telemetry.model_demand(arch[spec.name])
+            donors = sorted(
+                (d for d in self.tiers
+                 if d.arch != arch[spec.name] and spare(d.name) > 0
+                 and self.telemetry.model_demand(d.arch) < my_demand),
+                key=lambda d: self.telemetry.model_demand(d.arch))
+            for dspec in donors:
+                n = min(deficit, spare(dspec.name))
+                if n <= 0:
+                    continue
+                self.pools[dspec.name].base_capacity -= n
+                pr.base_capacity += n
+                key = (spec.name, dspec.name)
+                self._leases[key] = self._leases.get(key, 0) + n
+                deficit -= n
+                self.telemetry.record_trade(dspec.name, spec.name, n)
+                self.tracer.event(
+                    "ctl.capacity_trade", action="borrow", tier=spec.name,
+                    donor=dspec.name, n=int(n), model=arch[spec.name],
+                    donor_model=arch[dspec.name],
+                    demand=round(my_demand, 4),
+                    donor_demand=round(
+                        self.telemetry.model_demand(arch[dspec.name]), 4))
+                if deficit <= 0:
+                    break
+
     def _complete(self, rid: int, toks: np.ndarray, rep: Replica,
                   spec: TierSpec, completions_per_tier: Dict[str, int],
                   latency_sum: Dict[str, float]) -> None:
@@ -1155,7 +1288,8 @@ class FleetRuntime:
         self.tracer.event("req.completed", t=complete_t, cat="req", rid=rid,
                           replica=source.name, tier=source.tier,
                           tokens=rec.tokens, ttft_s=rec.ttft_s,
-                          tpot_s=rec.tpot_s, retries=req.retries)
+                          tpot_s=rec.tpot_s, retries=req.retries,
+                          model=req.model)
         self.telemetry.record_completion(source.tier, source.name,
                                          rec.ttft_s, rec.tpot_s, rec.tokens)
         completions_per_tier[spec.name] += 1
@@ -1176,6 +1310,11 @@ class FleetRuntime:
         plens = sorted({r.prompt_len for r in self.workload}) or [8]
         for spec in self.tiers:
             eng = self._engine_for(spec)
+            if getattr(eng, "is_job_engine", False):
+                # diffusion job engines compile one denoise scan + one slot
+                # placement; the engine owns its own (tiny) warmup
+                eng.warm()
+                continue
             vocab = eng.model.cfg.vocab_size
             sess = QueueSession(eng)
             # warm with speculation OFF so the plain chunk scan compiles
@@ -1553,6 +1692,93 @@ def build_day_fleet(
             # epsilon, ceil() of the decaying arrival EWMA pins one
             # replica per tier all night and the idle window bills anyway
             autoscaler=AutoscalerConfig(scale_down_stabilization_s=10.0,
+                                        scale_to_zero_eps=0.05),
+        ),
+    )
+
+
+def build_multimodel_day_fleet(
+    *,
+    llm_arch: str = "qwen3-0.6b",
+    scan_arch: str = "rwkv6-7b",
+    job_arch: str = "sd21",
+    n_days: int = 2,
+    period_s: float = 120.0,
+    llm_base_rps: float = 0.6,
+    llm_peak_rps: float = 2.5,
+    scan_rps: float = 0.4,
+    job_burst: int = 12,
+    job_max_new: Tuple[int, int] = (6, 12),
+    capacity_trading: bool = True,
+    seed: int = 0,
+) -> FleetRuntime:
+    """The heterogeneous multi-model fleet: three model FAMILIES behind one
+    runtime — a paged transformer LLM tier, a constant-state scan tier
+    (rwkv), and a diffusion-style job tier (the paper's sd21 DUs) — each
+    fed its own tagged workload so the dispatcher's model-aware routing is
+    load-bearing (a misroute would put a diffusion job on an LLM engine).
+
+    The LLM trace is diurnal with hard zero-traffic nights; the diffusion
+    jobs arrive as one synchronized burst INSIDE the second night window —
+    exactly when the LLM pool is idle — so with ``capacity_trading`` on,
+    the jobs tier (ceiling 1) borrows pool ceiling from the sleeping LLM
+    tier, traced as ``ctl.capacity_trade`` decisions, and returns it
+    before the morning ramp."""
+    from repro.configs import get_config
+    from repro.fleet.workload import (INTERACTIVE, burst_of, day_cycle_trace,
+                                      poisson_trace)
+
+    vocab_llm = get_config(llm_arch).reduce().vocab_size
+    vocab_scan = get_config(scan_arch).reduce().vocab_size
+    llm_reqs = day_cycle_trace(
+        n_days, vocab_size=vocab_llm, period_s=period_s,
+        base_rps=llm_base_rps, peak_rps=llm_peak_rps, night_frac=0.3,
+        prompt_len=(8, 8), max_new=(4, 12), seed=seed, model=llm_arch)
+    scan_reqs = poisson_trace(
+        lambda t: scan_rps, n_days * period_s, vocab_size=vocab_scan,
+        prompt_len=(8, 8), max_new=(4, 10), classes=(INTERACTIVE,),
+        seed=seed + 1, max_rate=scan_rps, model=scan_arch)
+    # the diffusion burst lands just inside the LAST night window (t =
+    # (n_days-1)*period .. +0.3*period): LLM demand has decayed to ~0, so
+    # the trade has a willing donor
+    burst_t = (n_days - 1) * period_s + 0.05 * period_s
+    job_reqs = burst_of(job_burst, vocab_size=1024, at_t=burst_t,
+                        prompt_len=8, max_new=job_max_new, seed=seed + 2,
+                        model=job_arch, slo_class="job")
+    workload: List[Request] = []
+    rid = 0
+    for group in (llm_reqs, scan_reqs, job_reqs):
+        for r in group:
+            r.rid = rid
+            rid += 1
+            workload.append(r)
+
+    tiers = [
+        TierSpec(name="llm", arch=llm_arch, cost_per_hour=2.0,
+                 nominal_t_max=1.5, latency_s=1.0, decode_batch=4,
+                 decode_chunk=4, queue_limit=8, base_capacity=6,
+                 initial_replicas=1, provision_delay_s=2.0,
+                 paged_kv=True, page_size=8),
+        TierSpec(name="scan", arch=scan_arch, cost_per_hour=1.5,
+                 nominal_t_max=1.0, latency_s=1.5, decode_batch=2,
+                 decode_chunk=4, queue_limit=6, base_capacity=3,
+                 initial_replicas=1, provision_delay_s=2.0,
+                 mixed_step=False),
+        # ceiling 1 on purpose: the burst CANNOT be served in time on the
+        # jobs tier's own budget — serving it is what the trade buys
+        TierSpec(name="jobs", arch=job_arch, cost_per_hour=2.5,
+                 nominal_t_max=0.5, latency_s=5.0, decode_batch=4,
+                 max_len=64, decode_chunk=4, queue_limit=12,
+                 base_capacity=1, initial_replicas=1,
+                 provision_delay_s=1.0, mixed_step=False),
+    ]
+    return FleetRuntime(
+        tiers, workload,
+        FleetConfig(
+            seed=seed, capacity_trading=capacity_trading,
+            controller=ControllerConfig(hysteresis_margin=0.25,
+                                        min_dwell_s=4.0),
+            autoscaler=AutoscalerConfig(scale_down_stabilization_s=8.0,
                                         scale_to_zero_eps=0.05),
         ),
     )

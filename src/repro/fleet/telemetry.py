@@ -134,6 +134,12 @@ class TelemetryBus:
         self.tier_warm_promotions: Dict[str, int] = {t: 0 for t in tiers}
         self.tier_preemptions: Dict[str, int] = {t: 0 for t in tiers}
         self.tier_idle_released: Dict[str, int] = {t: 0 for t in tiers}
+        # cross-model capacity trading: per-MODEL demand EWMAs (keyed by the
+        # arch a request targets, "" = model-agnostic traffic) and per-tier
+        # lease totals — ceiling units this tier borrowed (+) / lent (-)
+        self._model_demand: Dict[str, Ewma] = {}
+        self.tier_borrowed: Dict[str, int] = {t: 0 for t in tiers}
+        self.tier_lent: Dict[str, int] = {t: 0 for t in tiers}
         # structured metrics: fixed-bucket histograms give the snapshot's
         # EWMA levels a distribution (real p50/p90/p99, mergeable across
         # runs) and the cumulative dicts above a Prometheus exposition
@@ -303,6 +309,31 @@ class TelemetryBus:
         if idle:
             self.tier_idle_released[tier] += 1
 
+    # -- cross-model capacity trading ---------------------------------------
+    def record_model_demand(self, model: str, rate: float) -> None:
+        """One tick of per-model demand (arrivals/s + backlog pressure for
+        requests targeting ``model``); updated every tick — including with
+        zero — so an idle family's signal decays instead of pinning."""
+        if model not in self._model_demand:
+            self._model_demand[model] = Ewma(self.alpha)
+        self._model_demand[model].update(rate)
+
+    def model_demand(self, model: str) -> float:
+        """The demand EWMA for one model family (0 until first recorded)."""
+        ew = self._model_demand.get(model)
+        return ew.get() if ew is not None else 0.0
+
+    def model_demand_snapshot(self) -> Dict[str, float]:
+        return {m: ew.get() for m, ew in self._model_demand.items()}
+
+    def record_trade(self, donor_tier: str, receiver_tier: str, n: int) -> None:
+        """``n`` ceiling units moved donor -> receiver (negative = a lease
+        being returned); both sides' cumulative totals move together so
+        conservation is auditable from the snapshot alone."""
+        self.tier_borrowed[receiver_tier] = (
+            self.tier_borrowed.get(receiver_tier, 0) + int(n))
+        self.tier_lent[donor_tier] = self.tier_lent.get(donor_tier, 0) + int(n)
+
     def forget_replica(self, replica_name: str) -> None:
         self.replica.pop(replica_name, None)
 
@@ -380,6 +411,8 @@ class TelemetryBus:
                 "warm_promotions": float(self.tier_warm_promotions[tier]),
                 "preemptions": float(self.tier_preemptions[tier]),
                 "idle_released": float(self.tier_idle_released[tier]),
+                "capacity_borrowed": float(self.tier_borrowed[tier]),
+                "capacity_lent": float(self.tier_lent[tier]),
             }
             for tier in self.tiers
         }

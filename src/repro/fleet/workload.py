@@ -31,10 +31,15 @@ INTERACTIVE = SLOClass("interactive", ttft_target_s=2.0,
                        latency_target_s=15.0, weight=0.7)
 BATCH = SLOClass("batch", ttft_target_s=30.0,
                  latency_target_s=120.0, weight=0.3)
+# diffusion-style jobs (the paper's sd21 DUs): seconds-long, non-streaming,
+# highly batchable — no meaningful TTFT (the whole output lands at once),
+# but a completion deadline tighter than batch backfill
+JOB = SLOClass("job", ttft_target_s=10.0,
+               latency_target_s=30.0, weight=0.0)
 
 # class-name -> SLOClass, the targets ``RequestLog.slo_attainment`` scores
 # against (the economics bench's SLO axis)
-SLO_TARGETS = {c.name: c for c in (INTERACTIVE, BATCH)}
+SLO_TARGETS = {c.name: c for c in (INTERACTIVE, BATCH, JOB)}
 
 
 @dataclass
@@ -51,6 +56,9 @@ class Request:
     deadline_s: Optional[float] = None   # relative to arrival; past it the
                                          # request keeps serving but loses
                                          # hedging (latency is already lost)
+    model: str = ""               # arch this request targets ("" = any tier);
+                                  # the dispatcher only places it on tiers
+                                  # whose TierSpec.arch matches
     # lazy int-tuple form of the prompt (the prefix-cache key shape);
     # carried through retried() copies so a backlogged request boxes once
     _token_key: Optional[tuple] = field(default=None, repr=False, compare=False)
@@ -120,6 +128,7 @@ def poisson_trace(
     seed: int = 0,
     n_max: Optional[int] = None,
     max_rate: Optional[float] = None,
+    model: str = "",
 ) -> List[Request]:
     """Sample a full request trace: Poisson arrivals + per-request shapes.
 
@@ -140,7 +149,7 @@ def poisson_trace(
         cls = classes[int(rng.choice(len(classes), p=weights))]
         prompt = rng.integers(0, vocab_size, (1, plen), dtype=np.int64)
         reqs.append(Request(rid=rid, arrival_t=float(t), prompt=prompt,
-                            max_new=new, slo_class=cls.name))
+                            max_new=new, slo_class=cls.name, model=model))
     return reqs
 
 
@@ -184,6 +193,7 @@ def day_cycle_trace(
     max_new: Tuple[int, int] = (4, 16),
     classes: Sequence[SLOClass] = (INTERACTIVE, BATCH),
     seed: int = 0,
+    model: str = "",
 ) -> List[Request]:
     """``n_days`` compressed diurnal cycles of Poisson arrivals over
     ``day_cycle_rate`` — zero-traffic night gaps included, deterministic
@@ -193,7 +203,7 @@ def day_cycle_trace(
     return poisson_trace(rate, n_days * period_s, vocab_size=vocab_size,
                          prompt_len=prompt_len, max_new=max_new,
                          classes=classes, seed=seed,
-                         max_rate=peak_rps * 1.05)
+                         max_rate=peak_rps * 1.05, model=model)
 
 
 def shared_prefix_trace(
@@ -244,6 +254,8 @@ def burst_of(
     max_new: Tuple[int, int] = (4, 12),
     seed: int = 0,
     rid_base: int = 0,
+    model: str = "",
+    slo_class: str = "interactive",
 ) -> List[Request]:
     """A synchronized burst (all requests arrive at once) — the saturating
     workload for goodput benchmarks and failover drills."""
@@ -254,6 +266,8 @@ def burst_of(
             arrival_t=at_t,
             prompt=rng.integers(0, vocab_size, (1, prompt_len), dtype=np.int64),
             max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
+            slo_class=slo_class,
+            model=model,
         )
         for i in range(n)
     ]

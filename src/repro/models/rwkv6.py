@@ -5,11 +5,12 @@ Recurrence per head (r,k,v ∈ R^N rows, state S ∈ R^{N×N}):
     y_t = r_t · (S_{t-1} + (u ∘ k_t)^T v_t)
     S_t = diag(w_t) · S_{t-1} + k_t^T v_t          w_t = exp(-exp(ŵ_t)) ∈ (0,1)
 
-The sequence form used for training/prefill is *chunked*: within a chunk all
-pairwise decays D[t,s] = ∏_{u=s+1}^{t-1} w_u are computed from cumulative
-log-decays as exp(non-positive), so nothing overflows; across chunks a
-(B,H,N,N) fp32 state is carried by lax.scan.  This is the pure-JAX oracle the
-``repro.kernels.rwkv6_scan`` Pallas kernel is validated against.
+The sequence form used for training/prefill (``wkv_chunked``) carries the
+(B,H,N,N) fp32 state through a lax.scan with the per-token decay exps and
+the u-bonus hoisted out of the sequential core — on CPU-class backends this
+hoisted recurrence measurably beats every tiled/pairwise formulation (see
+its docstring).  The chunked pairwise-decay math lives in the
+``repro.kernels.rwkv6_scan`` Pallas kernel, which is validated against it.
 
 Block layout follows the RWKV-6 paper: time-mix with data-dependent lerp
 (LoRA-produced mixes for r,k,v,w,g), decay LoRA, per-head GroupNorm, and a
@@ -84,78 +85,49 @@ def wkv_chunked(
     u: jax.Array,        # (H, N)
     state0: jax.Array,   # (B, H, N, N) fp32
     chunk: int = 64,
-    sub: int = 16,
+    sub: int = 8,
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (y (B,S,H,N), final_state (B,H,N,N)).
 
-    Two-level chunking (§Perf iteration 1): the naive chunk form
-    materializes a (C,C,N) pairwise-decay tensor per chunk — at rwkv6-7b
-    train shapes that tensor dominated HLO HBM traffic (roofline memory
-    term ≈ 958 s).  Splitting each chunk into ``sub``-blocks lets
-    off-diagonal work run as plain N-contraction matmuls with per-pair
-    boundary renormalization exp(a_t − cum_jend)·exp(cum_jend − cum_s)
-    (both factors ≤ 1 ⇒ overflow-free), leaving only (sub,sub,N) diagonal
-    tensors — a 16-32× cut in scan-path HBM bytes.
+    Hoisted-recurrence form (§Perf iteration 3).  Earlier iterations tiled
+    the sequence into chunks/sub-blocks with pairwise-decay tensors — the
+    classic parallel-hardware formulation (it is what the
+    ``repro.kernels.rwkv6_scan`` Pallas kernel implements).  Measured on
+    the single-core CPU backend at serving shapes they LOSE to the plain
+    token scan (0.3-0.8x, BENCH_baseline's ``wkv6_chunked_1k``): the
+    (N,N) state stays L2-resident across steps, so the scan is bound by
+    in-cache elementwise traffic, and every chunked variant replaces that
+    with batched (sub,N)x(N,N) gemms too small to amortize their per-batch
+    overhead plus strided relayout copies.  The recurrence itself is the
+    fastest correct form here — what remains is to strip it:
+
+    * exp(w) for every token is ONE vectorized op outside the scan
+      instead of a small exp per step inside it;
+    * the u-bonus ``r·(u∘k)ᵀv`` never touches the state, so it is a
+      single streaming elementwise pass over the whole sequence, hoisted
+      out of the sequential core entirely;
+    * the step body is exactly one matvec against the state plus the
+      rank-1 state update — everything XLA can fuse into the loop.
+
+    ``chunk``/``sub`` are accepted for signature compatibility with the
+    tiled iterations (callers pin chunk to match the Pallas kernel); they
+    do not affect the result.
     """
+    del chunk, sub          # tiling hints: no effect on the sequential form
     B, S, H, N = r.shape
-    chunk = min(chunk, S)
-    assert S % chunk == 0
-    nc = S // chunk
-    sub = min(sub, chunk)
-    if chunk % sub != 0:
-        sub = chunk        # odd chunk: single diagonal block (small-S path)
-    ns = chunk // sub
-
-    def to_chunks(x):
-        return x.reshape(B, nc, chunk, H, N).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
-
-    rc, kc, vc, wc = map(to_chunks, (r, k, v, logw))   # (nc, B, H, C, N)
+    rf, kf, vf = (x.transpose(1, 0, 2, 3).astype(jnp.float32)
+                  for x in (r, k, v))                   # (S, B, H, N)
+    ew = jnp.exp(logw.transpose(1, 0, 2, 3).astype(jnp.float32))
     uf = u.astype(jnp.float32)
+    y_bonus = jnp.sum(rf * uf[None, None] * kf, axis=-1, keepdims=True) * vf
 
-    def chunk_step(S_prev, inputs):
-        rb, kb, vb, wb = inputs                         # (B, H, C, N)
-        cum = jnp.cumsum(wb, axis=2)                    # inclusive
-        a = cum - wb                                    # decay chunk-start -> t (excl.)
-        r_dec = rb * jnp.exp(a)
-        y_inter = jnp.einsum("bhtn,bhnm->bhtm", r_dec, S_prev)
+    def step(S_prev, inputs):
+        rt, kt, vt, et = inputs                         # (B, H, N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S_prev)
+        return et[..., None] * S_prev + kt[..., :, None] * vt[..., None, :], y
 
-        # --- intra-chunk, two-level ---------------------------------------
-        r4 = rb.reshape(B, H, ns, sub, N)
-        k4 = kb.reshape(B, H, ns, sub, N)
-        v4 = vb.reshape(B, H, ns, sub, N)
-        a4 = a.reshape(B, H, ns, sub, N)
-        cum4 = cum.reshape(B, H, ns, sub, N)
-        cum_end = cum4[:, :, :, -1, :]                  # (B,H,ns,N)
-
-        # off-diagonal (key sub-block j strictly before query sub-block i):
-        # att[i,j] = (r ∘ e^{a_t − cumend_j}) · (k ∘ e^{cumend_j − cum_s})
-        pair_ok = jnp.tril(jnp.ones((ns, ns), bool), k=-1)   # j < i
-        expo = a4[:, :, :, None, :, :] - cum_end[:, :, None, :, None, :]
-        expo = jnp.where(pair_ok[None, None, :, :, None, None], expo, -jnp.inf)
-        rmod = r4[:, :, :, None] * jnp.exp(expo)            # (B,H,i,j,t,N)
-        kmod = k4 * jnp.exp(cum_end[:, :, :, None, :] - cum4)   # (B,H,j,s,N)
-        att_off = jnp.einsum("bhijtn,bhjsn->bhijts", rmod, kmod)
-        y_off = jnp.einsum("bhijts,bhjsm->bhitm", att_off, v4)
-
-        # diagonal sub-blocks: small (sub,sub,N) pairwise tensors
-        Dd = jnp.exp(a4[:, :, :, :, None, :] - cum4[:, :, :, None, :, :])
-        tri = jnp.tril(jnp.ones((sub, sub), bool), k=-1)
-        Dd = jnp.where(tri[None, None, None, :, :, None], Dd, 0.0)
-        att_d = jnp.einsum("bhitn,bhitsn,bhisn->bhits", r4, Dd, k4)
-        y_diag = jnp.einsum("bhits,bhism->bhitm", att_d, v4)
-
-        y_intra = (y_off + y_diag).reshape(B, H, chunk, N)
-        y_bonus = jnp.einsum("bhtn,bhtn->bht", rb * uf[None, :, None, :], kb)[..., None] * vb
-        # state to chunk end: decay from s+1..C  (all <= 1)
-        dec_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,H,C,N)
-        S_new = jnp.exp(cum[:, :, -1, :])[..., None] * S_prev + jnp.einsum(
-            "bhsn,bhsm->bhnm", kb * dec_end, vb
-        )
-        return S_new, y_inter + y_intra + y_bonus
-
-    state, yc = lax.scan(chunk_step, state0.astype(jnp.float32), (rc, kc, vc, wc))
-    y = yc.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
-    return y, state
+    state, ys = lax.scan(step, state0.astype(jnp.float32), (rf, kf, vf, ew))
+    return (ys + y_bonus).transpose(1, 0, 2, 3), state
 
 
 def wkv_decode(r, k, v, logw, u, state):

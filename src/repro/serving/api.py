@@ -78,6 +78,10 @@ class InferenceRequest:
     speculate: bool = True            # opt-out of speculative drafting for
                                       # this request (it still rides spec
                                       # dispatches, contributing 1 token)
+    model: str = ""                   # target arch ("" = any): the fleet
+                                      # dispatcher only routes to tiers whose
+                                      # TierSpec.arch matches (multi-model
+                                      # fleets; single-engine clients ignore)
 
     def prompt_2d(self) -> np.ndarray:
         p = np.asarray(self.prompt)
@@ -259,7 +263,7 @@ class EngineClient:
         self.tracer.event("req.queued", t=now, cat="req", rid=rid,
                           prompt_len=request.prompt_len,
                           max_new=int(request.max_new),
-                          slo=request.slo_class)
+                          slo=request.slo_class, model=request.model)
         return handle
 
     def tick(self) -> PumpReport:
@@ -314,10 +318,16 @@ class EngineClient:
             self.tick()
 
 
+# class -> admission rank: interactive streams first, diffusion-style jobs
+# next (seconds-long but deadline-bearing), batch backfill last.  Unknown
+# classes rank with interactive, preserving the legacy two-class order.
+_SLO_RANK = {"batch": 2, "job": 1}
+
+
 def slo_order_key(slo_class: str, priority: int, deadline_at: float,
                   seq: int = 0) -> tuple:
     """The one ordering rule for pending work, everywhere: interactive
-    (any non-batch class) ahead of batch, higher priority first within a
-    class, then soonest deadline, then submission order."""
-    return (1 if slo_class == "batch" else 0, -int(priority),
+    ahead of jobs ahead of batch, higher priority first within a class,
+    then soonest deadline, then submission order."""
+    return (_SLO_RANK.get(slo_class, 0), -int(priority),
             deadline_at, seq)

@@ -1,0 +1,99 @@
+"""Cache backends: the protocol behind a serving slot's resumable state.
+
+The engine grew three ways to hold a request's decode state, one per
+model class:
+
+* **contiguous stripes** — the PR-1 layout: each slot owns a
+  ``max_len`` stripe of a (L, B, S, H, D) KV buffer.  Simple, wasteful,
+  still the reference path (``EngineConfig.paged_kv=False`` on a
+  transformer arch).
+* **paged pool** — PR-3's ``serving.paged_kv.BlockAllocator``: slots hold
+  block tables over a shared page pool, prompt prefixes are shared
+  cross-request, and frontiers externalize as ``KVFrontier`` page
+  snapshots.
+* **scan state** — rwkv6 / mamba2-class models: the whole decode state is
+  a CONSTANT-SIZE per-slot pytree (e.g. the (H, N, N) wkv state plus
+  token-shift rows), independent of sequence length.  There are no pages
+  to allocate, no prefix to share, and a checkpoint is one state
+  snapshot, not O(len) page traffic.
+
+``CacheBackend`` names the surface the fleet relies on (capacity
+predicate, frontier checkpoint/restore, affinity score); ``QueueSession``
+satisfies it for all three layouts, and ``DiffusionSession``
+(``serving.diffusion``) satisfies it for job engines with no token cache
+at all.  ``StateFrontier`` is the scan-state twin of
+``paged_kv.KVFrontier`` — same ``.prompt``/``.tokens`` duck type, so the
+fleet ``KVStore`` holds either without knowing which.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class CacheBackend(Protocol):
+    """What a dispatcher/fleet needs from a session's cache machinery.
+
+    ``QueueSession`` (contiguous / paged / scan-state) and
+    ``DiffusionSession`` both satisfy this structurally; the fleet layer
+    only ever calls through these members.
+    """
+
+    paged: bool                       # block-table pool backend?
+
+    def fits(self, prompt_len: int, max_new: int) -> bool:
+        """Can a request of this shape EVER be admitted here?"""
+        ...
+
+    def prefix_match_len(self, prompt) -> int:
+        """Reusable-prefix length (0 for backends with nothing to share)."""
+        ...
+
+    @property
+    def supports_frontiers(self) -> bool:
+        """Whether decoding requests can externalize resumable frontiers
+        (KV pages or scan state) for the durable-KV store."""
+        ...
+
+    def extract_frontier(self, rid: int) -> Optional[Any]:
+        """Snapshot one decoding request's resumable state, or None."""
+        ...
+
+    def extract_frontiers(self) -> List[Tuple[int, Any]]:
+        """Checkpoint every decoding request (flush / drain payload)."""
+        ...
+
+    def decoding_lens(self) -> Dict[int, int]:
+        """rid -> current frontier length, host-side (flush gating)."""
+        ...
+
+
+@dataclass
+class StateFrontier:
+    """One scan-state request's resumable decode state, externalized.
+
+    The constant-size twin of ``paged_kv.KVFrontier``: the token frontier
+    (prompt + generated so far), the carried next token, and a HOST copy
+    of the per-slot recurrent state — leaves keep the batch axis as a
+    singleton (e.g. rwkv6 state (L, 1, H, N, N)), so restore is the same
+    jitted ``_place`` dispatch admission uses.  Engine-portable across
+    sessions sharing params; resuming decode from it is token-exact with
+    the uninterrupted run (greedy), which the scan-state kill drill
+    asserts.  Duck-compatible with ``KVFrontier`` where the fleet KV
+    store cares (``.prompt``, ``.generated``, ``.tokens``).
+    """
+
+    prompt: Tuple[int, ...]
+    generated: Tuple[int, ...]    # emitted tokens folded into the state
+    carry_tok: int                # next token to decode (not yet folded in)
+    state: Any                    # pytree of np arrays, batch axis kept (=1)
+    page_size: int = 1            # scan state advances token-at-a-time
+
+    @property
+    def tokens(self) -> int:
+        """Content length the state covers (prompt + generated)."""
+        return len(self.prompt) + len(self.generated)
+
+
+__all__ = ["CacheBackend", "StateFrontier"]

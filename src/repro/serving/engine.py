@@ -83,6 +83,7 @@ import numpy as np
 from jax import lax
 
 from repro.models.model import Model
+from repro.serving.backends import StateFrontier
 from repro.serving.paged_kv import TRASH_PAGE, BlockAllocator, KVFrontier
 from repro.serving.spec import (
     Drafter,
@@ -240,6 +241,13 @@ class ServingEngine:
         self._place_pages = jax.jit(self._place_pages_fn, donate_argnums=(0,))
         self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
         self._inject_pages = jax.jit(self._inject_pages_fn, donate_argnums=(0,))
+
+    def new_session(self) -> "QueueSession":
+        """The session factory replicas call: one resumable continuous-
+        batching session over this engine's compiled functions.  Job-style
+        engines (``serving.diffusion.DiffusionEngine``) override this with
+        their own ``CacheBackend``-compatible session type."""
+        return QueueSession(self)
 
     # -- single-shot steps ----------------------------------------------------
     def prefill(self, batch: Dict[str, Any]):
@@ -734,6 +742,11 @@ class QueueSession:
         else:
             self.allocator = None
             self.cache = engine.model.empty_cache(n_slots, engine.cfg.max_len)
+        # scan-state backend: rwkv/hybrid decode state is a CONSTANT-SIZE
+        # per-slot pytree (no pages), so frontiers externalize as one state
+        # snapshot per slot (backends.StateFrontier) instead of KV pages
+        self.scan_state = (not self.paged
+                           and engine.model.cfg.family in ("rwkv", "hybrid"))
         self.lens = jnp.zeros((n_slots,), jnp.int32)
         self.tok = jnp.zeros((n_slots,), jnp.int32)
         self.key = jax.random.key(engine.cfg.seed)
@@ -836,9 +849,17 @@ class QueueSession:
         if recompute:
             self._recompute.add(rid)
         if frontier is not None:
-            ok = (self.paged
-                  and frontier.page_size == self.allocator.page_size
-                  and tuple(int(t) for t in inp[0]) == tuple(frontier.prompt))
+            if self.paged:
+                ok = (isinstance(frontier, KVFrontier)
+                      and frontier.page_size == self.allocator.page_size
+                      and tuple(int(t) for t in inp[0])
+                      == tuple(frontier.prompt))
+            elif self.scan_state:
+                ok = (isinstance(frontier, StateFrontier)
+                      and tuple(int(t) for t in inp[0])
+                      == tuple(frontier.prompt))
+            else:
+                ok = False
             if ok and len(frontier.generated) >= max_new:
                 # the frontier already covers everything this submission
                 # asked for: complete instantly off the checkpointed tokens
@@ -1085,13 +1106,24 @@ class QueueSession:
         return active + [rid for rid, _, _ in self.queue]
 
     # -- durable-KV checkpoint / restore --------------------------------------
-    def extract_frontier(self, rid: int) -> Optional[KVFrontier]:
+    @property
+    def supports_frontiers(self) -> bool:
+        """Whether decoding requests can externalize resumable frontiers:
+        paged sessions snapshot KV pages, scan-state sessions snapshot the
+        constant-size recurrent state.  Contiguous-stripe sessions don't
+        (an O(max_len) stripe copy per checkpoint is not worth paying)."""
+        return self.paged or self.scan_state
+
+    def extract_frontier(self, rid: int):
         """Snapshot one DECODING request's resumable state: prompt + tokens
         generated so far, the carried next token, and host copies of the KV
-        pages covering that frontier.  None for anything not actively
-        decoding (queued and mid-prefill requests have nothing worth
-        externalizing — their retry is a plain re-prefill, not recompute
-        of paid-for work) and on non-paged sessions."""
+        pages (paged) or the per-slot recurrent state (scan-state) covering
+        that frontier.  None for anything not actively decoding (queued and
+        mid-prefill requests have nothing worth externalizing — their retry
+        is a plain re-prefill, not recompute of paid-for work) and on
+        backends without frontiers."""
+        if self.scan_state:
+            return self._extract_frontier_state(rid)
         if not self.paged:
             return None
         s = self._slot_of.get(rid)
@@ -1116,7 +1148,56 @@ class QueueSession:
             page_size=al.page_size,
         )
 
-    def extract_frontiers(self) -> List[Tuple[int, KVFrontier]]:
+    def _extract_frontier_state(self, rid: int) -> Optional[StateFrontier]:
+        """Scan-state checkpoint: one batch-axis slice per cache leaf —
+        constant-size regardless of how far decode has progressed (the
+        whole point of the backend).  Leaves keep the batch axis as a
+        singleton so restore reuses the jitted ``_place`` admission
+        dispatch."""
+        hits = np.nonzero(self.slots.request_id == rid)[0]
+        if hits.size == 0:
+            return None
+        s = int(hits[0])
+        prompt = self._prompt_of.get(rid)
+        if prompt is None:
+            return None
+        state = jax.tree.map(
+            lambda a: np.asarray(a[:, s:s + 1]), self.cache
+        )
+        return StateFrontier(
+            prompt=prompt,
+            generated=tuple(self._out.get(rid, ())),
+            carry_tok=int(np.asarray(self.tok)[s]),
+            state=state,
+        )
+
+    def _admit_restored_state(self, s: int, rid: int, fr: StateFrontier,
+                              max_new: int) -> bool:
+        """Admit straight into decode from a checkpointed scan state: the
+        slot's state leaves take the snapshot, decode resumes at the
+        carried token — zero prefill, token-exact with the uninterrupted
+        run (greedy).  Constant state means no allocation can fail, so
+        unlike the paged twin this always succeeds."""
+        eng = self.eng
+        n = fr.tokens
+        gen = list(fr.generated)
+        self.cache = eng._place(
+            self.cache, jax.tree.map(jnp.asarray, fr.state), int(s)
+        )
+        self.lens = self.lens.at[s].set(n)
+        self._lens_host[s] = n
+        self.tok = self.tok.at[s].set(jnp.int32(fr.carry_tok))
+        self._prompt_of[rid] = tuple(fr.prompt)
+        self._out[rid] = list(gen)
+        self._admissions += 1
+        self.slots.admit(s, rid, max_new - len(gen))
+        # replay through report.tokens; the streaming client reconciles by
+        # position and forwards only the unseen suffix
+        self._restored.append((rid, gen))
+        self._pending_recovered += n
+        return True
+
+    def extract_frontiers(self) -> List[Tuple[int, Any]]:
         """Checkpoint every decoding request (the periodic flush unit and
         the preemption-drain payload)."""
         out: List[Tuple[int, KVFrontier]] = []
@@ -1238,7 +1319,9 @@ class QueueSession:
             rid, inp, max_new = self._pop_next()
             fr = self._frontiers.pop(rid, None)
             if fr is not None:
-                if not self._admit_restored(int(s), rid, fr, max_new):
+                admit = (self._admit_restored_state if self.scan_state
+                         else self._admit_restored)
+                if not admit(int(s), rid, fr, max_new):
                     # page pressure: requeue with the frontier intact so the
                     # retry still resumes instead of re-prefilling
                     self._frontiers[rid] = fr
@@ -1259,6 +1342,12 @@ class QueueSession:
                 akey = jax.random.fold_in(self.key, self._admissions)
                 self._admissions += 1
                 self.tok = self.tok.at[s].set(eng._sample(logits, akey)[0])
+                if self.scan_state:
+                    # frontier extraction needs the prompt tuple; scan
+                    # sessions track it so mid-decode checkpoints work
+                    self._prompt_of[rid] = tuple(
+                        int(t) for t in np.asarray(inp)[0]
+                    )
                 if rid in self._recompute:
                     self._pending_recomputed += int(inp.shape[1])
                 eng.telemetry.prefills += 1

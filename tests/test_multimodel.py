@@ -1,0 +1,370 @@
+"""Multi-model fleet coverage (the heterogeneous-fleet tentpole).
+
+Scan-state serving: an attention-free (rwkv6) arch behind the same
+``QueueSession`` surface is token-exact against the batch ``serve_queue``
+path, checkpoints a ``StateFrontier`` mid-decode, and survives the
+mid-decode kill drill with zero recomputed prefill and byte-identical
+streams.  Model-aware routing: a request that names a model is never
+placed — weighted pick, spill, affinity, or hedge — on a tier serving a
+different arch.  Capacity trading: leases conserve the fleet's total base
+ceiling, only flow toward the measurably hotter family, and return as
+soon as the receiver cools.  Plus the diffusion job engine's determinism
+and SLO ordering, and the serving-arch registry's fail-fast validation.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import (
+    JOB_ARCHES,
+    get_config,
+    resolve_serving_arch,
+    serving_family,
+)
+from repro.fleet.dispatcher import Dispatcher
+from repro.fleet.runtime import (
+    FailureEvent,
+    FleetConfig,
+    FleetRuntime,
+    TierSpec,
+    build_multimodel_day_fleet,
+)
+from repro.fleet.workload import Request, burst_of
+from repro.models import Model
+from repro.serving import EngineConfig, QueueSession, ServingEngine
+from repro.serving.backends import StateFrontier
+from repro.serving.diffusion import DiffusionConfig, DiffusionEngine
+
+# one scan-state engine geometry shared by every test in this module
+# (sessions are per-replica over a tier-shared engine, so engine reuse
+# across sessions/runtimes is exactly the production layout)
+PLEN = 12
+MAX_NEW = (12, 16)
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def scan():
+    """A reduced rwkv6 ServingEngine: contiguous cache off, paging off —
+    the constant-state scan backend is what admits/extracts frontiers."""
+    cfg = get_config("rwkv6-7b").reduce()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, EngineConfig(
+        max_len=MAX_LEN, decode_batch=2, temperature=0.0, decode_chunk=4,
+        mixed_step=False))
+    return cfg, eng
+
+
+# ---------------------------------------------------------------------------
+# scan-state serving: session exactness + frontier roundtrip
+# ---------------------------------------------------------------------------
+
+
+def test_scan_session_token_exact(scan):
+    """rwkv6 through the incremental QueueSession (submissions straddling
+    pump boundaries) decodes the same tokens as one serve_queue batch."""
+    cfg, eng = scan
+    sess = eng.new_session()
+    assert sess.scan_state and not sess.paged
+    assert sess.supports_frontiers
+
+    rng = np.random.default_rng(11)
+    reqs = [(rng.integers(0, cfg.vocab_size, (1, 8)), n) for n in (5, 7, 4)]
+    sess.submit(0, *reqs[0])
+    sess.pump()                                # request 0 mid-flight
+    sess.submit(1, *reqs[1])
+    sess.submit(2, *reqs[2])
+    while not sess.idle:
+        sess.pump()
+
+    ref = eng.serve_queue(reqs)
+    for rid in range(3):
+        np.testing.assert_array_equal(sess.results[rid], ref[rid])
+
+
+def test_scan_frontier_extract_and_resume(scan):
+    """A mid-decode StateFrontier carries the full recurrent state: a
+    fresh session admitted from it finishes the stream byte-identically,
+    with zero prompt recompute (page_size=1 => every token checkpoints)."""
+    cfg, eng = scan
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 10))
+    max_new = 9
+
+    sess = eng.new_session()
+    sess.submit(0, prompt, max_new)
+    sess.pump()
+    fr = sess.extract_frontier(0)
+    assert isinstance(fr, StateFrontier)
+    assert fr.page_size == 1
+    assert tuple(fr.prompt) == tuple(int(x) for x in prompt[0])
+    assert 1 <= len(fr.generated) < max_new
+    assert fr.tokens == prompt.shape[1] + len(fr.generated)
+    assert jax.tree_util.tree_leaves(fr.state)   # the carried recurrence
+
+    resumed = eng.new_session()
+    resumed.submit(0, prompt, max_new, frontier=fr)
+    while not resumed.idle:
+        resumed.pump()
+    ref = eng.serve_queue([(prompt, max_new)])
+    np.testing.assert_array_equal(resumed.results[0], ref[0])
+
+
+# ---------------------------------------------------------------------------
+# scan-tier kill drill: requeue + zero-recompute restore
+# ---------------------------------------------------------------------------
+
+
+def _scan_fleet(scan, *, kill_ts=(2.0,), seed=3):
+    vocab = get_config("rwkv6-7b").reduce().vocab_size
+    workload = burst_of(6, vocab_size=vocab, prompt_len=PLEN,
+                        max_new=MAX_NEW, seed=seed)
+    tier = TierSpec(name="scan", arch="rwkv6-7b", cost_per_hour=1.0,
+                    nominal_t_max=2.0, max_len=MAX_LEN, decode_batch=2,
+                    decode_chunk=4, queue_limit=4,
+                    base_capacity=3, initial_replicas=3,
+                    provision_delay_s=1.0, paged_kv=False, mixed_step=False,
+                    cold_start_s=1.0, cold_start_sigma=0.0,
+                    preemption_rate=0.0)
+    rt = FleetRuntime(
+        [tier], workload,
+        FleetConfig(seed=seed, kv_store=True, kv_checkpoint_interval=1,
+                    max_retries=8),
+        failures=[FailureEvent(t=kt, tier="scan") for kt in kill_ts])
+    rt._engines["scan"] = scan[1]     # reuse compiled jits across tests
+    return rt
+
+
+@pytest.mark.slow
+def test_scan_kill_drill_zero_recompute(scan):
+    """Kill a scan replica mid-decode: victims requeue, resume from their
+    checkpointed StateFrontier (zero recomputed prefill tokens), and the
+    final streams are byte-identical to the uninterrupted bare engine."""
+    rt = _scan_fleet(scan)
+    requests = list(rt.workload)
+    report = rt.run()
+
+    assert len(report.requests.records) == len(requests)
+    assert not report.requests.dropped
+    assert report.requests.total_retries() >= 1     # the kill landed
+    s = report.summary()
+    assert s["recovered_tokens"] > 0                # resumed from state
+    assert s["recomputed_prefill_tokens"] == 0      # never re-prefilled
+    assert report.kv_store["puts"] > 0 and report.kv_store["hits"] > 0
+
+    ref = scan[1].serve_queue([(r.prompt, r.max_new) for r in requests])
+    for i, r in enumerate(requests):
+        np.testing.assert_array_equal(report.outputs[r.rid], ref[i])
+
+
+# ---------------------------------------------------------------------------
+# model-aware routing (dispatcher-level, no engines)
+# ---------------------------------------------------------------------------
+
+
+class _StubReplica:
+    """The exact surface Dispatcher touches, without a jax engine."""
+
+    def __init__(self, name, tier):
+        self.name, self.tier = name, tier
+        self.accepting = True
+        self.live = True
+        self.session = None
+        self.taken = []
+
+    @property
+    def load(self):
+        return len(self.taken)
+
+    def fits(self, req):
+        return True
+
+    def prefix_match_len(self, toks):
+        return 0
+
+    def submit(self, req):
+        self.taken.append(req)
+        return True
+
+
+def _req(rid, model="", plen=4):
+    prompt = (np.arange(plen, dtype=np.int64) + rid).reshape(1, plen)
+    return Request(rid=rid, arrival_t=0.0, prompt=prompt, max_new=4,
+                   model=model)
+
+
+ARCH_OF = {"llm": "qwen3-0.6b", "scan": "rwkv6-7b"}
+
+
+def test_dispatcher_never_misroutes():
+    """Controller weights pointing 100% at the wrong tier still cannot
+    place a tagged request across a model boundary; untagged requests go
+    wherever the weights say (legacy single-model behavior)."""
+    disp = Dispatcher(["llm", "scan"], arch_of=ARCH_OF)
+    llm, scan = _StubReplica("llm/r1", "llm"), _StubReplica("scan/r1", "scan")
+    reps = {"llm": [llm], "scan": [scan]}
+    models = ["qwen3-0.6b", "rwkv6-7b", "", "rwkv6-7b", "qwen3-0.6b"]
+    disp.submit(_req(i, model=m) for i, m in enumerate(models))
+
+    placed = disp.dispatch(np.array([1.0, 0.0]), reps)   # all weight on llm
+    assert placed == len(models)
+    assert {r.rid for r in scan.taken} == {1, 3}
+    assert all(r.model != "rwkv6-7b" for r in llm.taken)
+
+
+def test_dispatcher_full_model_tier_backlogs_instead_of_spilling():
+    """A tagged request whose only compatible tier is full stays in the
+    backlog (spill never crosses a model boundary), and places as soon as
+    its tier reopens."""
+    disp = Dispatcher(["llm", "scan"], arch_of=ARCH_OF)
+    llm, scan = _StubReplica("llm/r1", "llm"), _StubReplica("scan/r1", "scan")
+    reps = {"llm": [llm], "scan": [scan]}
+    scan.accepting = False
+
+    disp.submit([_req(0, model="rwkv6-7b")])
+    assert disp.dispatch(np.array([0.0, 1.0]), reps) == 0
+    assert len(disp.backlog) == 1 and not llm.taken and not disp.dropped
+
+    scan.accepting = True
+    assert disp.dispatch(np.array([0.0, 1.0]), reps) == 1
+    assert [r.rid for r in scan.taken] == [0]
+
+
+def test_dispatcher_hedge_respects_model_boundary():
+    """Hedging duplicates onto a SECOND tier — never one serving a
+    different model (the twin would decode garbage)."""
+    disp = Dispatcher(["llm", "scan"], arch_of=ARCH_OF, hedge_fraction=1.0)
+    llm, scan = _StubReplica("llm/r1", "llm"), _StubReplica("scan/r1", "scan")
+    reps = {"llm": [llm], "scan": [scan]}
+
+    disp.submit([_req(0, model="qwen3-0.6b"), _req(1, model="qwen3-0.6b")])
+    assert disp.dispatch(np.array([1.0, 1.0]), reps) == 2
+    assert not scan.taken                        # no cross-model twins
+    assert all(hedge is None for _, _, hedge in disp.inflight.values())
+
+
+# ---------------------------------------------------------------------------
+# cross-model capacity trading (pool accounting, no engines run)
+# ---------------------------------------------------------------------------
+
+
+def _heat(rt, hot, cold, rounds=8):
+    for _ in range(rounds):
+        rt.telemetry.record_model_demand(hot, 5.0)
+        for m in cold:
+            rt.telemetry.record_model_demand(m, 0.0)
+
+
+def test_capacity_trade_leases_conserve_and_return():
+    """A borrow moves base ceiling from a colder family and conserves the
+    fleet total; when the receiver cools the lease returns in full, so
+    nominal ceilings are an invariant, not a ratchet."""
+    rt = build_multimodel_day_fleet()
+    base0 = {n: p.base_capacity for n, p in rt.pools.items()}
+    total0 = sum(base0.values())
+    _heat(rt, "sd21", ("qwen3-0.6b", "rwkv6-7b"))
+
+    rt._trade_capacity(0.0, {"llm": 0, "scan": 0,
+                             "jobs": base0["jobs"] + 3})
+    assert rt.pools["jobs"].base_capacity == base0["jobs"] + 3
+    assert sum(p.base_capacity for p in rt.pools.values()) == total0
+    assert sum(rt._leases.values()) == 3
+    trades = [e for e in rt.tracer.to_list()
+              if e["name"] == "ctl.capacity_trade"]
+    assert trades and all(e["action"] == "borrow" for e in trades)
+    assert all(e["model"] != e["donor_model"] for e in trades)
+
+    # demand collapses -> every lease returns, ceilings restore exactly
+    rt._trade_capacity(1.0, {"llm": 0, "scan": 0, "jobs": 0})
+    assert {n: p.base_capacity for n, p in rt.pools.items()} == base0
+    assert not rt._leases
+    assert rt.telemetry.tier_borrowed["jobs"] == 0
+    assert sum(rt.telemetry.tier_lent.values()) == 0
+
+
+def test_capacity_trade_requires_colder_donor():
+    """No donor is measurably colder than the receiver => no trade, no
+    matter how large the deficit."""
+    rt = build_multimodel_day_fleet()
+    base0 = {n: p.base_capacity for n, p in rt.pools.items()}
+    for _ in range(8):
+        for m in ("sd21", "qwen3-0.6b", "rwkv6-7b"):
+            rt.telemetry.record_model_demand(m, 2.0)
+
+    rt._trade_capacity(0.0, {"llm": 0, "scan": 0, "jobs": 9})
+    assert {n: p.base_capacity for n, p in rt.pools.items()} == base0
+    assert not rt._leases
+
+
+# ---------------------------------------------------------------------------
+# diffusion job engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def djob():
+    return DiffusionEngine(DiffusionConfig(
+        batch=2, denoise_steps=4, steps_per_pump=2, latent_dim=8,
+        max_len=32, seed=0))
+
+
+def _run_jobs(eng, jobs):
+    sess = eng.new_session()
+    for rid, prompt, max_new, slo in jobs:
+        sess.submit(rid, prompt, max_new, slo_class=slo)
+    while not sess.idle:
+        sess.pump()
+    return sess.results
+
+
+def test_diffusion_jobs_deterministic(djob):
+    """Same prompt => same digest across sessions (a killed job restarts
+    from its seed, so retry streams are reproducible by construction)."""
+    assert djob.is_job_engine
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, 1000, (1, 6)) for _ in range(3)]
+    jobs = [(i, p, 5, "job") for i, p in enumerate(prompts)]
+    a, b = _run_jobs(djob, jobs), _run_jobs(djob, jobs)
+    for rid, _, max_new, _ in jobs:
+        assert a[rid].shape == (max_new,)
+        np.testing.assert_array_equal(a[rid], b[rid])
+    # distinct prompts denoise to distinct digests
+    assert not np.array_equal(a[0], a[1])
+
+
+def test_diffusion_session_admits_job_class_first(djob):
+    """'job' outranks 'batch' at admission: with both queued beyond slot
+    capacity, the first pump's admitted set is the job-class work."""
+    sess = djob.new_session()
+    assert not sess.supports_frontiers and not sess.paged
+    prompt = np.zeros((1, 4), np.int64)
+    sess.submit(0, prompt, 4, slo_class="batch")
+    sess.submit(1, prompt, 4, slo_class="batch")
+    sess.submit(2, prompt, 4, slo_class="job")
+    rep = sess.pump()                  # 2 slots, 3 queued
+    assert 2 in rep.admitted
+    while not sess.idle:
+        sess.pump()
+    assert set(sess.results) == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# registry fail-fast
+# ---------------------------------------------------------------------------
+
+
+def test_registry_resolves_every_serving_arch():
+    assert resolve_serving_arch("qwen3-0.6b").vocab_size > 0
+    assert resolve_serving_arch("rwkv6-7b").family == "rwkv"
+    assert resolve_serving_arch("sd21")       # DU descriptor, not a config
+    assert serving_family("sd21") == "job"
+    assert "sd21" in JOB_ARCHES
+
+
+def test_registry_unknown_arch_fails_fast():
+    with pytest.raises(KeyError, match="unknown serving arch"):
+        resolve_serving_arch("gpt-17t")
+    # the same validation fires at fleet construction, not lazy engine build
+    with pytest.raises(KeyError, match="unknown serving arch"):
+        FleetRuntime([TierSpec(name="x", arch="gpt-17t")], [])

@@ -45,6 +45,10 @@ class FleetTop:
         self.completed = 0
         self.requeued = 0
         self.dropped = 0
+        self.capacity_trades = 0
+        # per-model request attribution (the arch a request targeted;
+        # "" renders as "any"): model -> {dispatched, completed, ...}
+        self.models: Dict[str, Dict[str, int]] = {}
 
     def _rep(self, name: str, tier: str = "?") -> Dict[str, Any]:
         if name not in self.replicas:
@@ -58,6 +62,13 @@ class FleetTop:
             rep["tier"] = tier
         return rep
 
+    def _model(self, ev: Dict[str, Any]) -> Dict[str, int]:
+        key = str(ev.get("model", "") or "any")
+        if key not in self.models:
+            self.models[key] = {"dispatched": 0, "completed": 0,
+                                "requeued": 0, "failed": 0}
+        return self.models[key]
+
     def feed(self, ev: Dict[str, Any]) -> None:
         name = ev.get("name", "")
         self.t = max(self.t, float(ev.get("t", 0.0)))
@@ -67,16 +78,20 @@ class FleetTop:
             self._rep(replica, tier)["state"] = name.split(".", 1)[1]
         elif name == "req.dispatched" or name == "req.hedged":
             self._rep(replica, tier)["dispatched"] += 1
+            self._model(ev)["dispatched"] += 1
         elif name == "req.completed":
             self.completed += 1
+            self._model(ev)["completed"] += 1
             if replica:
                 self._rep(replica, tier)["completed"] += 1
         elif name == "req.requeued":
             self.requeued += 1
+            self._model(ev)["requeued"] += 1
             if replica:
                 self._rep(replica, tier)["requeued"] += 1
         elif name == "req.failed":
             self.dropped += 1
+            self._model(ev)["failed"] += 1
         elif name == "engine.pump" and replica:
             rep = self._rep(replica, tier)
             rep["occupancy"] = float(ev.get("occupancy", 0.0))
@@ -91,6 +106,8 @@ class FleetTop:
             self.failures += 1
         elif name in ("ctl.preempt_notice",):
             self.preemptions += 1
+        elif name == "ctl.capacity_trade":
+            self.capacity_trades += 1
         elif name == "ctl.kv_flush":
             self.kv_flush_tokens += int(ev.get("tokens", 0))
         elif name == "ctl.kv_restore":
@@ -115,11 +132,22 @@ class FleetTop:
         lines.append("  ".join("-" * w for w in widths))
         for row in rows:
             lines.append("  ".join(v.ljust(w) for v, w in zip(row, widths)))
+        if len(self.models) > 1 or (self.models and "any" not in self.models):
+            # per-model attribution line (only when the trace carries model
+            # tags — single-model legacy traces keep the old footer exactly)
+            parts = []
+            for m in sorted(self.models):
+                c = self.models[m]
+                parts.append(f"{m}: {c['dispatched']}d/{c['completed']}c"
+                             + (f"/{c['requeued']}r" if c["requeued"] else "")
+                             + (f"/{c['failed']}x" if c["failed"] else ""))
+            lines.append("models: " + "  ".join(parts))
         mode = {0: "cost", 1: "capacity"}.get(self.mode, "?")
         lines.append(
             f"control: mode={mode} switches={self.mode_switches} "
             f"scale={self.scale_events} failures={self.failures} "
             f"preemptions={self.preemptions} "
+            f"trades={self.capacity_trades} "
             f"kv_flush={self.kv_flush_tokens}tok "
             f"kv_restore={self.kv_restore_tokens}tok")
         return "\n".join(lines)

@@ -57,9 +57,10 @@ _CTL_TRACKS = {
     "ctl.kv_flush": 4,
     "ctl.kv_restore": 4,
     "ctl.speculation": 5,
+    "ctl.capacity_trade": 6,
 }
 _CTL_TRACK_NAMES = {1: "mode", 2: "autoscale", 3: "failures", 4: "kv",
-                    5: "speculation"}
+                    5: "speculation", 6: "capacity trading"}
 FLEET_PID = 0
 
 
@@ -127,12 +128,18 @@ def convert(events: List[Dict[str, Any]]) -> Dict[str, Any]:
     # request serve slices, nested prefill/decode per replica visit
     chains = request_chains(events)
     for rid, chain in sorted(chains.items()):
+        # per-model attribution: req.* events carry the arch the request
+        # targeted ("" = model-agnostic) — surface it on the serve slice
+        model = next((e["model"] for e in chain if e.get("model")), "")
         for rep, t0, first_t, t1 in _serve_slices(chain):
             pid = pid_of(rep)
             base = {"pid": pid, "tid": rid, "cat": "req"}
+            args = {"replica": rep}
+            if model:
+                args["model"] = model
             out.append({**base, "ph": "X", "name": f"serve r{rid}",
                         "ts": _us(t0), "dur": max(_us(t1) - _us(t0), 1.0),
-                        "args": {"replica": rep}})
+                        "args": args})
             split = first_t if first_t is not None and t0 <= first_t <= t1 else None
             if split is not None:
                 if split > t0:
